@@ -1,0 +1,104 @@
+"""Paper-figure reproductions (Figs. 5-10) on the calibrated simulator.
+
+Each function mirrors one experiment family from §4 and returns rows of
+(name, value, paper_reference) so run.py can emit the standard CSV. The
+simulator's calibration is validated independently in tests/test_simulator.py.
+"""
+from __future__ import annotations
+
+from repro.core.simulator import ALCF, NERSC, OLCF, SITES, TransferSpec, simulate_transfer
+
+GB = 1e9
+MB = 1024 * 1024
+
+
+def _run(src, dst, files, chunk, integrity, stripes=16):
+    spec = TransferSpec(tuple(files), chunk_bytes=chunk, integrity=integrity,
+                        stripe_count=stripes)
+    return simulate_transfer(src, dst, spec)
+
+
+def fig5_lustre_striping():
+    """1x2.5TB A<->N, stripe count sweep, with/without chunking (no integrity)."""
+    rows = []
+    for sname, dname in (("ALCF", "NERSC"), ("NERSC", "ALCF")):
+        src, dst = SITES[sname], SITES[dname]
+        for stripes in (1, 4, 16, 64):
+            for chunk in (None, 200 * MB):
+                r = _run(src, dst, [2500 * GB], chunk, False, stripes)
+                tag = "chunk" if chunk else "nochunk"
+                rows.append((f"fig5/{sname[0]}2{dname[0]}/stripe{stripes}/{tag}",
+                             round(r.gbps, 2), "Gb/s"))
+    return rows
+
+
+def fig6_chunk_size():
+    """500 GB in 1/5/20 files, chunk size sweep (integrity on)."""
+    rows = []
+    for files, per in ((1, 500), (5, 100), (20, 25)):
+        for s in (50, 100, 200, 500, 1000, 5000):
+            r = _run(ALCF, NERSC, [per * GB] * files, s * MB, True)
+            rows.append((f"fig6/{files}x{per}GB/chunk{s}MB", round(r.gbps, 2), "Gb/s"))
+    return rows
+
+
+def fig7_integrity_throughput():
+    """1/5/20-file transfers, +-integrity, +-chunking, three site pairs."""
+    rows = []
+    pairs = (("ALCF", "NERSC"), ("NERSC", "ALCF"), ("OLCF", "NERSC"))
+    for sname, dname in pairs:
+        src, dst = SITES[sname], SITES[dname]
+        for files, per in ((1, 500), (5, 100), (20, 25)):
+            for chunk in (None, 200 * MB):
+                for integ in (False, True):
+                    r = _run(src, dst, [per * GB] * files, chunk, integ)
+                    tag = f"{'chunk' if chunk else 'nochunk'}/{'int' if integ else 'noint'}"
+                    rows.append((f"fig7/{sname[0]}2{dname[0]}/{files}f/{tag}",
+                                 round(r.gbps, 2), "Gb/s"))
+    return rows
+
+
+def fig8_checksum_times():
+    """Visible transfer vs checksum seconds (A2N/N2A), as in the stacked bars."""
+    rows = []
+    for sname, dname in (("ALCF", "NERSC"), ("NERSC", "ALCF")):
+        src, dst = SITES[sname], SITES[dname]
+        for files, per in ((1, 500), (5, 100), (20, 25)):
+            for chunk in (None, 200 * MB):
+                base = _run(src, dst, [per * GB] * files, chunk, False)
+                with_ck = _run(src, dst, [per * GB] * files, chunk, True)
+                tag = "chunk" if chunk else "nochunk"
+                rows.append((f"fig8/{sname[0]}2{dname[0]}/{files}f/{tag}/transfer_s",
+                             round(base.seconds, 1), "s"))
+                rows.append((f"fig8/{sname[0]}2{dname[0]}/{files}f/{tag}/checksum_s",
+                             round(with_ck.seconds - base.seconds, 1), "s"))
+    return rows
+
+
+def fig9_file_count():
+    """500 GB as 1..500 files, +-chunking (integrity on)."""
+    rows = []
+    for sname, dname in (("ALCF", "NERSC"), ("NERSC", "ALCF"), ("OLCF", "ALCF")):
+        src, dst = SITES[sname], SITES[dname]
+        for files, per in ((1, 500), (5, 100), (20, 25), (100, 5), (500, 1)):
+            for chunk in (None, 200 * MB):
+                r = _run(src, dst, [per * GB] * files, chunk, True)
+                tag = "chunk" if chunk else "nochunk"
+                rows.append((f"fig9/{sname[0]}2{dname[0]}/{files}f/{tag}",
+                             round(r.gbps, 2), "Gb/s"))
+    return rows
+
+
+def fig10_chunking_speedup():
+    """Headline: chunking speedup by file count across site pairs."""
+    rows = []
+    pairs = (("ALCF", "NERSC"), ("NERSC", "ALCF"), ("ALCF", "OLCF"),
+             ("OLCF", "NERSC"))
+    for sname, dname in pairs:
+        src, dst = SITES[sname], SITES[dname]
+        for files, per in ((1, 500), (5, 100), (20, 25)):
+            base = _run(src, dst, [per * GB] * files, None, True)
+            fast = _run(src, dst, [per * GB] * files, 200 * MB, True)
+            rows.append((f"fig10/{sname[0]}2{dname[0]}/{files}f/speedup",
+                         round(fast.gbps / base.gbps, 2), "x"))
+    return rows

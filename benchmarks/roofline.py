@@ -1,0 +1,137 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, three time lower bounds on TPU v5e:
+
+    compute    = HLO_FLOPs_per_device / 197e12        (bf16 MXU peak)
+    memory     = HLO_bytes_per_device / 819e9         (HBM bandwidth)
+    collective = interconnect_bytes_per_device / 50e9 (per-link ICI)
+
+FLOPs/bytes come from the loop-aware reduced-layer extrapolation (dry-run
+"extrapolated" block — raw cost_analysis counts while bodies once);
+collective bytes from ring-model accounting over the partitioned HLO.
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) measures how much of the
+compiled compute is "useful" (catches remat/dispatch/capacity waste).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (~)
+
+CKEYS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def model_flops(rec: dict) -> float:
+    """6*N(active)*D for train; 2*N*D for prefill; 2*N*B new tokens for decode."""
+    n = rec["active_param_count"]
+    shape = rec["shape"]
+    seq = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 1,
+           "long_500k": 1}[shape]
+    batch = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+             "long_500k": 1}[shape]
+    tokens = batch * seq
+    mult = 6 if shape == "train_4k" else 2
+    return mult * n * tokens
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if "flops_per_device" not in rec:
+        return None
+    ex = rec.get("extrapolated") or rec
+    n_dev = rec["devices"]
+    coll = sum(max(0.0, ex.get(k, 0.0)) for k in CKEYS)
+    compute_s = max(0.0, ex["flops_per_device"]) / PEAK_FLOPS
+    # extrapolation can go slightly negative for tiny decode bodies: floor at
+    # the raw (loop-counted-once) measurement, which is a lower bound.
+    memory_s = max(ex.get("bytes_accessed", 0.0),
+                   rec.get("bytes_accessed", 0.0)) / HBM_BW
+    collective_s = coll / LINK_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s), ("collective", collective_s)),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(rec)
+    hlo_total = max(1.0, ex["flops_per_device"]) * n_dev
+    bound = max(compute_s, memory_s, collective_s)
+    decode = rec["shape"] in ("decode_32k", "long_500k")
+    if decode:
+        # decode is memory-bound by construction: roofline fraction = the
+        # unavoidable per-step HBM traffic (params + caches, = argument bytes
+        # per device) vs the modeled memory/collective bound.
+        useful_s = rec["argument_bytes"] / HBM_BW
+    else:
+        # train/prefill: useful model flops vs the machine-time lower bound
+        useful_s = mf / n_dev / PEAK_FLOPS
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "roofline_fraction": min(1.0, useful_s / bound) if bound else 0.0,
+        "peak_gb": rec["peak_bytes"] / 1e9,
+        "fits_16gb": rec["peak_bytes"] <= 16e9,
+        "collectives": {k: ex.get(k, 0.0) for k in CKEYS},
+    }
+
+
+def load(path: str = None) -> dict:
+    path = path or os.path.join(os.path.dirname(__file__), "..", "results", "dryrun.json")
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def table(results: dict, mesh: str = "single", sync: str = "auto") -> list[dict]:
+    rows = []
+    for key, rec in sorted(results.items()):
+        if rec.get("mesh") != mesh or rec.get("sync_mode", "auto") != sync:
+            continue
+        if "skipped" in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "skipped": rec["skipped"]})
+            continue
+        a = analyze_cell(rec)
+        if a:
+            rows.append(a)
+    return rows
+
+
+def render(rows: list[dict]) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | 6ND/HLO | roofline frac | peak GB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skipped" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.1f}m | "
+            f"{r['memory_s']*1e3:.1f}m | {r['collective_s']*1e3:.1f}m | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {r['peak_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    results = load()
+    for mesh in ("single", "multi"):
+        rows = table(results, mesh)
+        print(f"\n=== {mesh}-pod roofline ===")
+        print(render(rows))
+    # hillclimb candidate ranking
+    rows = [r for r in table(results, "single") if "skipped" not in r]
+    worst = sorted(rows, key=lambda r: r["roofline_fraction"])[:5]
+    cbound = sorted(rows, key=lambda r: -r["collective_s"] /
+                    max(1e-9, max(r["compute_s"], r["memory_s"])))[:5]
+    print("\nworst roofline fraction:", [(r["arch"], r["shape"],
+          round(r["roofline_fraction"], 3)) for r in worst])
+    print("most collective-bound:", [(r["arch"], r["shape"],
+          round(r["collective_s"] / max(1e-9, max(r["compute_s"], r["memory_s"])), 1))
+          for r in cbound])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness: one section per paper figure + real overlap + roofline.
+
+Prints ``name,value,unit`` CSV. Sections:
+  fig5..fig10  — calibrated-simulator reproductions of the paper's §4 figures
+  overlap/*    — real wall-clock chunked-transfer/checksum measurements (CPU)
+  kernel/*     — digest kernel + host fingerprint rates
+  roofline/*   — summary terms from the dry-run artifact (if present)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import figures, overlap
+
+    rows = []
+    rows += figures.fig5_lustre_striping()
+    rows += figures.fig6_chunk_size()
+    rows += figures.fig7_integrity_throughput()
+    rows += figures.fig8_checksum_times()
+    if not quick:
+        rows += figures.fig9_file_count()
+    rows += figures.fig10_chunking_speedup()
+    size = 64 if quick else 192
+    rows += overlap.movers_scaling(size)
+    rows += overlap.checksum_visibility(size)
+    rows += overlap.chunk_size_sweep(64 if quick else 128)
+    rows += overlap.kernel_rates()
+
+    try:
+        from benchmarks import roofline
+        results = roofline.load()
+        for r in roofline.table(results, "single"):
+            if "skipped" in r:
+                continue
+            cell = f"{r['arch']}/{r['shape']}"
+            rows.append((f"roofline/{cell}/dominant", r["dominant"], "term"))
+            rows.append((f"roofline/{cell}/fraction", round(r["roofline_fraction"], 4), "frac"))
+    except FileNotFoundError:
+        pass
+
+    print("name,value,unit")
+    for name, val, unit in rows:
+        print(f"{name},{val},{unit}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: client-driven chunking in 40 lines.
+
+Moves a 'large file' (an in-memory payload) with 8 data movers, per-chunk
+integrity fingerprints computed in the same pass, a journal for partial
+restart, and an end-to-end digest verification — the paper's §3 pipeline.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    BufferDest, BufferSource, ChunkedTransfer, fingerprint_bytes, plan_chunks,
+)
+
+MiB = 1024 * 1024
+
+# 1. the "file": 256 MiB of bytes
+rng = np.random.default_rng(0)
+payload = rng.integers(0, 256, 256 * MiB, dtype=np.uint8).tobytes()
+expected = fingerprint_bytes(payload)
+print(f"payload: {len(payload)/MiB:.0f} MiB, digest {expected.hexdigest()[:16]}…")
+
+# 2. the client-driven plan (the Globus service's role): 8 movers, pipelined
+plan = plan_chunks(len(payload), movers=8, pipeline_depth=4,
+                   min_chunk=1 * MiB, max_chunk=32 * MiB)
+print(f"plan: {plan.n_chunks} chunks x ~{plan.chunk_bytes/MiB:.0f} MiB "
+      f"over {plan.movers} movers")
+
+# 3. run the transfer: movers pull chunks (work stealing), fingerprint
+#    per chunk, verify on write-back
+dst = BufferDest(len(payload))
+report = ChunkedTransfer(BufferSource(payload), dst, plan, integrity=True).run()
+
+# 4. per-chunk digests merge into the file digest (ERET/ESTO checksums, §3.2)
+assert report.file_digest == expected
+assert bytes(dst.buf) == payload
+print(f"moved {report.total_bytes/MiB:.0f} MiB in {report.seconds:.2f}s "
+      f"({report.gbps:.2f} Gb/s) — end-to-end digest verified")

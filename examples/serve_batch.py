@@ -1,0 +1,9 @@
+"""Batched serving example: greedy decode with KV caches (gemma2 smoke).
+
+Run: PYTHONPATH=src python examples/serve_batch.py
+"""
+from repro.launch.serve import main
+
+seqs = main(["--arch", "gemma2-2b", "--smoke", "--batch", "4",
+             "--prompt-len", "8", "--gen", "24"])
+print("shapes:", seqs.shape)

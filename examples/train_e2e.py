@@ -1,0 +1,31 @@
+"""End-to-end training driver: ~100M-param model, checkpointed, restartable.
+
+Default invocation trains a reduced ~2M model for 60 steps (a couple of
+minutes on CPU) so the example is actually runnable here; pass --full for a
+~100M-parameter gemma-style model and a few hundred steps — the same code
+path the dry-run lowers at 256/512 devices.
+
+Run: PYTHONPATH=src python examples/train_e2e.py [--full]
+"""
+import sys
+import tempfile
+
+from repro.launch.train import main
+
+full = "--full" in sys.argv
+with tempfile.TemporaryDirectory() as ckpt:
+    args = [
+        "--arch", "gemma-2b", "--mesh", "1x1",
+        "--ckpt-dir", ckpt, "--lr", "3e-3",
+    ]
+    if full:
+        # ~100M params: use the real gemma-2b config shrunk to 6 layers/512 d
+        args += ["--steps", "300", "--seq-len", "256", "--global-batch", "8",
+                 "--ckpt-every", "50", "--log-every", "10"]
+    else:
+        args += ["--smoke", "--steps", "60", "--seq-len", "64",
+                 "--global-batch", "8", "--ckpt-every", "20", "--log-every", "10"]
+    out = main(args)
+    print(f"\nloss {out['losses'][0]:.3f} -> {out['final_loss']:.3f} "
+          f"over {len(out['losses'])} steps")
+    assert out["final_loss"] < out["losses"][0]

@@ -1,0 +1,13 @@
+"""Chunked, integrity-checked, restartable checkpointing (paper §3 on disk)."""
+from repro.ckpt.checkpoint import (
+    CheckpointManager,
+    CorruptionError,
+    SaveReport,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager", "CorruptionError", "SaveReport",
+    "restore_checkpoint", "save_checkpoint",
+]

@@ -1,0 +1,24 @@
+"""grok-1-314b [moe]: 64L d6144 48H (GQA kv=8) expert d_ff 32768,
+vocab 131072, 8 experts top-2, attention logit softcap 30.
+[hf:xai-org/grok-1; unverified]
+
+On the 16-wide model axis the 8 experts are placed with SPLIT=2 (each expert's
+FFN split across 2 columns) — see models/moe.py. Optimizer state is bf16 to
+fit 16 GB/chip (DESIGN.md §5).
+"""
+import jax.numpy as jnp
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe", n_layers=64, d_model=6144, n_heads=48,
+    n_kv_heads=8, d_ff=32768, vocab=131072, head_dim=128, act="gelu",
+    n_experts=8, top_k=2, attn_softcap=30.0, final_softcap=30.0,
+    tie_embeddings=True, embed_scale=True,
+)
+
+SMOKE = ModelConfig(
+    name="grok-1-smoke", family="moe", n_layers=2, d_model=32, n_heads=4,
+    n_kv_heads=2, d_ff=64, vocab=128, head_dim=8, act="gelu",
+    n_experts=2, top_k=2, attn_softcap=30.0, final_softcap=30.0,
+    tie_embeddings=True, embed_scale=True, dtype=jnp.float32, remat="none",
+)

@@ -1,0 +1,42 @@
+"""Core of the paper's contribution: client-driven chunking of large transfers.
+
+Submodules:
+  chunker    — chunk planning heuristics (paper §3.1) + automated sizing (§6)
+  integrity  — mergeable fingerprints replacing MD5 (paper §3.2, TPU-adapted)
+  transfer   — host-side chunked transfer engine with chunk-level FT
+  journal    — chunk-completion journal (partial restart)
+  simulator  — calibrated model of the paper's ALCF/NERSC/OLCF testbed
+  scheduler  — load-aware mover allocation across transfers
+"""
+from repro.core.chunker import Chunk, ChunkPlan, plan_auto, plan_chunks, plan_for_array
+from repro.core.integrity import (
+    BASES,
+    Digest,
+    EMPTY_DIGEST,
+    P,
+    combine_at_offsets,
+    fingerprint_bytes,
+    fingerprint_ndarray,
+    merge_all,
+    verify,
+)
+from repro.core.journal import ChunkJournal, JournalRecord
+from repro.core.transfer import (
+    BufferDest,
+    BufferSource,
+    ChunkedTransfer,
+    FileDest,
+    FileSource,
+    IntegrityError,
+    TransferReport,
+    transfer_verified,
+)
+
+__all__ = [
+    "Chunk", "ChunkPlan", "plan_auto", "plan_chunks", "plan_for_array",
+    "BASES", "Digest", "EMPTY_DIGEST", "P", "combine_at_offsets",
+    "fingerprint_bytes", "fingerprint_ndarray", "merge_all", "verify",
+    "ChunkJournal", "JournalRecord",
+    "BufferDest", "BufferSource", "ChunkedTransfer", "FileDest", "FileSource",
+    "IntegrityError", "TransferReport", "transfer_verified",
+]

@@ -1,0 +1,184 @@
+"""Client-driven chunk planning (paper §3.1).
+
+The Globus service — the *client* in client-driven chunking — knows the
+configuration of both endpoints (number of data movers, pipeline depth,
+link characteristics) and can therefore plan chunking globally, which the
+older server-side striping (SPAS/SPOR) could not. In this framework the
+"client" is the launcher/compiler: it holds the whole mesh/topology and emits
+a static chunk plan.
+
+The paper's empirical guidance encoded here:
+
+  * enough chunks to saturate every parallel channel: the paper explains the
+    large-chunk falloff by `n_chunks < concurrency x parallelism (64 x 4 = 256)`
+    (§4.2) — so we target n_chunks >= movers * pipeline_depth;
+  * chunks must not be too small, or per-chunk (control channel / pipelining)
+    overheads dominate — the 50 MB side of the Fig. 6 curve;
+  * the sweet spot measured was 200-500 MB for 64 movers over a 100 Gb/s WAN
+    (§4.3): defaults below reproduce that via the simulator;
+  * chunk boundaries are aligned so partial checksums and partial restarts
+    compose (alignment also keeps device chunk slices on tile boundaries).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+MiB = 1024 * 1024
+GiB = 1024 * MiB
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    """One disjoint byte range of a transfer, assigned to a mover."""
+
+    index: int
+    offset: int
+    length: int
+    mover: int
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.length
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkPlan:
+    total_bytes: int
+    chunk_bytes: int           # nominal size (last chunk may be short)
+    movers: int
+    pipeline_depth: int
+    chunks: tuple[Chunk, ...]
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunks)
+
+    def for_mover(self, mover: int) -> tuple[Chunk, ...]:
+        return tuple(c for c in self.chunks if c.mover == mover)
+
+    def validate(self) -> None:
+        """Invariants: disjoint, in-order, exact coverage (property-tested)."""
+        pos = 0
+        for i, c in enumerate(self.chunks):
+            if c.index != i:
+                raise AssertionError(f"chunk {i} has index {c.index}")
+            if c.offset != pos or c.length <= 0:
+                raise AssertionError(f"coverage broken at chunk {i}: offset={c.offset} pos={pos}")
+            if not (0 <= c.mover < self.movers):
+                raise AssertionError(f"chunk {i} assigned to invalid mover {c.mover}")
+            pos = c.end
+        if pos != self.total_bytes:
+            raise AssertionError(f"chunks cover {pos} != total {self.total_bytes}")
+
+
+def plan_chunks(
+    total_bytes: int,
+    movers: int,
+    *,
+    chunk_bytes: int | None = None,
+    pipeline_depth: int = 4,
+    min_chunk: int = 16 * MiB,
+    max_chunk: int = 512 * MiB,
+    alignment: int = 4,
+    max_chunks: int = 1 << 20,
+) -> ChunkPlan:
+    """Plan chunks for one transfer using the paper's heuristic.
+
+    With ``chunk_bytes=None`` the size is derived: split so every mover gets
+    ~``pipeline_depth`` chunks (keeps pipelining busy, §3.1/Fig. 3), clamped to
+    [min_chunk, max_chunk] (Fig. 6 sweet spot). A transfer smaller than
+    ``min_chunk * 2`` is not chunked at all — mirroring the paper's finding
+    that chunking only pays for large files (§4.5).
+    """
+    if total_bytes < 0:
+        raise ValueError("total_bytes must be >= 0")
+    if movers < 1:
+        raise ValueError("movers must be >= 1")
+    if alignment < 1:
+        raise ValueError("alignment must be >= 1")
+    if total_bytes == 0:
+        return ChunkPlan(0, 0, movers, pipeline_depth, ())
+
+    if chunk_bytes is None:
+        target = total_bytes / (movers * pipeline_depth)
+        chunk_bytes = int(min(max(target, min_chunk), max_chunk))
+        if total_bytes < 2 * min_chunk:
+            chunk_bytes = total_bytes  # too small to chunk
+    chunk_bytes = max(alignment, _round_up(min(chunk_bytes, total_bytes), alignment))
+    # chunk-count ceiling: control-plane state (journal, queue) stays bounded
+    # regardless of requested size — the Globus-service-side scalability guard.
+    if math.ceil(total_bytes / chunk_bytes) > max_chunks:
+        chunk_bytes = _round_up(math.ceil(total_bytes / max_chunks), alignment)
+
+    n = math.ceil(total_bytes / chunk_bytes)
+    chunks = []
+    pos = 0
+    for i in range(n):
+        ln = min(chunk_bytes, total_bytes - pos)
+        # Round-robin assignment; the transfer engine additionally work-steals,
+        # so static assignment only seeds locality (paper movers pull chunks).
+        chunks.append(Chunk(index=i, offset=pos, length=ln, mover=i % movers))
+        pos += ln
+    plan = ChunkPlan(total_bytes, chunk_bytes, movers, pipeline_depth, tuple(chunks))
+    plan.validate()
+    return plan
+
+
+def _round_up(x: int, align: int) -> int:
+    return ((x + align - 1) // align) * align
+
+
+def plan_auto(
+    total_bytes: int,
+    movers: int,
+    cost_model: Callable[[int], float],
+    *,
+    candidates: Sequence[int] = (
+        16 * MiB, 50 * MiB, 100 * MiB, 200 * MiB, 500 * MiB, 1000 * MiB,
+        2000 * MiB, 5000 * MiB,
+    ),
+    pipeline_depth: int = 4,
+    alignment: int = 4,
+) -> ChunkPlan:
+    """Automated chunk-size selection (the paper's §6 'further optimization').
+
+    ``cost_model(chunk_bytes) -> predicted_seconds`` is typically
+    ``simulator.predict_transfer_time`` — the same calibrated model used to
+    reproduce the paper's figures — evaluated per candidate size.
+    """
+    if total_bytes <= 0:
+        return plan_chunks(total_bytes, movers, pipeline_depth=pipeline_depth)
+    best, best_t = None, float("inf")
+    for s in candidates:
+        if s > total_bytes:
+            continue
+        t = cost_model(s)
+        if t < best_t:
+            best, best_t = s, t
+    if best is None:
+        best = total_bytes
+    return plan_chunks(
+        total_bytes, movers, chunk_bytes=best,
+        pipeline_depth=pipeline_depth, alignment=alignment,
+        min_chunk=1, max_chunk=total_bytes,
+    )
+
+
+def plan_for_array(
+    shape: Sequence[int],
+    dtype_bytes: int,
+    movers: int,
+    *,
+    pipeline_depth: int = 4,
+    min_chunk: int = 4 * MiB,
+    max_chunk: int = 256 * MiB,
+) -> ChunkPlan:
+    """Chunk a tensor's byte image; boundaries stay element-aligned so device
+    slices, host writes, and per-chunk digests all cut at the same offsets."""
+    total = int(math.prod(shape)) * dtype_bytes
+    return plan_chunks(
+        total, movers, pipeline_depth=pipeline_depth,
+        min_chunk=min_chunk, max_chunk=max_chunk, alignment=dtype_bytes,
+    )

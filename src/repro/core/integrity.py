@@ -1,0 +1,209 @@
+"""Mergeable integrity fingerprints — the TPU-native replacement for MD5.
+
+The paper (§3.2) overlaps per-chunk MD5 checksums with data movement. MD5 is a
+strictly sequential 64-byte block chain: the worst possible fit for a TPU's
+8x128-lane vector units. What the Globus protocol actually *needs* from the
+checksum is
+
+  (1) corruption detection for random bit/byte flips, and
+  (2) per-chunk digests that *merge* into a whole-file verdict
+      (the ERET/ESTO partial-transfer checksums of §3.2).
+
+We therefore use a degree-weighted polynomial fingerprint over the prime field
+GF(p), p = 46337 (the largest prime with (p-1)^2 < 2^31, so every product of
+two residues fits in signed int32 — native TPU arithmetic). Four independent
+evaluation points r_1..r_4 give a 4x~15.5 = 62-bit digest, stronger than the
+32-bit checksum value Globus transmits (paper §3.2).
+
+Definition, over the byte stream b_0..b_{n-1} (each byte is one coefficient):
+
+    H_r(b) = sum_k b_k * r^(n-1-k)  mod p          (degree-descending)
+
+which satisfies the *merge law* used throughout this framework:
+
+    H_r(A || B) = H_r(A) * r^len(B) + H_r(B)   (mod p)
+
+so chunk digests computed independently — in any order, by any mover — combine
+associatively into the stream digest. Out-of-order completion (movers finish
+chunks at different times; paper §3.1) is supported by `combine_at_offset`,
+because chunk C at byte offset o of an n-byte file contributes exactly
+H_r(C) * r^(n - o - len(C)) to the file digest, a commutative sum.
+
+Detection strength: two distinct equal-length streams collide at evaluation
+point r iff r is a root of their (degree < n) difference polynomial; for the
+four fixed points the miss probability for a random corruption is ~(1/p)^4
+~= 2.2e-19 per point-set, far below the one-error-per-1.26 TB corruption rate
+observed in the Globus logs (paper §2.3). Unequal lengths never collide: the
+digest carries the exact byte length.
+
+Three implementations, one algebra:
+  * this module      — exact host/numpy version over raw bytes (checkpoint path)
+  * kernels/ref.py   — pure-jnp oracle over int32-packed words
+  * kernels/checksum — Pallas TPU kernel (BlockSpec VMEM tiling), validated
+                       against ref.py in interpret mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+P = 46337                        # largest prime with (p-1)^2 < 2^31
+BASES = (10007, 20011, 31337, 40009)   # four fixed evaluation points
+NBASES = len(BASES)
+_BLOCK = 1 << 16                 # host-side processing block (bytes)
+
+
+def _pow_mod(base: int, exp: int, mod: int = P) -> int:
+    return pow(int(base), int(exp), mod)
+
+
+@dataclasses.dataclass(frozen=True)
+class Digest:
+    """A mergeable fingerprint: four GF(p) residues plus the exact byte length."""
+
+    h: tuple[int, int, int, int]
+    length: int
+
+    def __post_init__(self):
+        if len(self.h) != NBASES:
+            raise ValueError(f"digest must carry {NBASES} residues, got {len(self.h)}")
+        if any(not (0 <= v < P) for v in self.h):
+            raise ValueError(f"residues out of field range: {self.h}")
+        if self.length < 0:
+            raise ValueError("negative length")
+
+    # -- algebra ------------------------------------------------------------
+    def merge(self, right: "Digest") -> "Digest":
+        """Digest of the concatenation self || right."""
+        h = tuple(
+            (hl * _pow_mod(r, right.length) + hr) % P
+            for hl, hr, r in zip(self.h, right.h, BASES)
+        )
+        return Digest(h, self.length + right.length)
+
+    def shifted(self, tail_bytes: int) -> tuple[int, ...]:
+        """Contribution of this chunk when `tail_bytes` bytes follow it."""
+        return tuple((hv * _pow_mod(r, tail_bytes)) % P for hv, r in zip(self.h, BASES))
+
+    def to_bytes(self) -> bytes:
+        out = bytearray()
+        for v in self.h:
+            out += int(v).to_bytes(4, "little")
+        out += int(self.length).to_bytes(8, "little")
+        return bytes(out)
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "Digest":
+        if len(raw) != 4 * NBASES + 8:
+            raise ValueError(f"bad digest encoding length {len(raw)}")
+        h = tuple(int.from_bytes(raw[4 * i : 4 * i + 4], "little") for i in range(NBASES))
+        length = int.from_bytes(raw[4 * NBASES :], "little")
+        return Digest(h, length)
+
+    def hexdigest(self) -> str:
+        return self.to_bytes().hex()
+
+
+EMPTY_DIGEST = Digest((0, 0, 0, 0), 0)
+
+
+def fingerprint_bytes(data: bytes | bytearray | memoryview | np.ndarray) -> Digest:
+    """Exact digest of a raw byte stream (vectorized numpy host path).
+
+    This is the checkpoint-path implementation: it must digest arbitrary-length
+    byte strings at (multi-)100 MB/s so that per-chunk checksumming can overlap
+    chunk I/O (paper Fig. 4) without itself becoming the bottleneck.
+    """
+    buf = np.frombuffer(data, dtype=np.uint8) if not isinstance(data, np.ndarray) else data
+    if buf.dtype != np.uint8:
+        buf = buf.view(np.uint8)
+    buf = buf.reshape(-1)
+    n = buf.size
+    h = np.zeros(NBASES, dtype=np.int64)
+    if n == 0:
+        return EMPTY_DIGEST
+    # Weight tables as float64: every product (<= 255 * 46336) and every
+    # 64 KiB block sum (<= 7.7e11) is exactly representable in f64 (< 2^53),
+    # so we get BLAS-speed GEMMs with exact integer results.
+    weights = _host_weight_table(_BLOCK).astype(np.float64)  # (NBASES, _BLOCK)
+    r_blk = np.array([_pow_mod(r, _BLOCK) for r in BASES], dtype=np.int64)
+    full, rem = divmod(n, _BLOCK)
+    SUPER = 128  # blocks per GEMM: 8 MiB of input per call
+    conv = np.empty((SUPER, _BLOCK), dtype=np.float64)  # reused conversion buffer
+    for s in range(0, full, SUPER):
+        e = min(s + SUPER, full)
+        x = conv[: e - s]
+        np.copyto(x, buf[s * _BLOCK : e * _BLOCK].reshape(e - s, _BLOCK))
+        blks = (x @ weights.T).astype(np.int64) % P  # (e-s, NBASES)
+        for i in range(e - s):
+            h = (h * r_blk + blks[i]) % P
+    if rem:
+        tail = buf[full * _BLOCK :].astype(np.float64)
+        r_tail = np.array([_pow_mod(r, rem) for r in BASES], dtype=np.int64)
+        # weights[:, B-rem:] = [r^(rem-1) ... r^0] — descending weights for `rem` coeffs.
+        blk = (weights[:, _BLOCK - rem :] @ tail).astype(np.int64) % P
+        h = (h * r_tail + blk) % P
+    return Digest(tuple(int(v) for v in h), n)
+
+
+_WEIGHT_CACHE: dict[int, np.ndarray] = {}
+
+
+def _host_weight_table(block: int) -> np.ndarray:
+    """weights[b, k] = BASES[b] ^ (block-1-k) mod P, shape (NBASES, block)."""
+    tbl = _WEIGHT_CACHE.get(block)
+    if tbl is None:
+        tbl = np.empty((NBASES, block), dtype=np.int64)
+        for b, r in enumerate(BASES):
+            w = np.empty(block, dtype=np.int64)
+            acc = 1
+            for k in range(block - 1, -1, -1):
+                w[k] = acc
+                acc = (acc * r) % P
+            tbl[b] = w
+        _WEIGHT_CACHE[block] = tbl
+    return tbl
+
+
+def fingerprint_ndarray(arr: np.ndarray) -> Digest:
+    """Digest of an ndarray's in-memory byte image (C-order)."""
+    return fingerprint_bytes(np.ascontiguousarray(arr).view(np.uint8))
+
+
+def merge_all(digests: Iterable[Digest]) -> Digest:
+    """Fold an in-order sequence of chunk digests into the stream digest."""
+    out = EMPTY_DIGEST
+    for d in digests:
+        out = out.merge(d)
+    return out
+
+
+def combine_at_offsets(
+    parts: Sequence[tuple[int, Digest]], total_length: int
+) -> Digest:
+    """Commutative combination of (byte_offset, digest) chunk parts.
+
+    Chunks may be supplied in ANY order (movers complete out of order,
+    paper §3.1); offsets must tile [0, total_length) exactly.
+    """
+    cover = sorted((off, d.length) for off, d in parts)
+    pos = 0
+    for off, ln in cover:
+        if off != pos:
+            raise ValueError(f"chunk coverage gap/overlap at byte {pos} (next chunk at {off})")
+        pos += ln
+    if pos != total_length:
+        raise ValueError(f"chunks cover {pos} bytes, expected {total_length}")
+    acc = [0] * NBASES
+    for off, d in parts:
+        tail = total_length - off - d.length
+        contrib = d.shifted(tail)
+        for b in range(NBASES):
+            acc[b] = (acc[b] + contrib[b]) % P
+    return Digest(tuple(acc), total_length)
+
+
+def verify(expected: Digest, actual: Digest) -> bool:
+    return expected.h == actual.h and expected.length == actual.length

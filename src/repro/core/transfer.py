@@ -1,0 +1,315 @@
+"""Chunked transfer engine — the host-side data movers.
+
+This is the paper-faithful implementation of §3.1/§3.2 on a host: N worker
+threads (the "data mover pairs") pull chunks from a shared queue (natural
+work-stealing => straggler mitigation), move disjoint byte ranges from a
+source to a destination, compute per-chunk fingerprints pipelined with the
+movement, verify end-to-end integrity chunk-by-chunk, journal completions for
+partial restart, retry failed chunks (chunk-granular fault recovery rather
+than whole-transfer restart), and optionally speculate on stragglers.
+
+It backs the checkpoint subsystem (repro.ckpt) — where source = device-host
+array bytes and destination = the checkpoint file — and the CPU-measurable
+overlap benchmarks (benchmarks/overlap.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import threading
+import time
+from typing import Callable, Protocol
+
+import numpy as np
+
+from repro.core.chunker import Chunk, ChunkPlan
+from repro.core.integrity import Digest, combine_at_offsets, fingerprint_bytes, verify
+from repro.core.journal import ChunkJournal, JournalRecord
+
+
+# ---------------------------------------------------------------------------
+# Source / destination abstractions
+# ---------------------------------------------------------------------------
+class ByteSource(Protocol):
+    nbytes: int
+    def read(self, offset: int, length: int) -> bytes: ...
+
+
+class ByteDest(Protocol):
+    def write(self, offset: int, data: bytes) -> None: ...
+    def read_back(self, offset: int, length: int) -> bytes: ...
+
+
+class BufferSource:
+    """Zero-copy view over an in-memory byte image (e.g. a host array)."""
+
+    def __init__(self, data: bytes | bytearray | memoryview | np.ndarray):
+        if isinstance(data, np.ndarray):
+            data = np.ascontiguousarray(data).view(np.uint8).reshape(-1).data
+        self._mv = memoryview(data)
+        self.nbytes = self._mv.nbytes
+
+    def read(self, offset: int, length: int) -> bytes:
+        return bytes(self._mv[offset : offset + length])
+
+
+class FileSource:
+    def __init__(self, path: str | os.PathLike):
+        self.path = str(path)
+        self.nbytes = os.path.getsize(self.path)
+        self._local = threading.local()
+
+    def _fh(self):
+        fh = getattr(self._local, "fh", None)
+        if fh is None:
+            fh = open(self.path, "rb")
+            self._local.fh = fh
+        return fh
+
+    def read(self, offset: int, length: int) -> bytes:
+        fh = self._fh()
+        fh.seek(offset)
+        return fh.read(length)
+
+
+class FileDest:
+    """Preallocated file destination; per-thread handles allow concurrent
+    positional writes of disjoint ranges (the ESTO analogue)."""
+
+    def __init__(self, path: str | os.PathLike, total_bytes: int):
+        self.path = str(path)
+        self.total_bytes = total_bytes
+        # Preallocate only when absent/mis-sized: a partially-written file from
+        # a crashed save must keep its journaled chunks (partial restart).
+        if not os.path.exists(self.path) or os.path.getsize(self.path) != total_bytes:
+            with open(self.path, "wb") as fh:
+                if total_bytes:
+                    fh.truncate(total_bytes)
+        self._local = threading.local()
+
+    def _fh(self):
+        fh = getattr(self._local, "fh", None)
+        if fh is None:
+            fh = open(self.path, "r+b")
+            self._local.fh = fh
+        return fh
+
+    def write(self, offset: int, data: bytes) -> None:
+        fh = self._fh()
+        fh.seek(offset)
+        fh.write(data)
+        fh.flush()
+
+    def read_back(self, offset: int, length: int) -> bytes:
+        fh = self._fh()
+        fh.seek(offset)
+        return fh.read(length)
+
+
+class BufferDest:
+    def __init__(self, total_bytes: int):
+        self.buf = bytearray(total_bytes)
+
+    def write(self, offset: int, data: bytes) -> None:
+        self.buf[offset : offset + len(data)] = data
+
+    def read_back(self, offset: int, length: int) -> bytes:
+        return bytes(self.buf[offset : offset + length])
+
+
+# ---------------------------------------------------------------------------
+# Transfer engine
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ChunkOutcome:
+    chunk: Chunk
+    digest: Digest
+    attempts: int
+    mover: int
+    seconds: float
+
+
+@dataclasses.dataclass
+class TransferReport:
+    total_bytes: int
+    file_digest: Digest
+    outcomes: dict[int, ChunkOutcome]
+    seconds: float
+    retries: int
+    skipped_chunks: int            # restored from journal (partial restart)
+    speculated: int
+
+    @property
+    def gbps(self) -> float:
+        return self.total_bytes * 8 / 1e9 / self.seconds if self.seconds > 0 else 0.0
+
+
+class IntegrityError(RuntimeError):
+    pass
+
+
+class ChunkedTransfer:
+    """Executes a ChunkPlan with integrity checking and chunk-level recovery."""
+
+    def __init__(
+        self,
+        source: ByteSource,
+        dest: ByteDest,
+        plan: ChunkPlan,
+        *,
+        integrity: bool = True,
+        journal: ChunkJournal | None = None,
+        max_retries: int = 3,
+        fault_injector: Callable[[Chunk, int], None] | None = None,
+        speculative_factor: float = 0.0,   # >0 enables straggler duplication
+    ):
+        if source.nbytes != plan.total_bytes:
+            raise ValueError(f"source has {source.nbytes} bytes, plan expects {plan.total_bytes}")
+        self.source, self.dest, self.plan = source, dest, plan
+        self.integrity = integrity
+        self.journal = journal
+        self.max_retries = max_retries
+        self.fault_injector = fault_injector
+        self.speculative_factor = speculative_factor
+        self._lock = threading.Lock()
+        self._outcomes: dict[int, ChunkOutcome] = {}
+        self._retries = 0
+        self._speculated = 0
+        self._errors: list[BaseException] = []
+
+    # -- single chunk (one ERET/ESTO pair) --------------------------------
+    def _move_chunk(self, chunk: Chunk, mover: int) -> ChunkOutcome:
+        attempts = 0
+        t0 = time.perf_counter()
+        while True:
+            attempts += 1
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector(chunk, attempts)
+                data = self.source.read(chunk.offset, chunk.length)
+                if len(data) != chunk.length:
+                    raise IOError(f"short read at {chunk.offset}: {len(data)}/{chunk.length}")
+                # Source-side fingerprint while the data is in hand (the
+                # paper's "modest cost incurred when first reading the file").
+                src_digest = fingerprint_bytes(data)
+                self.dest.write(chunk.offset, data)
+                if self.integrity:
+                    back = self.dest.read_back(chunk.offset, chunk.length)
+                    dst_digest = fingerprint_bytes(back)
+                    if not verify(src_digest, dst_digest):
+                        raise IntegrityError(
+                            f"chunk {chunk.index} digest mismatch "
+                            f"(offset={chunk.offset}, len={chunk.length})"
+                        )
+                return ChunkOutcome(chunk, src_digest, attempts, mover, time.perf_counter() - t0)
+            except Exception:
+                if attempts > self.max_retries:
+                    raise
+                with self._lock:
+                    self._retries += 1
+
+    # -- worker loop: pull-from-queue == work stealing ---------------------
+    def _worker(self, mover: int, q: "queue.Queue[Chunk | None]") -> None:
+        while True:
+            chunk = q.get()
+            if chunk is None:
+                return
+            with self._lock:
+                if chunk.index in self._outcomes:   # speculated twin already landed
+                    continue
+            try:
+                out = self._move_chunk(chunk, mover)
+            except BaseException as e:  # noqa: BLE001 — propagated to caller
+                with self._lock:
+                    self._errors.append(e)
+                return
+            with self._lock:
+                first = chunk.index not in self._outcomes
+                if first:
+                    self._outcomes[chunk.index] = out
+            if first and self.journal is not None:
+                self.journal.append(
+                    JournalRecord(chunk.index, chunk.offset, chunk.length, out.digest.hexdigest())
+                )
+
+    def run(self) -> TransferReport:
+        t0 = time.perf_counter()
+        done_before: dict[int, Digest] = {}
+        if self.journal is not None:
+            for idx, rec in self.journal.records.items():
+                done_before[idx] = rec.digest()
+
+        pending = [c for c in self.plan.chunks if c.index not in done_before]
+        q: "queue.Queue[Chunk | None]" = queue.Queue()
+        for c in pending:
+            q.put(c)
+
+        movers = max(1, min(self.plan.movers, len(pending))) if pending else 1
+        threads = [
+            threading.Thread(target=self._worker, args=(m, q), daemon=True)
+            for m in range(movers)
+        ]
+        # Straggler mitigation: when the queue drains, re-enqueue the oldest
+        # in-flight chunks so idle movers can duplicate them (first write wins
+        # — writes are idempotent on disjoint ranges).
+        if self.speculative_factor > 0 and pending:
+            watcher = threading.Thread(target=self._speculate, args=(q, movers), daemon=True)
+        else:
+            watcher = None
+        for th in threads:
+            th.start()
+        if watcher:
+            watcher.start()
+        for _ in threads:
+            q.put(None)
+        for th in threads:
+            th.join()
+        if self._errors:
+            raise self._errors[0]
+
+        parts = [(c.offset, self._outcomes[c.index].digest) for c in self.plan.chunks
+                 if c.index in self._outcomes]
+        parts += [(self.plan.chunks[i].offset, d) for i, d in done_before.items()]
+        file_digest = combine_at_offsets(parts, self.plan.total_bytes)
+        return TransferReport(
+            total_bytes=self.plan.total_bytes,
+            file_digest=file_digest,
+            outcomes=self._outcomes,
+            seconds=time.perf_counter() - t0,
+            retries=self._retries,
+            skipped_chunks=len(done_before),
+            speculated=self._speculated,
+        )
+
+    def _speculate(self, q: "queue.Queue[Chunk | None]", movers: int) -> None:
+        while True:
+            time.sleep(0.005)
+            with self._lock:
+                done = len(self._outcomes)
+                total = self.plan.n_chunks
+                if done >= total or self._errors:
+                    return
+                if q.qsize() <= movers and total - done <= movers:
+                    missing = [c for c in self.plan.chunks if c.index not in self._outcomes]
+                    for c in missing[: movers]:
+                        q.put(c)
+                        self._speculated += 1
+                    return
+
+
+def transfer_verified(
+    source: ByteSource,
+    dest: ByteDest,
+    plan: ChunkPlan,
+    expected: Digest | None = None,
+    **kw,
+) -> TransferReport:
+    """One-shot helper: run the transfer; optionally check the end-to-end digest."""
+    report = ChunkedTransfer(source, dest, plan, **kw).run()
+    if expected is not None and not verify(expected, report.file_digest):
+        raise IntegrityError(
+            f"end-to-end digest mismatch: expected {expected.hexdigest()}, "
+            f"got {report.file_digest.hexdigest()}"
+        )
+    return report

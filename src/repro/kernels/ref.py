@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for the Pallas integrity kernels.
+
+The digest algebra is defined in ``repro.core.integrity`` (host/numpy, exact).
+These oracles compute the *same* fingerprints with plain jnp ops — no Pallas —
+so kernel tests can assert_allclose (exact integer equality here) against an
+independent implementation, and the host implementation cross-checks both.
+
+All device-side digests are defined over the little-endian byte image of the
+array, exactly like the host ``fingerprint_bytes``; arrays whose byte count is
+not a multiple of 4 are zero-padded and the padding is divided back out
+(multiplying by the modular inverse of r^pad — valid because GF(p) is a field).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.integrity import BASES, NBASES, P, Digest
+
+_LANE = 128  # bytes folded per modular reduction: 128*255*46336 < 2^31
+
+
+def _pow_mod(base: int, exp: int) -> int:
+    return pow(int(base), int(exp), P)
+
+
+def to_byte_stream(x: jax.Array) -> tuple[jax.Array, int]:
+    """Flatten any array to its little-endian uint8 byte stream (+true length)."""
+    flat = x.reshape(-1)
+    if flat.dtype == jnp.uint8:
+        return flat, flat.size
+    # bitcast elementwise to a same-width unsigned type, then split bytes.
+    nbits = flat.dtype.itemsize * 8
+    udtype = {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32, 64: jnp.uint64}[nbits]
+    u = jax.lax.bitcast_convert_type(flat, udtype)
+    nbytes_per = flat.dtype.itemsize
+    u32 = u.astype(jnp.uint32)
+    parts = [((u32 >> (8 * k)) & 0xFF).astype(jnp.uint8) for k in range(nbytes_per)]
+    return jnp.stack(parts, axis=-1).reshape(-1), flat.size * nbytes_per
+
+
+def fingerprint_bytes_ref(b: jax.Array) -> jax.Array:
+    """Digest residues of a uint8 vector; returns (NBASES,) int32.
+
+    Two-level fold: within 128-byte groups a weighted lane sum (safe in int32),
+    then an in-order fold across groups with the merge law H <- H*r^128 + h_g.
+    """
+    n = int(b.shape[0])
+    pad = (-n) % _LANE
+    bp = jnp.pad(b, (0, pad)).astype(jnp.int32).reshape(-1, _LANE)
+    ngroups = bp.shape[0]
+    out = []
+    for r in BASES:
+        w = np.empty(_LANE, np.int32)
+        acc = 1
+        for k in range(_LANE - 1, -1, -1):
+            w[k] = acc
+            acc = (acc * r) % P
+        w = jnp.asarray(w)
+        group = jnp.sum(bp * w[None, :], axis=1) % P          # (ngroups,)
+        r_lane = _pow_mod(r, _LANE)
+
+        def step(h, g):
+            return (h * r_lane + g) % P, None
+
+        h, _ = jax.lax.scan(step, jnp.int32(0), group)
+        if pad:
+            inv = _pow_mod(_pow_mod(r, pad), P - 2)           # divide out zero pad
+            h = (h * inv) % P
+        out.append(h)
+    return jnp.stack(out).astype(jnp.int32)
+
+
+def fingerprint_array_ref(x: jax.Array) -> jax.Array:
+    """Digest residues (NBASES,) int32 of an array's byte image."""
+    b, _ = to_byte_stream(x)
+    return fingerprint_bytes_ref(b)
+
+
+def digest_of_ref(x: jax.Array) -> Digest:
+    b, n = to_byte_stream(x)
+    h = np.asarray(jax.jit(fingerprint_bytes_ref)(b))
+    return Digest(tuple(int(v) for v in h), n)
+
+
+def blocked_view(a: jax.Array, bm: int, bk: int) -> jax.Array:
+    """Rearrange (M,K) into tile-major order: (M/bm, K/bk, bm, bk) flattened.
+
+    The fused matmul+digest kernel consumes A tile-by-tile, so its digest is
+    defined over this canonical blocked byte order; the oracle uses the same.
+    """
+    M, K = a.shape
+    assert M % bm == 0 and K % bk == 0, (a.shape, bm, bk)
+    return (
+        a.reshape(M // bm, bm, K // bk, bk)
+        .transpose(0, 2, 1, 3)
+        .reshape(-1)
+    )
+
+
+def matmul_digest_ref(a: jax.Array, b: jax.Array, bm: int = 128, bk: int = 128):
+    """Oracle for the fused kernel: (a @ b, digest residues of blocked a)."""
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    h = fingerprint_array_ref(blocked_view(a, bm, bk))
+    return out, h

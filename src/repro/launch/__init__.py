@@ -1,0 +1,1 @@
+"""Launchers: mesh construction, step builders, dry-run, train/serve drivers."""

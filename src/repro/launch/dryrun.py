@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds the step (train_step / prefill / serve_step) with full config,
+  3. ``.lower().compile()`` — any sharding mismatch, OOM-at-compile or
+     unsupported collective is a bug in the framework, not in the run,
+  4. records memory_analysis / cost_analysis / per-collective byte counts,
+  5. compiles reduced-layer probes (layer scans lower to while-loops whose
+     bodies XLA cost analysis counts ONCE — two probes at L1 < L2 layers
+     recover exact per-layer terms by linear extrapolation; hybrid archs get
+     a third probe for their tail scan).
+
+Results accumulate in a JSON cache (resumable; one process per cell batch).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import ARCHS, SHAPES, skip_reason
+from repro.launch.mesh import make_production_mesh
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(?:\([^)]*\)|(\w+)\[([\d,]*)\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * b
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return total_devices
+
+
+def collective_bytes(hlo_text: str, total_devices: int) -> dict:
+    """Per-device bytes moved on the interconnect, by collective kind.
+
+    Ring-algorithm accounting per op (n = group size): all-gather and
+    reduce-scatter move (n-1)/n of the full tensor through each device;
+    all-reduce = RS+AG = 2(n-1)/n; all-to-all (n-1)/n; collective-permute
+    sends exactly its operand.
+    """
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "n_ops": 0,
+           "by_group_size": {}}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for k in ("all-gather-start", "all-gather", "all-reduce-start", "all-reduce",
+                  "reduce-scatter", "all-to-all", "collective-permute-start",
+                  "collective-permute"):
+            if f" {k}(" in rhs or rhs.startswith(f"{k}("):
+                kind = k.replace("-start", "")
+                break
+        if kind is None or "-done" in rhs:
+            continue
+        # result shape(s): leftmost shape token(s) on the rhs
+        shapes = _SHAPE_RE.findall(rhs.split("(")[0])
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        n = max(2, _group_size(line, total_devices))
+        factor = {"all-gather": (n - 1) / n, "reduce-scatter": (n - 1) / n,
+                  "all-reduce": 2 * (n - 1) / n, "all-to-all": (n - 1) / n,
+                  "collective-permute": 1.0}[kind]
+        out[kind] += nbytes * factor
+        out["n_ops"] += 1
+        # bucket by participant-group size: on the production meshes, group
+        # size 2 == the pod (DCN) axis, 16 == data or model (ICI)
+        gk = str(n)
+        out["by_group_size"][gk] = out["by_group_size"].get(gk, 0.0) + nbytes * factor
+    return out
+
+
+def _analyze(compiled, n_devices: int) -> dict:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    text = compiled.as_text()
+    return {
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "peak_bytes": int(ma.argument_size_in_bytes + ma.temp_size_in_bytes),
+        "collectives": collective_bytes(text, n_devices),
+    }
+
+
+def _probe_layers(arch: str, family: str) -> list[int]:
+    from repro.configs.registry import get_config
+    cfg = get_config(arch)
+    p = len(cfg.attn_pattern) if family in ("dense", "moe", "vlm") else 1
+    if family == "hybrid":
+        return [3, 6, 8]     # (1 block), (2 blocks), (2 blocks + 2-layer tail)
+    if family == "encdec":
+        return [1, 2]
+    return [p, 2 * p]
+
+
+def _reconstruct(full: dict, probes: dict[int, dict], arch: str, family: str,
+                 n_layers: int) -> dict:
+    """Exact loop-aware totals from reduced-layer probes (linear in L)."""
+    ls = sorted(probes)
+    keys = ["flops_per_device", "bytes_accessed"]
+    ckeys = ["all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute"]
+
+    def val(d, k):
+        return d["collectives"][k] if k in ckeys else d[k]
+
+    out = {}
+    if family == "hybrid":
+        l1, l2, l3 = ls  # 3, 6, 8
+        for k in keys + ckeys:
+            block = val(probes[l2], k) - val(probes[l1], k)       # per (r,r,a) block
+            tail2 = val(probes[l3], k) - val(probes[l2], k)       # 2-layer rec tail
+            base = val(probes[l1], k) - block
+            n_blocks = n_layers // 3
+            n_tail = n_layers - 3 * n_blocks
+            out[k] = base + n_blocks * block + (tail2 / 2.0) * n_tail
+    else:
+        l1, l2 = ls[0], ls[1]
+        for k in keys + ckeys:
+            body = (val(probes[l2], k) - val(probes[l1], k)) / ((l2 - l1))
+            base = val(probes[l1], k) - body * l1
+            out[k] = base + body * n_layers
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *, sync_mode: str = "auto",
+             microbatches: int = 1, probes: bool = True,
+             cfg_overrides: dict | None = None,
+             weight_stationary: bool = False) -> dict:
+    from repro.launch.steps import build_cell
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_dev = mesh.size
+    rec: dict = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "devices": n_dev,
+        "sync_mode": sync_mode, "microbatches": microbatches,
+        "cfg_overrides": cfg_overrides, "weight_stationary": weight_stationary,
+    }
+    t0 = time.perf_counter()
+    kw = dict(cfg_overrides=cfg_overrides, weight_stationary=weight_stationary)
+    bundle = build_cell(arch, shape, mesh, sync_mode=sync_mode,
+                        microbatches=microbatches, **kw)
+    with mesh:
+        lowered = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                          out_shardings=bundle.out_shardings).lower(*bundle.in_shapes)
+        rec["lower_s"] = round(time.perf_counter() - t0, 1)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.perf_counter() - t1, 1)
+    rec.update(_analyze(compiled, n_dev))
+    del compiled, lowered
+
+    cfg = bundle.model.cfg
+    rec["param_count"] = cfg.param_count()
+    rec["active_param_count"] = cfg.active_param_count()
+
+    if probes:
+        from repro.models import common as cm
+
+        fam = cfg.family
+        probe_res = {}
+        for L in _probe_layers(arch, fam):
+            b2 = build_cell(arch, shape, mesh, sync_mode=sync_mode,
+                            microbatches=1, layers_override=L, **kw)
+            # Unroll every scan: loop bodies must appear (and be counted)
+            # once per iteration for the linear-in-L reconstruction to hold.
+            with cm.unroll_scans(), mesh:
+                c2 = jax.jit(b2.fn, in_shardings=b2.in_shardings,
+                             out_shardings=b2.out_shardings).lower(*b2.in_shapes).compile()
+            probe_res[L] = _analyze(c2, n_dev)
+            del c2
+        rec["extrapolated"] = _reconstruct(rec, probe_res, arch, fam, cfg.n_layers)
+        rec["probes"] = {str(k): v for k, v in probe_res.items()}
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--sync-mode", default="auto", choices=["auto", "chunked"])
+    ap.add_argument("--microbatches", type=int, default=0)  # 0 = per-arch auto
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    targets = []
+    archs = ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        for s in shapes:
+            for mk in meshes:
+                targets.append((a, s, mk))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as fh:
+            results = json.load(fh)
+
+    for arch, shape, mk in targets:
+        key = f"{arch}|{shape}|{mk}|{args.sync_mode}|mb{args.microbatches}"
+        if key in results and "error" not in results[key]:
+            print(f"[skip-cached] {key}")
+            continue
+        reason = skip_reason(arch, shape)
+        if reason:
+            results[key] = {"arch": arch, "shape": shape, "mesh": mk,
+                            "skipped": reason}
+            print(f"[skipped] {key}: {reason}")
+        else:
+            print(f"[run] {key} ...", flush=True)
+            try:
+                results[key] = run_cell(arch, shape, mk, sync_mode=args.sync_mode,
+                                        microbatches=args.microbatches,
+                                        probes=not args.no_probes)
+                r = results[key]
+                print(f"  ok: lower {r['lower_s']}s compile {r['compile_s']}s "
+                      f"peak {r['peak_bytes']/1e9:.2f} GB "
+                      f"flops/dev {r['flops_per_device']/1e12:.2f} TF(raw)",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — recorded, run continues
+                traceback.print_exc()
+                results[key] = {"arch": arch, "shape": shape, "mesh": mk,
+                                "error": f"{type(e).__name__}: {e}"}
+        with open(args.out, "w") as fh:
+            json.dump(results, fh, indent=1)
+
+    n_err = sum(1 for v in results.values() if "error" in v)
+    print(f"done: {len(results)} cells, {n_err} errors -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

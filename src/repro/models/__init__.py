@@ -1,0 +1,11 @@
+"""Model zoo: dense, MoE, SSM, hybrid, enc-dec, VLM families."""
+from repro.models.common import ModelConfig
+from repro.models.transformer import DenseLM
+from repro.models.moe import MoELM
+from repro.models.ssm import Mamba2LM
+from repro.models.hybrid import RecurrentGemmaLM
+from repro.models.encdec import WhisperLM
+from repro.models.vlm import InternVLM
+
+__all__ = ["ModelConfig", "DenseLM", "MoELM", "Mamba2LM",
+           "RecurrentGemmaLM", "WhisperLM", "InternVLM"]

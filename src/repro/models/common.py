@@ -1,0 +1,473 @@
+"""Shared model components: configs, norms, RoPE, GQA attention, MLPs.
+
+Pure-functional JAX (params are nested dicts of arrays). Every assigned
+architecture is expressed as a ModelConfig; layers are stacked on a leading
+axis and executed with jax.lax.scan (+ remat) so that a 64-layer model
+compiles one layer body — essential for dry-run compile times and for HLO
+compactness at 512 devices.
+
+Sharding: ``param_specs``-style functions return a PartitionSpec pytree that
+mirrors the param pytree. Dims shard on a mesh axis only when divisible;
+otherwise they stay replicated (e.g. MQA's single KV head).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.mesh import DATA, MODEL, POD
+
+Params = Any
+DType = Any
+
+# ---------------------------------------------------------------------------
+# scan wrapper: XLA's cost analysis counts while-loop bodies ONCE, so the
+# dry-run's reduced-layer FLOPs probes trace with every scan fully unrolled
+# (see launch/dryrun.py). Production/full-size compiles keep the loops.
+# ---------------------------------------------------------------------------
+import contextlib
+
+_UNROLL_SCANS = False
+
+
+@contextlib.contextmanager
+def unroll_scans():
+    global _UNROLL_SCANS
+    prev = _UNROLL_SCANS
+    _UNROLL_SCANS = True
+    try:
+        yield
+    finally:
+        _UNROLL_SCANS = prev
+
+
+def scan(body, init, xs, **kw):
+    if _UNROLL_SCANS:
+        kw["unroll"] = True
+    return jax.lax.scan(body, init, xs, **kw)
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None     # default d_model // n_heads
+    act: str = "silu"               # silu (SwiGLU) | gelu (GeGLU)
+    rope_theta: float = 10000.0
+    # attention pattern, repeated to cover n_layers: "g"=global, "l"=local
+    attn_pattern: str = "g"
+    window: int = 4096              # local-attention window
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    post_norms: bool = False        # gemma2-style post-attn/post-mlp norms
+    tie_embeddings: bool = True
+    embed_scale: bool = False       # gemma: scale embeddings by sqrt(d)
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # hybrid (recurrentgemma)
+    lru_width: int | None = None
+    conv1d_size: int = 4
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    enc_positions: int = 1500
+    # vlm
+    n_vis_tokens: int = 0
+    # numerics / memory
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"             # full | dots | none
+    ssm_bf16: bool = False          # SSD intra-chunk matmuls in bf16 (§Perf)
+    # applicability notes (long_500k etc.)
+    subquadratic: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def layer_kinds(self) -> tuple[str, ...]:
+        pat = self.attn_pattern
+        reps = -(-self.n_layers // len(pat))
+        return tuple((pat * reps)[: self.n_layers])
+
+    def param_count(self) -> int:
+        """Total parameters (embedding included once when tied)."""
+        d, f, v, hd = self.d_model, self.d_ff, self.vocab, self.hd
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        if self.family == "ssm":
+            d_in = d * self.ssm_expand
+            nh = d_in // self.ssm_head_dim
+            per = (d * (2 * d_in + 2 * self.ssm_state + nh)   # in_proj (z,x,B,C,dt)
+                   + (d_in + 2 * self.ssm_state) * self.ssm_conv
+                   + nh * 2                                    # A_log, D
+                   + d_in * d + 2 * d)                         # out_proj + norms
+            body = self.n_layers * per
+        elif self.family == "moe":
+            mlp = self.n_experts * 3 * d * f + d * self.n_experts
+            body = self.n_layers * (attn + mlp + 2 * d)
+        elif self.family == "hybrid":
+            kinds = self.layer_kinds()
+            n_rec = sum(1 for k in kinds if k == "r")
+            n_att = self.n_layers - n_rec
+            w = self.lru_width or d
+            rec = d * w * 2 + w * self.conv1d_size + w * 4 + w * d  # in/out + conv + gates
+            mlp = 3 * d * f
+            body = n_rec * (rec + mlp + 2 * d) + n_att * (attn + mlp + 2 * d)
+        elif self.family == "encdec":
+            mlp = 2 * d * f  # whisper uses plain GELU MLP (no gating)
+            enc = self.n_enc_layers * (attn + mlp + 2 * d)
+            dec = self.n_layers * (2 * attn + mlp + 3 * d)
+            body = enc + dec + self.enc_positions * d
+        else:
+            mlp = 3 * d * f
+            body = self.n_layers * (attn + mlp + 2 * d)
+        embed = v * d * (1 if self.tie_embeddings else 2)
+        return body + embed + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense = self.param_count() - self.n_layers * self.n_experts * 3 * d * f
+        return dense + self.n_layers * self.top_k * 3 * d * f
+
+
+# ---------------------------------------------------------------------------
+# sharding mixin: every model family uses these helpers so activations are
+# consistently batch+seq (Megatron-SP) constrained. Families whose sequence
+# math cannot shard (scans over seq) set SEQ_SHARD = False.
+# ---------------------------------------------------------------------------
+class ShardingMixin:
+    mesh: Mesh | None = None
+    pod_manual: bool = False
+    SEQ_SHARD: bool = True
+
+    def _constrain(self, x, spec):
+        if self.mesh is None:
+            return x
+        return constrain(x, self.mesh, spec)
+
+    def _batch(self):
+        if self.mesh is None:
+            return None
+        return batch_axes(self.mesh, exclude_pod=self.pod_manual)
+
+    def _seq(self, s: int):
+        if self.mesh is None or not self.SEQ_SHARD:
+            return None
+        return shardable(s, MODEL, self.mesh)
+
+    def _res(self, x):
+        """Constrain a (B, S, D) residual to batch(+seq) sharding."""
+        return self._constrain(x, P(self._batch(), self._seq(x.shape[1]), None))
+
+    def _lookup(self, table, tokens):
+        """Embedding gather. Inside a pod-manual region XLA's partitioner
+        cannot gather from a 2D-sharded table (upstream CHECK failure, see
+        DESIGN.md §5) — constrain to vocab-only sharding first."""
+        if self.mesh is not None and self.pod_manual:
+            table = self._constrain(
+                table, P(shardable(table.shape[0], MODEL, self.mesh), None))
+        return jnp.take(table, tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def trunc_normal(key, shape, scale, dtype) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+class Initializer:
+    """Deterministic per-leaf init from a path-derived key (cheap, reproducible)."""
+
+    def __init__(self, seed: int, dtype):
+        self.root = jax.random.PRNGKey(seed)
+        self.dtype = dtype
+
+    def __call__(self, path: str, shape: Sequence[int], scale: float | None = None):
+        key = jax.random.fold_in(self.root, hash(path) % (2**31))
+        if scale is None:
+            scale = 1.0 / math.sqrt(shape[-2] if len(shape) >= 2 else shape[-1])
+        return trunc_normal(key, tuple(shape), scale, self.dtype)
+
+    def zeros(self, shape):
+        return jnp.zeros(tuple(shape), self.dtype)
+
+    def ones(self, shape):
+        return jnp.ones(tuple(shape), self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+             unit_offset: bool = True) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale.astype(jnp.float32)) if unit_offset else scale.astype(jnp.float32)
+    return (x * w).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., seq, half)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def softcap(logits: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return logits
+    return jnp.tanh(logits / cap) * cap
+
+
+ATTN_BLOCK_KV = 512   # KV chunk for the online-softmax (flash-style) path
+ATTN_DENSE_MAX = 1024  # use the dense path when S_q <= this (decode, smoke)
+
+
+def _attn_mask(q_pos, kv_pos, causal, window):
+    """(B, Sq, Skv) bool mask from absolute positions (-1 kv = invalid slot)."""
+    mask = kv_pos[:, None, :] >= 0
+    if causal:
+        mask = mask & (q_pos[:, :, None] >= kv_pos[:, None, :])
+    if window is not None:
+        mask = mask & (q_pos[:, :, None] - kv_pos[:, None, :] < window)
+    return mask
+
+
+def attention(
+    q: jax.Array,          # (B, S, H, hd)
+    k: jax.Array,          # (B, T, KVH, hd)
+    v: jax.Array,          # (B, T, KVH, hd)
+    *,
+    causal: bool,
+    q_positions: jax.Array,     # (B, S) absolute positions of queries
+    kv_positions: jax.Array,    # (B, T) absolute positions of keys (-1 = invalid)
+    window: int | None = None,  # local attention window (None = global)
+    logit_cap: float | None = None,
+    block_kv: int = ATTN_BLOCK_KV,
+) -> jax.Array:
+    """GQA attention with sliding-window and soft-cap support.
+
+    Long sequences use an online-softmax scan over KV chunks (flash-style in
+    pure JAX): peak logits memory drops from O(S*T) to O(S*block_kv) — without
+    this the S^2 f32 logits of a 4k-train cell alone exceed a v5e's HBM.
+    Short-q (decode) and smoke shapes take the dense path.
+    """
+    B, S, H, hd = q.shape
+    KVH = k.shape[2]
+    assert H % KVH == 0
+    G = H // KVH
+    qf = q.astype(jnp.float32).reshape(B, S, KVH, G, hd)
+    T = k.shape[1]
+
+    if S <= ATTN_DENSE_MAX or T <= block_kv:
+        kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+        logits = jnp.einsum("bskgh,btkh->bkgst", qf, kf) / math.sqrt(hd)
+        logits = softcap(logits, logit_cap)
+        mask = _attn_mask(q_positions, kv_positions, causal, window)
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgst,btkh->bskgh", probs, vf)
+        return out.reshape(B, S, H, hd).astype(q.dtype)
+
+    # ---- blocked online-softmax path
+    pad = (-T) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)), constant_values=-1)
+    nblk = k.shape[1] // block_kv
+    kb = k.astype(jnp.float32).reshape(B, nblk, block_kv, KVH, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.astype(jnp.float32).reshape(B, nblk, block_kv, KVH, hd).transpose(1, 0, 2, 3, 4)
+    pb = kv_positions.reshape(B, nblk, block_kv).transpose(1, 0, 2)
+
+    def step(carry, blk):
+        m, l, acc = carry                     # (B,KVH,G,S), (B,KVH,G,S), (..., hd)
+        kc, vc, pc = blk
+        logits = jnp.einsum("bskgh,btkh->bkgst", qf, kc) / math.sqrt(hd)
+        logits = softcap(logits, logit_cap)
+        mask = _attn_mask(q_positions, pc, causal, window)
+        logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum("bkgst,btkh->bkgsh", p, vc)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KVH, G, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, KVH, G, S), jnp.float32)
+    a0 = jnp.zeros((B, KVH, G, S, hd), jnp.float32)
+    (m, l, acc), _ = scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+    return out.astype(q.dtype)
+
+
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def gated_mlp(x: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array, act: str) -> jax.Array:
+    h = act_fn(act)(x @ wg) * (x @ wi)
+    return h @ wo
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, *, mask: jax.Array | None = None,
+                  final_cap: float | None = None) -> jax.Array:
+    logits = softcap(logits.astype(jnp.float32), final_cap)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_xent(
+    h: jax.Array,            # (B, S, D) final hidden states
+    w: jax.Array,            # (D, V) unembedding
+    labels: jax.Array,       # (B, S)
+    *,
+    final_cap: float | None = None,
+    mask: jax.Array | None = None,
+    seq_chunk: int = 512,
+) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V) f32 logits.
+
+    The unembed matmul + log-softmax run per seq-chunk under remat: peak
+    logits memory falls from O(S*V) to O(seq_chunk*V), which at 256k vocabs
+    is the difference between fitting a v5e or not.
+    """
+    B, S, D = h.shape
+    if S <= seq_chunk:
+        logits = jnp.einsum("bsd,dv->bsv", h, w)
+        return cross_entropy(logits, labels, mask=mask, final_cap=final_cap)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    pad = (-S) % seq_chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = h.shape[1] // seq_chunk
+    hc = h.reshape(B, n, seq_chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, seq_chunk).transpose(1, 0, 2)
+    mc = mask.reshape(B, n, seq_chunk).transpose(1, 0, 2).astype(jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        hh, ll, mm = inp
+        logits = softcap(jnp.einsum("bsd,dv->bsv", hh, w).astype(jnp.float32), final_cap)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, ll[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(nll * mm), None
+
+    total, _ = scan(body, jnp.float32(0.0), (hc, lc, mc))
+    return total / jnp.maximum(jnp.sum(mc), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+def shardable(size: int, axis: str, mesh: Mesh) -> str | None:
+    """Use `axis` only when the dim divides evenly on this mesh."""
+    if axis in mesh.axis_names and size % mesh.shape[axis] == 0:
+        return axis
+    return None
+
+
+def batch_axes(mesh: Mesh, exclude_pod: bool = False):
+    """Mesh axes carrying the batch dim; pod excluded inside manual-pod regions."""
+    cand = (DATA,) if exclude_pod else (POD, DATA)
+    axes = tuple(a for a in cand if a in mesh.axis_names)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def constrain(x: jax.Array, mesh: Mesh, spec: P) -> jax.Array:
+    """Sharding constraint resolved against the ambient mesh when one is set.
+
+    Inside a manual-pod shard_map the ambient (abstract) mesh carries Manual
+    axis types — a NamedSharding built from the original all-Auto mesh would
+    be rejected there, so prefer the bare-PartitionSpec form.
+    """
+    try:
+        cur = jax.sharding.get_abstract_mesh()
+        has_ctx = cur is not None and not cur.empty
+    except Exception:  # noqa: BLE001 — conservative fallback
+        has_ctx = False
+    if has_ctx:
+        return jax.lax.with_sharding_constraint(x, spec)
+    return jax.lax.with_sharding_constraint(x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def kv_cache_spec(mesh: Mesh, batch: int, time: int, extra: tuple = ()) -> P:
+    """Sharding for a (layers, B, T, ...) decode cache.
+
+    Batch shards over (pod, data) when divisible; the TIME dim soaks up every
+    remaining mesh axis it divides by — long-context decode (B=1, T=524288)
+    ends up fully context-sharded, which is what makes the long_500k cells
+    fit (DESIGN.md §5 SP/CP).
+    """
+    b_axes = tuple(a for a in (POD, DATA) if a in mesh.axis_names)
+    import math as _m
+    if batch % max(1, _m.prod(mesh.shape[a] for a in b_axes)) != 0:
+        b_axes = ()
+    b = b_axes if len(b_axes) > 1 else (b_axes[0] if b_axes else None)
+    t_axes = []
+    rem = time
+    for a in (MODEL, DATA, POD):
+        if a in mesh.axis_names and a not in b_axes and rem % mesh.shape[a] == 0:
+            t_axes.append(a)
+            rem //= mesh.shape[a]
+    t = tuple(t_axes) if len(t_axes) > 1 else (t_axes[0] if t_axes else None)
+    return P(None, b, t, *extra)
+
+
+def remat_policy(name: str):
+    if name == "none":
+        return None
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    return jax.checkpoint(fn, policy=remat_policy(cfg.remat))

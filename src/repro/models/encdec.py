@@ -1,0 +1,260 @@
+"""Whisper-family encoder-decoder (audio backbone; conv frontend stubbed).
+
+Per the assignment brief the modality frontend is a stub: ``input_specs``
+provides precomputed frame embeddings (B, enc_positions, d_model) — the
+log-mel + 2xConv1d stem's output — and this module implements the transformer
+backbone faithfully: sinusoidal encoder positions, learned decoder positions,
+MHA (kv_heads == heads), plain 2-layer GELU MLPs, pre-LayerNorm with biases,
+causal decoder self-attention + cross-attention to the encoder output.
+
+Decoder positional table is sized to the requested sequence length (beyond
+Whisper's native 448) so the decode_32k/prefill cells are well-defined;
+noted in DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig
+from repro.distributed.mesh import MODEL
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def sinusoids(length: int, channels: int) -> jnp.ndarray:
+    t = jnp.arange(length, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-math.log(10000.0) * jnp.arange(channels // 2, dtype=jnp.float32)
+                  / (channels // 2 - 1))
+    ang = t * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+class WhisperLM(cm.ShardingMixin):
+    def __init__(self, cfg: ModelConfig, mesh: Mesh | None = None, *, max_target: int = 448):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.max_target = max_target
+
+    # -- params ---------------------------------------------------------------
+    def _attn_p(self, ini, n, tag, cross=False):
+        cfg, D = self.cfg, self.cfg.d_model
+        H, hd = cfg.n_heads, cfg.hd
+        return {
+            "ln_s": ini.ones((n, D)), "ln_b": ini.zeros((n, D)),
+            "wq": ini(f"{tag}.wq", (n, D, H, hd)),
+            "wk": ini(f"{tag}.wk", (n, D, H, hd)),
+            "wv": ini(f"{tag}.wv", (n, D, H, hd)),
+            "wo": ini(f"{tag}.wo", (n, H, hd, D), scale=1.0 / math.sqrt(H * hd)),
+        }
+
+    def _mlp_p(self, ini, n, tag):
+        cfg, D = self.cfg, self.cfg.d_model
+        return {
+            "ln_s": ini.ones((n, D)), "ln_b": ini.zeros((n, D)),
+            "w1": ini(f"{tag}.w1", (n, D, cfg.d_ff)),
+            "b1": ini.zeros((n, cfg.d_ff)),
+            "w2": ini(f"{tag}.w2", (n, cfg.d_ff, D), scale=1.0 / math.sqrt(cfg.d_ff)),
+            "b2": ini.zeros((n, D)),
+        }
+
+    def init_params(self, seed: int = 0) -> Any:
+        cfg = self.cfg
+        ini = cm.Initializer(seed, cfg.dtype)
+        ne, nd, D = cfg.n_enc_layers, cfg.n_layers, cfg.d_model
+        return {
+            "embed": ini("embed", (cfg.vocab, D), scale=1.0),
+            "pos_dec": ini("pos_dec", (self.max_target, D), scale=0.02),
+            "enc": {"self": self._attn_p(ini, ne, "enc.self"),
+                    "mlp": self._mlp_p(ini, ne, "enc.mlp")},
+            "enc_norm_s": ini.ones((D,)), "enc_norm_b": ini.zeros((D,)),
+            "dec": {"self": self._attn_p(ini, nd, "dec.self"),
+                    "cross": self._attn_p(ini, nd, "dec.cross", cross=True),
+                    "mlp": self._mlp_p(ini, nd, "dec.mlp")},
+            "dec_norm_s": ini.ones((D,)), "dec_norm_b": ini.zeros((D,)),
+        }
+
+    def param_specs(self, mesh: Mesh) -> Any:
+        cfg = self.cfg
+        d_dat = cm.shardable(cfg.d_model, "data", mesh)
+        h_m = cm.shardable(cfg.n_heads, MODEL, mesh)
+        f_m = cm.shardable(cfg.d_ff, MODEL, mesh)
+        attn = {"ln_s": P(None, None), "ln_b": P(None, None),
+                "wq": P(None, d_dat, h_m, None), "wk": P(None, d_dat, h_m, None),
+                "wv": P(None, d_dat, h_m, None), "wo": P(None, h_m, None, d_dat)}
+        mlp = {"ln_s": P(None, None), "ln_b": P(None, None),
+               "w1": P(None, d_dat, f_m), "b1": P(None, f_m),
+               "w2": P(None, f_m, d_dat), "b2": P(None, None)}
+        return {
+            "embed": P(cm.shardable(cfg.vocab, MODEL, mesh), d_dat),
+            "pos_dec": P(None, None),
+            "enc": {"self": dict(attn), "mlp": dict(mlp)},
+            "enc_norm_s": P(None), "enc_norm_b": P(None),
+            "dec": {"self": dict(attn), "cross": dict(attn), "mlp": dict(mlp)},
+            "dec_norm_s": P(None), "dec_norm_b": P(None),
+        }
+
+    # -- sub-layers --------------------------------------------------------------
+    def _qspec(self, S):
+        """Whisper's 20 heads don't divide a 16-wide model axis: use
+        context-parallel attention (q seq-sharded, full KV) instead."""
+        return P(self._batch(), self._seq(S), None, None)
+
+    def _sa(self, x, lp, *, causal, q_pos, kv=None, kv_pos=None):
+        h = layer_norm(x, lp["ln_s"], lp["ln_b"])
+        q = jnp.einsum("bsd,dnh->bsnh", h, lp["wq"])
+        q = self._constrain(q, self._qspec(q.shape[1]))
+        if kv is None:
+            k = jnp.einsum("bsd,dnh->bsnh", h, lp["wk"])
+            v = jnp.einsum("bsd,dnh->bsnh", h, lp["wv"])
+            k = self._constrain(k, P(self._batch(), None, None, None))
+            v = self._constrain(v, P(self._batch(), None, None, None))
+            kp = q_pos
+        else:
+            k, v, kp = kv
+        o = cm.attention(q, k, v, causal=causal, q_positions=q_pos, kv_positions=kp)
+        return self._res(x + jnp.einsum("bsnh,nhd->bsd", o, lp["wo"])), (k, v)
+
+    def _cross(self, x, lp, enc_k, enc_v, enc_pos, q_pos):
+        h = layer_norm(x, lp["ln_s"], lp["ln_b"])
+        q = jnp.einsum("bsd,dnh->bsnh", h, lp["wq"])
+        q = self._constrain(q, self._qspec(q.shape[1]))
+        o = cm.attention(q, enc_k, enc_v, causal=False,
+                         q_positions=q_pos, kv_positions=enc_pos)
+        return self._res(x + jnp.einsum("bsnh,nhd->bsd", o, lp["wo"]))
+
+    def _mlp(self, x, lp):
+        h = layer_norm(x, lp["ln_s"], lp["ln_b"])
+        h = cm.act_fn("gelu")(jnp.einsum("bsd,df->bsf", h, lp["w1"]) + lp["b1"])
+        h = self._constrain(h, P(self._batch(), None,
+                                 cm.shardable(self.cfg.d_ff, MODEL, self.mesh)
+                                 if self.mesh else None))
+        return self._res(x + jnp.einsum("bsf,fd->bsd", h, lp["w2"]) + lp["b2"])
+
+    # -- encoder -------------------------------------------------------------------
+    def encode(self, params, audio_embed):
+        cfg = self.cfg
+        B, T, D = audio_embed.shape
+        x = audio_embed.astype(cfg.dtype) + sinusoids(T, D).astype(cfg.dtype)[None]
+        x = self._res(x)
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+        def body(carry, blk):
+            x = carry
+            x, _ = self._sa(x, blk["self"], causal=False, q_pos=pos)
+            x = self._mlp(x, blk["mlp"])
+            return x, None
+
+        x, _ = cm.scan(cm.maybe_remat(body, cfg), x, params["enc"])
+        return layer_norm(x, params["enc_norm_s"], params["enc_norm_b"])
+
+    # -- decoder (train) -------------------------------------------------------------
+    def dec_hidden(self, params, tokens, enc_out):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = self._lookup(params["embed"], tokens).astype(cfg.dtype)
+        x = self._res(x + params["pos_dec"][:S][None].astype(cfg.dtype))
+        q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None], (B, enc_out.shape[1]))
+
+        def body(carry, blk):
+            x = carry
+            x, _ = self._sa(x, blk["self"], causal=True, q_pos=q_pos)
+            ek = jnp.einsum("btd,dnh->btnh", enc_out, blk["cross"]["wk"])
+            ev = jnp.einsum("btd,dnh->btnh", enc_out, blk["cross"]["wv"])
+            x = self._cross(x, blk["cross"], ek, ev, enc_pos, q_pos)
+            x = self._mlp(x, blk["mlp"])
+            return x, None
+
+        x, _ = cm.scan(cm.maybe_remat(body, cfg), x, params["dec"])
+        return layer_norm(x, params["dec_norm_s"], params["dec_norm_b"])
+
+    def dec_logits(self, params, tokens, enc_out):
+        x = self.dec_hidden(params, tokens, enc_out)
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(self.cfg.dtype))
+
+    def loss(self, params, batch):
+        enc = self.encode(params, batch["audio_embed"])
+        h = self.dec_hidden(params, batch["tokens"][:, :-1], enc)
+        return cm.chunked_xent(h, self._out_w(params), batch["tokens"][:, 1:])
+
+    def _out_w(self, params):
+        w = params["embed"].T.astype(self.cfg.dtype)
+        if self.mesh is not None:
+            w = cm.constrain(w, self.mesh,
+                             P(None, cm.shardable(self.cfg.vocab, MODEL, self.mesh)))
+        return w
+
+    # -- decode -----------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        """Decoder self-attn KV ring + cross-attn KV (filled by prefill)."""
+        cfg = self.cfg
+        nd, H, hd, Te = cfg.n_layers, cfg.n_heads, cfg.hd, cfg.enc_positions
+        return {
+            "k": jnp.zeros((nd, batch, max_len, H, hd), cfg.dtype),
+            "v": jnp.zeros((nd, batch, max_len, H, hd), cfg.dtype),
+            "p": jnp.full((nd, batch, max_len), -1, jnp.int32),
+            "ek": jnp.zeros((nd, batch, Te, H, hd), cfg.dtype),
+            "ev": jnp.zeros((nd, batch, Te, H, hd), cfg.dtype),
+        }
+
+    def cache_specs(self, mesh: Mesh, batch: int, max_len: int) -> Any:
+        kv = cm.kv_cache_spec(mesh, batch, max_len, extra=(None, None))
+        ekv = cm.kv_cache_spec(mesh, batch, self.cfg.enc_positions, extra=(None, None))
+        return {"k": kv, "v": kv, "p": cm.kv_cache_spec(mesh, batch, max_len),
+                "ek": ekv, "ev": ekv}
+
+    def prefill_cross(self, params, cache, audio_embed):
+        """Compute encoder output and fill per-layer cross-attn K/V."""
+        enc = self.encode(params, audio_embed)
+        ek = jnp.einsum("btd,ldnh->lbtnh", enc, params["dec"]["cross"]["wk"])
+        ev = jnp.einsum("btd,ldnh->lbtnh", enc, params["dec"]["cross"]["wv"])
+        return {**cache, "ek": ek, "ev": ev}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = self._lookup(params["embed"], tokens).astype(cfg.dtype)
+        pos_emb = jnp.take(params["pos_dec"], jnp.minimum(pos, self.max_target - 1), axis=0)
+        x = x + pos_emb[:, None].astype(cfg.dtype)
+        q_pos = pos[:, None]
+        Te = cfg.enc_positions
+        enc_pos = jnp.broadcast_to(jnp.arange(Te, dtype=jnp.int32)[None], (B, Te))
+
+        from repro.models.transformer import DenseLM
+
+        def body(carry, xs):
+            x = carry
+            blk = xs["blk"]
+            T = xs["k"].shape[1]
+            slot = pos % T
+            h = layer_norm(x, blk["self"]["ln_s"], blk["self"]["ln_b"])
+            q = jnp.einsum("bsd,dnh->bsnh", h, blk["self"]["wq"])
+            k = jnp.einsum("bsd,dnh->bsnh", h, blk["self"]["wk"])
+            v = jnp.einsum("bsd,dnh->bsnh", h, blk["self"]["wv"])
+            ck, cv, cp = DenseLM._cache_write(xs["k"], xs["v"], xs["p"], k, v, pos, slot)
+            o = cm.attention(q, ck, cv, causal=True, q_positions=q_pos, kv_positions=cp)
+            x = x + jnp.einsum("bsnh,nhd->bsd", o, blk["self"]["wo"])
+            x = self._cross(x, blk["cross"], xs["ek"], xs["ev"], enc_pos, q_pos)
+            x = self._mlp(x, blk["mlp"])
+            return x, {"k": ck, "v": cv, "p": cp}
+
+        xs = {"blk": params["dec"], "k": cache["k"], "v": cache["v"], "p": cache["p"],
+              "ek": cache["ek"], "ev": cache["ev"]}
+        x, new = cm.scan(body, x, xs)
+        x = layer_norm(x, params["dec_norm_s"], params["dec_norm_b"])
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(cfg.dtype))
+        return logits, {**cache, "k": new["k"], "v": new["v"], "p": new["p"]}

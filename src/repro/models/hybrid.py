@@ -1,0 +1,342 @@
+"""RecurrentGemma (Griffin): RG-LRU recurrent blocks + local MQA, 2:1 pattern.
+
+Layer layout (26 layers): repeating (recurrent, recurrent, local-attention)
+blocks — 8 full blocks — plus a 2-layer recurrent tail. The main stack scans
+over the 8 blocks; the tail is a second scan over its own stacked params.
+
+RG-LRU recurrence (trained with an associative scan — parallel over sequence):
+    r_t = sigmoid(x_t W_a + b_a)          (recurrence gate)
+    i_t = sigmoid(x_t W_x + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Decode carries (recurrent state, conv window, local-attn KV ring) — constant
+memory in sequence length, which is why this arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig
+from repro.models.ssm import _causal_conv
+from repro.distributed.mesh import MODEL
+
+_C = 8.0  # RG-LRU gate sharpness constant
+
+
+def rg_lru(x, gates_a, gates_x, lam, h0=None):
+    """x: (b,l,w). gates: pre-activations (b,l,w). lam: (w,). Returns (y, h_last)."""
+    r = jax.nn.sigmoid(gates_a.astype(jnp.float32))
+    i = jax.nn.sigmoid(gates_x.astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(lam.astype(jnp.float32))[None, None, :] * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * x.astype(jnp.float32)
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rg_lru_step(h, x_t, ga_t, gx_t, lam):
+    """One decode step. h: (b,w); x_t/gates: (b,w)."""
+    r = jax.nn.sigmoid(ga_t.astype(jnp.float32))
+    i = jax.nn.sigmoid(gx_t.astype(jnp.float32))
+    a = jnp.exp(-_C * jax.nn.softplus(lam.astype(jnp.float32))[None, :] * r)
+    h = a * h.astype(jnp.float32) + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * i * x_t.astype(jnp.float32)
+    return h, h
+
+
+class RecurrentGemmaLM(cm.ShardingMixin):
+    PATTERN = ("r", "r", "a")
+    SEQ_SHARD = False   # RG-LRU associative scan runs over the seq dim
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh | None = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.w = cfg.lru_width or cfg.d_model
+        kinds = []
+        while len(kinds) < cfg.n_layers:
+            kinds.extend(self.PATTERN)
+        self.kinds = tuple(kinds[: cfg.n_layers])
+        self.n_blocks = cfg.n_layers // len(self.PATTERN)
+        self.n_tail = cfg.n_layers - self.n_blocks * len(self.PATTERN)
+        assert all(k == "r" for k in self.kinds[self.n_blocks * 3:]), self.kinds
+
+    # -- params ----------------------------------------------------------------
+    def _rec_params(self, ini, n, tag):
+        cfg, D, w = self.cfg, self.cfg.d_model, self.w
+        return {
+            "ln": ini.zeros((n, D)),
+            "wx": ini(f"{tag}.wx", (n, D, w)),
+            "wy": ini(f"{tag}.wy", (n, D, w)),
+            "conv_w": ini(f"{tag}.conv", (n, w, cfg.conv1d_size), scale=0.5),
+            "wa": ini(f"{tag}.wa", (n, w, w), scale=1.0 / math.sqrt(w)),
+            "ba": ini.zeros((n, w)),
+            "wxg": ini(f"{tag}.wxg", (n, w, w), scale=1.0 / math.sqrt(w)),
+            "bxg": ini.zeros((n, w)),
+            "lam": ini.ones((n, w)),
+            "wo": ini(f"{tag}.wo", (n, w, D), scale=1.0 / math.sqrt(w)),
+            "ln2": ini.zeros((n, D)),
+            "mi": ini(f"{tag}.mi", (n, D, cfg.d_ff)),
+            "mg": ini(f"{tag}.mg", (n, D, cfg.d_ff)),
+            "mo": ini(f"{tag}.mo", (n, cfg.d_ff, D), scale=1.0 / math.sqrt(cfg.d_ff)),
+        }
+
+    def _attn_params(self, ini, n, tag):
+        cfg, D = self.cfg, self.cfg.d_model
+        H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        return {
+            "ln": ini.zeros((n, D)),
+            "wq": ini(f"{tag}.wq", (n, D, H, hd)),
+            "wk": ini(f"{tag}.wk", (n, D, KVH, hd)),
+            "wv": ini(f"{tag}.wv", (n, D, KVH, hd)),
+            "wo": ini(f"{tag}.wo", (n, H, hd, D), scale=1.0 / math.sqrt(H * hd)),
+            "ln2": ini.zeros((n, D)),
+            "mi": ini(f"{tag}.mi", (n, D, cfg.d_ff)),
+            "mg": ini(f"{tag}.mg", (n, D, cfg.d_ff)),
+            "mo": ini(f"{tag}.mo", (n, cfg.d_ff, D), scale=1.0 / math.sqrt(cfg.d_ff)),
+        }
+
+    def init_params(self, seed: int = 0) -> Any:
+        cfg = self.cfg
+        ini = cm.Initializer(seed, cfg.dtype)
+        params = {
+            "embed": ini("embed", (cfg.vocab, cfg.d_model), scale=1.0),
+            "final_norm": ini.zeros((cfg.d_model,)),
+            "rec0": self._rec_params(ini, self.n_blocks, "rec0"),
+            "rec1": self._rec_params(ini, self.n_blocks, "rec1"),
+            "attn": self._attn_params(ini, self.n_blocks, "attn"),
+        }
+        if self.n_tail:
+            params["tail"] = self._rec_params(ini, self.n_tail, "tail")
+        return params
+
+    def _rec_specs(self, mesh):
+        cfg = self.cfg
+        d_dat = cm.shardable(cfg.d_model, "data", mesh)
+        w_m = cm.shardable(self.w, MODEL, mesh)
+        f_m = cm.shardable(cfg.d_ff, MODEL, mesh)
+        return {
+            "ln": P(None, None), "ln2": P(None, None),
+            "wx": P(None, d_dat, w_m), "wy": P(None, d_dat, w_m),
+            "conv_w": P(None, w_m, None),
+            "wa": P(None, None, w_m), "ba": P(None, w_m),
+            "wxg": P(None, None, w_m), "bxg": P(None, w_m),
+            "lam": P(None, w_m),
+            "wo": P(None, w_m, d_dat),
+            "mi": P(None, d_dat, f_m), "mg": P(None, d_dat, f_m),
+            "mo": P(None, f_m, d_dat),
+        }
+
+    def param_specs(self, mesh: Mesh) -> Any:
+        cfg = self.cfg
+        d_dat = cm.shardable(cfg.d_model, "data", mesh)
+        attn = {
+            "ln": P(None, None), "ln2": P(None, None),
+            "wq": P(None, d_dat, cm.shardable(cfg.n_heads, MODEL, mesh), None),
+            "wk": P(None, d_dat, cm.shardable(cfg.n_kv_heads, MODEL, mesh), None),
+            "wv": P(None, d_dat, cm.shardable(cfg.n_kv_heads, MODEL, mesh), None),
+            "wo": P(None, cm.shardable(cfg.n_heads, MODEL, mesh), None, d_dat),
+            "mi": P(None, d_dat, cm.shardable(cfg.d_ff, MODEL, mesh)),
+            "mg": P(None, d_dat, cm.shardable(cfg.d_ff, MODEL, mesh)),
+            "mo": P(None, cm.shardable(cfg.d_ff, MODEL, mesh), d_dat),
+        }
+        specs = {
+            "embed": P(cm.shardable(cfg.vocab, MODEL, mesh), d_dat),
+            "final_norm": P(None),
+            "rec0": self._rec_specs(mesh),
+            "rec1": self._rec_specs(mesh),
+            "attn": attn,
+        }
+        if self.n_tail:
+            specs["tail"] = self._rec_specs(mesh)
+        return specs
+
+    # -- sub-layer applications ---------------------------------------------
+    def _mlp(self, x, lp):
+        h = cm.rms_norm(x, lp["ln2"])
+        g = cm.act_fn("gelu")(jnp.einsum("bld,df->blf", h, lp["mg"]))
+        u = jnp.einsum("bld,df->blf", h, lp["mi"])
+        return x + jnp.einsum("blf,fd->bld", g * u, lp["mo"])
+
+    def _rec_layer(self, x, lp, conv_cache=None, h0=None):
+        """Returns (x_out, new_conv_cache, h_last)."""
+        h = cm.rms_norm(x, lp["ln"])
+        xb = jnp.einsum("bld,dw->blw", h, lp["wx"])
+        yb = cm.act_fn("gelu")(jnp.einsum("bld,dw->blw", h, lp["wy"]))
+        xb, new_conv = _causal_conv(xb, lp["conv_w"], cache=conv_cache)
+        ga = jnp.einsum("blw,wu->blu", xb, lp["wa"]) + lp["ba"]
+        gx = jnp.einsum("blw,wu->blu", xb, lp["wxg"]) + lp["bxg"]
+        hseq, h_last = rg_lru(xb, ga, gx, lp["lam"], h0=h0)
+        out = jnp.einsum("blw,wd->bld", hseq.astype(x.dtype) * yb, lp["wo"])
+        return self._res(self._mlp(x + out, lp)), new_conv, h_last
+
+    def _attn_layer(self, x, lp, q_pos, kv=None, kv_pos=None):
+        cfg = self.cfg
+        h = cm.rms_norm(x, lp["ln"])
+        q = jnp.einsum("bsd,dnh->bsnh", h, lp["wq"])
+        k = jnp.einsum("bsd,dkh->bskh", h, lp["wk"])
+        v = jnp.einsum("bsd,dkh->bskh", h, lp["wv"])
+        q = cm.rope(q, q_pos, cfg.rope_theta)
+        k = cm.rope(k, q_pos, cfg.rope_theta)
+        if kv is None:
+            kk, vv, kpos = k, v, q_pos
+        else:
+            kk, vv, kpos = kv
+        o = cm.attention(q, kk, vv, causal=True, q_positions=q_pos,
+                         kv_positions=kpos, window=cfg.window)
+        o = jnp.einsum("bsnh,nhd->bsd", o, lp["wo"])
+        return self._res(self._mlp(x + o, lp)), (k, v)
+
+    # -- train ------------------------------------------------------------------
+    def hidden(self, params, tokens):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = self._lookup(params["embed"], tokens).astype(cfg.dtype)
+        x = self._res(x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype))
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+        def body(carry, blk):
+            x = carry
+            x, _, _ = self._rec_layer(x, blk["rec0"])
+            x, _, _ = self._rec_layer(x, blk["rec1"])
+            x, _ = self._attn_layer(x, blk["attn"], pos)
+            return x, None
+
+        blocks = {"rec0": params["rec0"], "rec1": params["rec1"], "attn": params["attn"]}
+        x, _ = cm.scan(cm.maybe_remat(body, cfg), x, blocks)
+        if self.n_tail:
+            def tail_body(carry, lp):
+                y, _, _ = self._rec_layer(carry, lp)
+                return y, None
+            x, _ = cm.scan(cm.maybe_remat(tail_body, cfg), x, params["tail"])
+        return cm.rms_norm(x, params["final_norm"])
+
+    def logits(self, params, tokens):
+        x = self.hidden(params, tokens)
+        return jnp.einsum("bld,vd->blv", x, params["embed"].astype(self.cfg.dtype))
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        h = self.hidden(params, tokens[:, :-1])
+        return cm.chunked_xent(h, self._out_w(params),
+                               tokens[:, 1:], final_cap=self.cfg.final_softcap)
+
+    def _out_w(self, params):
+        w = params["embed"].T.astype(self.cfg.dtype)
+        if self.mesh is not None:
+            w = cm.constrain(w, self.mesh,
+                             P(None, cm.shardable(self.cfg.vocab, MODEL, self.mesh)))
+        return w
+
+    # -- decode -------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        cfg = self.cfg
+        nb, w, k = self.n_blocks, self.w, cfg.conv1d_size
+        T = min(cfg.window, max_len)
+        cache = {
+            "h0": jnp.zeros((nb, batch, w), jnp.float32),
+            "c0": jnp.zeros((nb, batch, k - 1, w), cfg.dtype),
+            "h1": jnp.zeros((nb, batch, w), jnp.float32),
+            "c1": jnp.zeros((nb, batch, k - 1, w), cfg.dtype),
+            "ak": jnp.zeros((nb, batch, T, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+            "av": jnp.zeros((nb, batch, T, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+            "ap": jnp.full((nb, batch, T), -1, jnp.int32),
+        }
+        if self.n_tail:
+            cache["ht"] = jnp.zeros((self.n_tail, batch, w), jnp.float32)
+            cache["ct"] = jnp.zeros((self.n_tail, batch, k - 1, w), cfg.dtype)
+        return cache
+
+    def cache_specs(self, mesh: Mesh, batch: int, max_len: int) -> Any:
+        cfg = self.cfg
+        import math as _m
+        b_axes = cm.batch_axes(mesh)
+        bs = b_axes if isinstance(b_axes, tuple) else ((b_axes,) if b_axes else ())
+        sizes = {a: mesh.shape[a] for a in mesh.axis_names}
+        b = b_axes if batch % max(1, _m.prod(sizes[a] for a in bs)) == 0 else None
+        w_m = cm.shardable(self.w, MODEL, mesh)
+        T = min(cfg.window, max_len)
+        kv = cm.kv_cache_spec(mesh, batch, T, extra=(None, None))
+        specs = {
+            "h0": P(None, b, w_m), "c0": P(None, b, None, w_m),
+            "h1": P(None, b, w_m), "c1": P(None, b, None, w_m),
+            "ak": kv, "av": kv, "ap": cm.kv_cache_spec(mesh, batch, T),
+        }
+        if self.n_tail:
+            specs["ht"] = P(None, b, w_m)
+            specs["ct"] = P(None, b, None, w_m)
+        return specs
+
+    def _rec_step(self, x, lp, h0, conv):
+        """x: (B,1,D). Returns (x_out, h_new, conv_new)."""
+        h = cm.rms_norm(x, lp["ln"])
+        xb = jnp.einsum("bld,dw->blw", h, lp["wx"])
+        yb = cm.act_fn("gelu")(jnp.einsum("bld,dw->blw", h, lp["wy"]))
+        xb, new_conv = _causal_conv(xb, lp["conv_w"], cache=conv)
+        ga = jnp.einsum("blw,wu->blu", xb, lp["wa"]) + lp["ba"]
+        gx = jnp.einsum("blw,wu->blu", xb, lp["wxg"]) + lp["bxg"]
+        h_new, hs = rg_lru_step(h0, xb[:, 0], ga[:, 0], gx[:, 0], lp["lam"])
+        out = jnp.einsum("blw,wd->bld", hs[:, None].astype(x.dtype) * yb, lp["wo"])
+        return self._mlp(x + out, lp), h_new, new_conv
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = self._lookup(params["embed"], tokens).astype(cfg.dtype)
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        q_pos = pos[:, None]
+
+        from repro.models.transformer import DenseLM  # cache-write helper
+
+        def body(carry, xs):
+            x = carry
+            new = {}
+            x, new["h0"], new["c0"] = self._rec_step(x, xs["rec0"], xs["h0"], xs["c0"])
+            x, new["h1"], new["c1"] = self._rec_step(x, xs["rec1"], xs["h1"], xs["c1"])
+            lp = xs["attn"]
+            T = xs["ak"].shape[1]
+            slot = pos % T
+            h = cm.rms_norm(x, lp["ln"])
+            q = jnp.einsum("bsd,dnh->bsnh", h, lp["wq"])
+            k = jnp.einsum("bsd,dkh->bskh", h, lp["wk"])
+            v = jnp.einsum("bsd,dkh->bskh", h, lp["wv"])
+            q = cm.rope(q, q_pos, cfg.rope_theta)
+            k = cm.rope(k, q_pos, cfg.rope_theta)
+            ck, cv, cp = DenseLM._cache_write(xs["ak"], xs["av"], xs["ap"], k, v, pos, slot)
+            o = cm.attention(q, ck, cv, causal=True, q_positions=q_pos,
+                             kv_positions=cp, window=cfg.window)
+            o = jnp.einsum("bsnh,nhd->bsd", o, lp["wo"])
+            x = self._mlp(x + o, lp)
+            new["ak"], new["av"], new["ap"] = ck, cv, cp
+            return x, new
+
+        xs = {"rec0": params["rec0"], "rec1": params["rec1"], "attn": params["attn"],
+              "h0": cache["h0"], "c0": cache["c0"], "h1": cache["h1"], "c1": cache["c1"],
+              "ak": cache["ak"], "av": cache["av"], "ap": cache["ap"]}
+        x, new_cache = cm.scan(body, x, xs)
+        if self.n_tail:
+            def tail_body(carry, xs):
+                x = carry
+                x, hn, cn = self._rec_step(x, xs["lp"], xs["h"], xs["c"])
+                return x, {"h": hn, "c": cn}
+            x, tail_new = cm.scan(
+                tail_body, x, {"lp": params["tail"], "h": cache["ht"], "c": cache["ct"]})
+            new_cache = dict(new_cache)
+            new_cache["ht"], new_cache["ct"] = tail_new["h"], tail_new["c"]
+        x = cm.rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bld,vd->blv", x, params["embed"].astype(cfg.dtype))
+        return cm.softcap(logits, cfg.final_softcap), new_cache

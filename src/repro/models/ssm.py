@@ -1,0 +1,278 @@
+"""Mamba-2 (state-space duality / SSD) language model.
+
+Structural rhyme with the paper (DESIGN.md §6): SSD *is* a chunking
+algorithm — the sequence is cut into chunks; intra-chunk work becomes dense
+matmuls (MXU-friendly), inter-chunk work reduces to a tiny state recurrence —
+the same "cut a long transfer into chunks to fill parallel units" move Globus
+makes for files. The chunk length trades MXU utilization (bigger chunks)
+against the O(Q^2) intra-chunk term, mirroring Fig. 6's chunk-size sweet spot.
+
+Faithful to the minimal-SSD reference: inputs folded as (x*dt, A*dt, B, C);
+depthwise causal conv over (x, B, C); gated RMSNorm before out-projection;
+D skip connection. Decode carries (conv window, SSM state) per layer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig
+from repro.distributed.mesh import MODEL
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """log-decay matrix: out[..., i, j] = sum_{k=j+1..i} a[..., k], -inf for j>i."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # (..., i, j) = cs_i - cs_j
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, a, B, C, chunk: int, h0=None):
+    """SSD dual form. x:(b,l,h,p)  a:(b,l,h) log-decay  B,C:(b,l,n).
+
+    Returns (y (b,l,h,p), final_state (b,h,p,n)). Single B/C group
+    (mamba2 ngroups=1) broadcast over heads.
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-l) % chunk
+    if pad:  # causal: zero-pad the tail, outputs for real positions unchanged
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        out, last = ssd_chunked(x, a, B, C, chunk, h0)
+        return out[:, :l], last
+    c = l // chunk
+    xq = x.reshape(b, c, chunk, h, p)
+    aq = a.reshape(b, c, chunk, h)
+    Bq = B.reshape(b, c, chunk, n)
+    Cq = C.reshape(b, c, chunk, n)
+
+    acs = jnp.cumsum(aq.astype(jnp.float32), axis=2)     # (b,c,q,h) f32 decays
+    # 1) intra-chunk (dense, MXU): Y_diag[q] = sum_{s<=q} C_q.B_s L[q,s] x_s
+    L = jnp.exp(_segsum(aq.astype(jnp.float32).transpose(0, 1, 3, 2)))
+    G = jnp.einsum("bcqn,bcsn->bcqs", Cq, Bq)            # (b,c,q,s)
+    M = (G[:, :, None] * L.astype(G.dtype))              # (b,c,h,q,s)
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp", M, xq).astype(jnp.float32)
+
+    # 2) per-chunk end states
+    decay_tail = jnp.exp(acs[:, :, -1:, :] - acs)        # (b,c,q,h)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                        Bq.astype(jnp.float32), decay_tail, xq.astype(jnp.float32))
+
+    # 3) inter-chunk recurrence (tiny scan over chunk states)
+    chunk_decay = jnp.exp(acs[:, :, -1, :])              # (b,c,h)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), states.dtype)
+
+    def step(carry, inp):
+        st, dec = inp                                    # (b,h,p,n), (b,h)
+        new = st + dec[..., None, None] * carry
+        return new, carry                                # emit state BEFORE chunk
+
+    last, state_in = cm.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    state_in = state_in.transpose(1, 0, 2, 3, 4)         # (b,c,h,p,n)
+
+    # 4) inter-chunk contribution
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                       Cq.astype(jnp.float32), state_in, jnp.exp(acs))
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, last
+
+
+def ssd_step(state, x_t, a_t, B_t, C_t):
+    """One decode step. state:(b,h,p,n) x_t:(b,h,p) a_t:(b,h) B_t,C_t:(b,n)."""
+    decay = jnp.exp(a_t)[..., None, None]
+    state = decay * state + jnp.einsum("bhp,bn->bhpn", x_t, B_t)
+    y = jnp.einsum("bhpn,bn->bhp", state, C_t)
+    return state, y
+
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv. x:(b,l,d) w:(d,k). cache:(b,k-1,d) prev inputs."""
+    k = w.shape[1]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache
+    xp = jnp.concatenate([pad, x], axis=1)               # (b, l+k-1, d)
+    out = sum(xp[:, i : i + x.shape[1]] * w[:, i] for i in range(k))
+    new_cache = xp[:, -(k - 1):, :] if k > 1 else pad
+    return out, new_cache
+
+
+class Mamba2LM(cm.ShardingMixin):
+    SEQ_SHARD = False   # SSD scans over seq; shard batch + inner dims instead
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh | None = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.d_inner = cfg.d_model * cfg.ssm_expand
+        self.nheads = self.d_inner // cfg.ssm_head_dim
+        self.n_state = cfg.ssm_state
+
+    # -- params ---------------------------------------------------------------
+    def init_params(self, seed: int = 0) -> Any:
+        cfg = self.cfg
+        ini = cm.Initializer(seed, cfg.dtype)
+        L, D, di, nh, ns = cfg.n_layers, cfg.d_model, self.d_inner, self.nheads, self.n_state
+        conv_d = di + 2 * ns
+        blocks = {
+            "ln": ini.zeros((L, D)),
+            "w_in": ini("w_in", (L, D, 2 * di + 2 * ns + nh)),
+            "conv_w": ini("conv_w", (L, conv_d, cfg.ssm_conv), scale=0.5),
+            "A_log": jnp.zeros((L, nh), cfg.dtype) + jnp.log(
+                jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)).astype(cfg.dtype)[None],
+            "D": ini.ones((L, nh)),
+            "dt_bias": ini.zeros((L, nh)),
+            "norm_scale": ini.zeros((L, di)),
+            "w_out": ini("w_out", (L, di, D), scale=1.0 / math.sqrt(di)),
+        }
+        return {
+            "embed": ini("embed", (cfg.vocab, D), scale=1.0),
+            "final_norm": ini.zeros((D,)),
+            "blocks": blocks,
+        }
+
+    def param_specs(self, mesh: Mesh) -> Any:
+        cfg = self.cfg
+        d_dat = cm.shardable(cfg.d_model, "data", mesh)
+        di_m = cm.shardable(self.d_inner, MODEL, mesh)
+        return {
+            "embed": P(cm.shardable(cfg.vocab, MODEL, mesh), d_dat),
+            "final_norm": P(None),
+            "blocks": {
+                "ln": P(None, None),
+                "w_in": P(None, d_dat, None),
+                "conv_w": P(None, None, None),
+                "A_log": P(None, None),
+                "D": P(None, None),
+                "dt_bias": P(None, None),
+                "norm_scale": P(None, di_m),
+                "w_out": P(None, di_m, d_dat),
+            },
+        }
+
+    # -- shared projections ----------------------------------------------------
+    def _split_proj(self, h, lp):
+        cfg = self.cfg
+        di, nh, ns = self.d_inner, self.nheads, self.n_state
+        zxbcdt = jnp.einsum("bld,de->ble", h, lp["w_in"])
+        z, xin, Bc, Cc, dt = jnp.split(
+            zxbcdt, [di, 2 * di, 2 * di + ns, 2 * di + 2 * ns], axis=-1)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+        return z, xin, Bc, Cc, dt
+
+    def _finish(self, y, z, x_res, dt, lp):
+        """Gated norm + D-skip + out projection. y:(b,l,h,p)."""
+        cfg = self.cfg
+        nh, hd = self.nheads, cfg.ssm_head_dim
+        b, l = y.shape[0], y.shape[1]
+        xh = x_res.reshape(b, l, nh, hd)
+        y = y + lp["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, l, self.d_inner).astype(cfg.dtype)
+        y = cm.rms_norm(y * jax.nn.silu(z), lp["norm_scale"])
+        return jnp.einsum("ble,ed->bld", y, lp["w_out"])
+
+    # -- train forward -----------------------------------------------------------
+    def hidden(self, params, tokens):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = self._res(self._lookup(params["embed"], tokens).astype(cfg.dtype))
+        nh, hd, ns = self.nheads, cfg.ssm_head_dim, self.n_state
+
+        def body(carry, lp):
+            x = carry
+            h = cm.rms_norm(x, lp["ln"])
+            z, xin, Bc, Cc, dt = self._split_proj(h, lp)
+            conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+            conv_out, _ = _causal_conv(conv_in, lp["conv_w"])
+            conv_out = jax.nn.silu(conv_out)
+            xc, Bc, Cc = jnp.split(conv_out, [self.d_inner, self.d_inner + ns], axis=-1)
+            A = -jnp.exp(lp["A_log"].astype(jnp.float32))           # (nh,)
+            a = dt * A[None, None, :]                                # (b,l,nh)
+            ssd_dt = jnp.bfloat16 if cfg.ssm_bf16 else jnp.float32
+            xh = xc.reshape(B, -1, nh, hd).astype(jnp.float32)
+            xdt = (xh * dt[..., None]).astype(ssd_dt)
+            y, _ = ssd_chunked(xdt, a, Bc.astype(ssd_dt), Cc.astype(ssd_dt),
+                               chunk=min(cfg.ssm_chunk, xh.shape[1]))
+            out = self._finish(y, z, xc, dt, lp)
+            return self._res(x + out), None
+
+        x, _ = cm.scan(cm.maybe_remat(body, cfg), x, params["blocks"])
+        return cm.rms_norm(x, params["final_norm"])
+
+    def logits(self, params, tokens):
+        x = self.hidden(params, tokens)
+        return jnp.einsum("bld,vd->blv", x, params["embed"].astype(self.cfg.dtype))
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        h = self.hidden(params, tokens[:, :-1])
+        return cm.chunked_xent(h, self._out_w(params), tokens[:, 1:])
+
+    def _out_w(self, params):
+        w = params["embed"].T.astype(self.cfg.dtype)
+        if self.mesh is not None:
+            w = cm.constrain(w, self.mesh,
+                             P(None, cm.shardable(self.cfg.vocab, MODEL, self.mesh)))
+        return w
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        cfg = self.cfg
+        conv_d = self.d_inner + 2 * self.n_state
+        return {
+            "ssm": jnp.zeros((cfg.n_layers, batch, self.nheads,
+                              cfg.ssm_head_dim, self.n_state), jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_d), cfg.dtype),
+        }
+
+    def cache_specs(self, mesh: Mesh, batch: int, max_len: int) -> Any:
+        b_axes = cm.batch_axes(mesh)
+        sizes = {a: mesh.shape[a] for a in mesh.axis_names}
+        import math as _m
+        bs = b_axes if isinstance(b_axes, tuple) else ((b_axes,) if b_axes else ())
+        b = b_axes if batch % max(1, _m.prod(sizes[a] for a in bs)) == 0 else None
+        nh_m = cm.shardable(self.nheads, MODEL, mesh)
+        di_m = cm.shardable(self.d_inner + 2 * self.n_state, MODEL, mesh)
+        return {"ssm": P(None, b, nh_m, None, None), "conv": P(None, b, None, di_m)}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = self._lookup(params["embed"], tokens).astype(cfg.dtype)  # (B,1,D)
+        nh, hd, ns = self.nheads, cfg.ssm_head_dim, self.n_state
+
+        def body(carry, xs):
+            x = carry
+            lp, ssm, conv = xs["blk"], xs["ssm"], xs["conv"]
+            h = cm.rms_norm(x, lp["ln"])
+            z, xin, Bc, Cc, dt = self._split_proj(h, lp)
+            conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)        # (B,1,conv_d)
+            conv_out, new_conv = _causal_conv(conv_in, lp["conv_w"], cache=conv)
+            conv_out = jax.nn.silu(conv_out)
+            xc, Bc, Cc = jnp.split(conv_out, [self.d_inner, self.d_inner + ns], axis=-1)
+            A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+            a = (dt * A[None, None, :])[:, 0]                        # (B,nh)
+            xh = xc.reshape(B, nh, hd).astype(jnp.float32)
+            xdt = xh * dt[:, 0, :, None]
+            new_ssm, y = ssd_step(ssm, xdt, a, Bc[:, 0].astype(jnp.float32),
+                                  Cc[:, 0].astype(jnp.float32))
+            out = self._finish(y[:, None], z, xc, dt, lp)
+            return x + out, {"ssm": new_ssm, "conv": new_conv}
+
+        xs = {"blk": params["blocks"], **cache}
+        x, new_cache = cm.scan(body, x, xs)
+        x = cm.rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bld,vd->blv", x, params["embed"].astype(cfg.dtype))
+        return logits, new_cache

@@ -1,0 +1,311 @@
+"""Dense decoder-only transformer LM (gemma, gemma2, yi, mistral-nemo, ...).
+
+Layers are grouped into blocks of ``len(attn_pattern)`` (gemma2's "lg" ->
+13 blocks of local+global) and executed with jax.lax.scan over stacked block
+params; the scan body is remat'ed. Decode keeps per-kind KV caches: local
+layers get a ring buffer of ``window`` slots, global layers a full-length
+cache — each slot also records its absolute position, so masking (validity,
+causality, window) is uniform for both.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models.common import ModelConfig
+from repro.distributed.mesh import MODEL
+
+
+class DenseLM(cm.ShardingMixin):
+    def __init__(self, cfg: ModelConfig, mesh: Mesh | None = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.pod_manual = False   # set by launch.steps for chunked-pod training
+        pat = cfg.attn_pattern
+        assert cfg.n_layers % len(pat) == 0, (cfg.name, cfg.n_layers, pat)
+        self.n_blocks = cfg.n_layers // len(pat)
+        self.pattern = pat
+
+    # -- params ------------------------------------------------------------
+    def init_params(self, seed: int = 0) -> Any:
+        cfg = self.cfg
+        ini = cm.Initializer(seed, cfg.dtype)
+        nb, D, H, KVH, hd, F = (self.n_blocks, cfg.d_model, cfg.n_heads,
+                                cfg.n_kv_heads, cfg.hd, cfg.d_ff)
+        blocks: dict[str, Any] = {}
+        for i in range(len(self.pattern)):
+            lp = {
+                "ln1": ini.zeros((nb, D)),
+                "ln2": ini.zeros((nb, D)),
+                "wq": ini(f"b{i}.wq", (nb, D, H, hd)),
+                "wk": ini(f"b{i}.wk", (nb, D, KVH, hd)),
+                "wv": ini(f"b{i}.wv", (nb, D, KVH, hd)),
+                "wo": ini(f"b{i}.wo", (nb, H, hd, D), scale=1 / math.sqrt(H * hd)),
+                "wi": ini(f"b{i}.wi", (nb, D, F)),
+                "wg": ini(f"b{i}.wg", (nb, D, F)),
+                "wmo": ini(f"b{i}.wmo", (nb, F, D), scale=1 / math.sqrt(F)),
+            }
+            if cfg.post_norms:
+                lp["post_ln1"] = ini.zeros((nb, D))
+                lp["post_ln2"] = ini.zeros((nb, D))
+            blocks[str(i)] = lp
+        params = {
+            "embed": ini("embed", (cfg.vocab, D), scale=1.0),
+            "final_norm": ini.zeros((D,)),
+            "blocks": blocks,
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = ini("unembed", (D, cfg.vocab))
+        return params
+
+    def param_specs(self, mesh: Mesh, *, serve: bool = False) -> Any:
+        cfg = self.cfg
+        sh = lambda n, ax: cm.shardable(n, ax, mesh)  # noqa: E731
+        if serve:
+            return self._serve_param_specs(mesh)
+        m_head = sh(cfg.n_heads, MODEL)
+        m_kv = sh(cfg.n_kv_heads, MODEL)
+        m_ff = sh(cfg.d_ff, MODEL)
+        m_voc = sh(cfg.vocab, MODEL)
+        d_dat = cm.shardable(cfg.d_model, "data", mesh)
+        lp = {
+            "ln1": P(None, None),
+            "ln2": P(None, None),
+            "wq": P(None, d_dat, m_head, None),
+            "wk": P(None, d_dat, m_kv, None),
+            "wv": P(None, d_dat, m_kv, None),
+            "wo": P(None, m_head, None, d_dat),
+            "wi": P(None, d_dat, m_ff),
+            "wg": P(None, d_dat, m_ff),
+            "wmo": P(None, m_ff, d_dat),
+        }
+        if cfg.post_norms:
+            lp["post_ln1"] = P(None, None)
+            lp["post_ln2"] = P(None, None)
+        specs = {
+            "embed": P(m_voc, d_dat),
+            "final_norm": P(None),
+            "blocks": {str(i): dict(lp) for i in range(len(self.pattern))},
+        }
+        if not cfg.tie_embeddings:
+            specs["unembed"] = P(d_dat, m_voc)
+        return specs
+
+    def _serve_param_specs(self, mesh: Mesh) -> Any:
+        """Weight-stationary decode sharding (§Perf hillclimb, yi-34b cell).
+
+        Training uses ZeRO-3: every step re-gathers FSDP-sharded weights —
+        fine when amortized over 1M-token batches, ruinous for one-token
+        decode steps (yi-34b: ~4 GB gathered per step). For serving, weights
+        shard only along *non-contracted* dims (head_dim / ffn / vocab) on
+        MODEL: matmuls then need no weight gathers at all; the partial-sum
+        all-reduces they emit are activation-sized (KBs at S=1).
+        """
+        cfg = self.cfg
+        hd_m = cm.shardable(cfg.hd, MODEL, mesh)
+        m_ff = cm.shardable(cfg.d_ff, MODEL, mesh)
+        m_voc = cm.shardable(cfg.vocab, MODEL, mesh)
+        lp = {
+            "ln1": P(None, None), "ln2": P(None, None),
+            "wq": P(None, None, None, hd_m),
+            "wk": P(None, None, None, hd_m),
+            "wv": P(None, None, None, hd_m),
+            "wo": P(None, None, hd_m, None),
+            "wi": P(None, None, m_ff),
+            "wg": P(None, None, m_ff),
+            "wmo": P(None, m_ff, None),
+        }
+        if cfg.post_norms:
+            lp["post_ln1"] = P(None, None)
+            lp["post_ln2"] = P(None, None)
+        specs = {
+            "embed": P(m_voc, None),
+            "final_norm": P(None),
+            "blocks": {str(i): dict(lp) for i in range(len(self.pattern))},
+        }
+        if not cfg.tie_embeddings:
+            specs["unembed"] = P(None, m_voc)
+        return specs
+
+    # -- shared layer application -------------------------------------------
+    def _attn(self, x, lp, kind, q_pos, kv, kv_pos):
+        """One attention sub-layer. kv: (k, v) override for decode (cached)."""
+        cfg = self.cfg
+        b = self._batch()
+        h = cm.rms_norm(x, lp["ln1"])
+        q = jnp.einsum("bsd,dnh->bsnh", h, lp["wq"])
+        k_new = jnp.einsum("bsd,dkh->bskh", h, lp["wk"])
+        v_new = jnp.einsum("bsd,dkh->bskh", h, lp["wv"])
+        q = cm.rope(q, q_pos, cfg.rope_theta)
+        k_new = cm.rope(k_new, q_pos, cfg.rope_theta)
+        # Context-parallel attention: q seq-sharded over MODEL, K/V full-seq.
+        # Head sharding would have to survive the (H) -> (KVH, G) GQA reshape,
+        # which requires tp | KVH — never true for the assigned archs on a
+        # 16-wide model axis; GSPMD then replicates full-seq q/logits, which
+        # the dry-run showed costs 30x in gathered bytes. CP splits attention
+        # FLOPs and logits across the axis for every head count. (Head
+        # sharding of the *projections* is unchanged — it lives in the weight
+        # specs.)
+        if self.mesh is not None:
+            q = self._constrain(q, P(b, self._seq(q.shape[1]), None, None))
+            k_new = self._constrain(k_new, P(b, None, None, None))
+            v_new = self._constrain(v_new, P(b, None, None, None))
+        if kv is None:
+            k, v, kv_positions = k_new, v_new, q_pos
+        else:
+            k, v, kv_positions = kv
+        o = cm.attention(
+            q, k, v, causal=True, q_positions=q_pos, kv_positions=kv_positions,
+            window=cfg.window if kind == "l" else None,
+            logit_cap=cfg.attn_softcap,
+        )
+        o = jnp.einsum("bsnh,nhd->bsd", o, lp["wo"])
+        if cfg.post_norms:
+            o = cm.rms_norm(o, lp["post_ln1"])
+        return self._res(x + o), (k_new, v_new)
+
+    def _mlp(self, x, lp):
+        cfg = self.cfg
+        b = self._batch()
+        h = cm.rms_norm(x, lp["ln2"])
+        g = cm.act_fn(cfg.act)(jnp.einsum("bsd,df->bsf", h, lp["wg"]))
+        u = jnp.einsum("bsd,df->bsf", h, lp["wi"])
+        hh = self._constrain(g * u, P(b, None, cm.shardable(cfg.d_ff, MODEL, self.mesh)
+                                      if self.mesh else None))
+        m = jnp.einsum("bsf,fd->bsd", hh, lp["wmo"])
+        if cfg.post_norms:
+            m = cm.rms_norm(m, lp["post_ln2"])
+        return self._res(x + m)
+
+    # -- train forward -------------------------------------------------------
+    def hidden(self, params, tokens):
+        """Backbone: final-normed hidden states (B, S, D)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = self._lookup(params["embed"], tokens)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        x = self._res(x.astype(cfg.dtype))
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+        def body(carry, blk):
+            x = carry
+            for i, kind in enumerate(self.pattern):
+                x, _ = self._attn(x, blk[str(i)], kind, pos, None, None)
+                x = self._mlp(x, blk[str(i)])
+            return x, None
+
+        x, _ = cm.scan(cm.maybe_remat(body, cfg), x, params["blocks"])
+        return cm.rms_norm(x, params["final_norm"])
+
+    def _out_w(self, params):
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        w = w.astype(cfg.dtype)
+        if self.mesh is not None:
+            # vocab-sharded, d gathered ONCE — otherwise the chunked-xent scan
+            # re-gathers the d dim of a ~GB unembedding every seq chunk.
+            w = cm.constrain(w, self.mesh,
+                             P(None, cm.shardable(cfg.vocab, MODEL, self.mesh)))
+        return w
+
+    def logits(self, params, tokens):
+        x = self.hidden(params, tokens)
+        logits = jnp.einsum("bsd,dv->bsv", x, self._out_w(params))
+        return self._constrain(logits, P(self._batch(), None, MODEL))
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        h = self.hidden(params, tokens[:, :-1])
+        return cm.chunked_xent(h, self._out_w(params), tokens[:, 1:],
+                               final_cap=self.cfg.final_softcap)
+
+    # -- decode ----------------------------------------------------------------
+    def cache_len(self, kind: str, max_len: int) -> int:
+        return min(self.cfg.window, max_len) if kind == "l" else max_len
+
+    def init_cache(self, batch: int, max_len: int) -> Any:
+        cfg = self.cfg
+        nb, KVH, hd = self.n_blocks, cfg.n_kv_heads, cfg.hd
+        cache = {}
+        for i, kind in enumerate(self.pattern):
+            T = self.cache_len(kind, max_len)
+            cache[f"k{i}"] = jnp.zeros((nb, batch, T, KVH, hd), cfg.dtype)
+            cache[f"v{i}"] = jnp.zeros((nb, batch, T, KVH, hd), cfg.dtype)
+            cache[f"p{i}"] = jnp.full((nb, batch, T), -1, jnp.int32)
+        return cache
+
+    def cache_specs(self, mesh: Mesh, batch: int, max_len: int) -> Any:
+        specs = {}
+        for i, kind in enumerate(self.pattern):
+            T = self.cache_len(kind, max_len)
+            kv = cm.kv_cache_spec(mesh, batch, T, extra=(None, None))
+            specs[f"k{i}"] = kv
+            specs[f"v{i}"] = kv
+            specs[f"p{i}"] = cm.kv_cache_spec(mesh, batch, T)
+        return specs
+
+    @staticmethod
+    def _cache_write(cache_k, cache_v, cache_p, k_new, v_new, pos, slot):
+        """Write one token's K/V at per-batch slot. shapes: cache (B,T,KVH,hd)."""
+        def upd(c, n, s):
+            return jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
+        ck = jax.vmap(upd)(cache_k, k_new, slot)
+        cv = jax.vmap(upd)(cache_v, v_new, slot)
+        cp = jax.vmap(upd)(cache_p, pos[:, None], slot)
+        return ck, cv, cp
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B, 1) int32, pos: (B,) current absolute position.
+
+        Returns (logits (B,1,V), new_cache)."""
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = self._lookup(params["embed"], tokens)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        x = x.astype(cfg.dtype)
+        q_pos = pos[:, None]
+
+        def body(carry, xs):
+            x = carry
+            blk = xs["blk"]
+            new_cache = {}
+            for i, kind in enumerate(self.pattern):
+                T = xs[f"k{i}"].shape[1]
+                slot = pos % T   # ring slot for local windows; == pos for global
+                lp = blk[str(i)]
+                h = cm.rms_norm(x, lp["ln1"])
+                q = jnp.einsum("bsd,dnh->bsnh", h, lp["wq"])
+                k_new = jnp.einsum("bsd,dkh->bskh", h, lp["wk"])
+                v_new = jnp.einsum("bsd,dkh->bskh", h, lp["wv"])
+                q = cm.rope(q, q_pos, cfg.rope_theta)
+                k_new = cm.rope(k_new, q_pos, cfg.rope_theta)
+                ck, cv, cp = self._cache_write(
+                    xs[f"k{i}"], xs[f"v{i}"], xs[f"p{i}"], k_new, v_new, pos, slot
+                )
+                o = cm.attention(
+                    q, ck, cv, causal=True, q_positions=q_pos, kv_positions=cp,
+                    window=cfg.window if kind == "l" else None,
+                    logit_cap=cfg.attn_softcap,
+                )
+                o = jnp.einsum("bsnh,nhd->bsd", o, lp["wo"])
+                if cfg.post_norms:
+                    o = cm.rms_norm(o, lp["post_ln1"])
+                x = x + o
+                x = self._mlp(x, lp)
+                new_cache[f"k{i}"], new_cache[f"v{i}"], new_cache[f"p{i}"] = ck, cv, cp
+            return x, new_cache
+
+        xs = {"blk": params["blocks"], **cache}
+        x, new_cache = cm.scan(body, x, xs)
+        x = cm.rms_norm(x, params["final_norm"])
+        out_w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        logits = jnp.einsum("bsd,dv->bsv", x, out_w.astype(cfg.dtype))
+        logits = cm.softcap(logits, cfg.final_softcap)
+        return logits, new_cache

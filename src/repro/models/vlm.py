@@ -1,0 +1,56 @@
+"""InternVL2-style VLM: stubbed ViT frontend + InternLM2 (llama-arch) backbone.
+
+Per the assignment brief the vision tower is a stub: ``input_specs`` provides
+already-projected patch embeddings (B, n_vis_tokens, d_model) — InternViT +
+the MLP projector's output. They are prepended to the text embeddings as a
+causal prefix; the loss is masked to text positions. Decode is inherited
+unchanged from DenseLM (the visual prefix simply occupies the first
+n_vis_tokens KV-cache slots after prefill).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models.transformer import DenseLM
+
+
+class InternVLM(DenseLM):
+    def hidden_mm(self, params, tokens, vis_embed):
+        cfg = self.cfg
+        B, S = tokens.shape
+        Nv = vis_embed.shape[1]
+        xt = self._lookup(params["embed"], tokens)
+        x = jnp.concatenate([vis_embed.astype(cfg.dtype), xt.astype(cfg.dtype)], axis=1)
+        x = self._res(x)
+        T = Nv + S
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+        def body(carry, blk):
+            x = carry
+            for i, kind in enumerate(self.pattern):
+                x, _ = self._attn(x, blk[str(i)], kind, pos, None, None)
+                x = self._mlp(x, blk[str(i)])
+            return x, None
+
+        x, _ = cm.scan(cm.maybe_remat(body, cfg), x, params["blocks"])
+        return cm.rms_norm(x, params["final_norm"])
+
+    def logits_mm(self, params, tokens, vis_embed):
+        x = self.hidden_mm(params, tokens, vis_embed)
+        return jnp.einsum("bsd,dv->bsv", x, self._out_w(params))
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        vis = batch["vis_embed"]
+        Nv = vis.shape[1]
+        h = self.hidden_mm(params, tokens[:, :-1], vis)
+        # text-only loss: positions [Nv-1, Nv+S-2) predict tokens[:, 1:]
+        h_text = h[:, Nv - 1 : -1] if Nv > 0 else h
+        return cm.chunked_xent(h_text[:, : tokens.shape[1] - 1], self._out_w(params),
+                               tokens[:, 1:])

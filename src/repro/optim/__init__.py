@@ -1,0 +1,4 @@
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig, OptState
+
+__all__ = ["adamw", "AdamWConfig", "OptState"]

@@ -1,0 +1,66 @@
+"""Property tests for chunk planning (core.chunker)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunker import MiB, plan_auto, plan_chunks, plan_for_array
+
+
+@given(
+    total=st.integers(0, 10**12),
+    movers=st.integers(1, 128),
+    depth=st.integers(1, 8),
+)
+@settings(max_examples=100, deadline=None)
+def test_plan_invariants(total, movers, depth):
+    plan = plan_chunks(total, movers, pipeline_depth=depth)
+    plan.validate()  # disjoint, ordered, exact coverage
+    assert plan.total_bytes == total
+    if total:
+        # every mover used when there are enough chunks
+        used = {c.mover for c in plan.chunks}
+        assert len(used) == min(movers, plan.n_chunks)
+
+
+@given(total=st.integers(1, 10**11), movers=st.integers(1, 64),
+       chunk=st.integers(1, 10**9))
+@settings(max_examples=100, deadline=None)
+def test_explicit_chunk_size(total, movers, chunk):
+    plan = plan_chunks(total, movers, chunk_bytes=chunk, min_chunk=1,
+                       max_chunk=10**12, alignment=1, max_chunks=4096)
+    plan.validate()
+    # requested size honored unless the max_chunks guard had to raise it
+    eff = max(chunk, -(-total // 4096))
+    assert all(c.length <= max(eff, 1) for c in plan.chunks)
+    assert plan.n_chunks <= 4096
+
+
+def test_heuristic_respects_paper_rules():
+    # enough chunks to keep movers*depth busy (paper 64*4=256 rule)...
+    plan = plan_chunks(500 * 10**9, 64, pipeline_depth=4)
+    assert plan.n_chunks >= 64 * 4
+    # ...but chunks not below min_chunk for small files: no chunking at all
+    small = plan_chunks(8 * MiB, 64)
+    assert small.n_chunks == 1
+    # alignment honored
+    plan = plan_chunks(10**9 + 3, 8, alignment=4)
+    assert all(c.offset % 4 == 0 for c in plan.chunks)
+
+
+def test_plan_auto_picks_simulated_optimum():
+    # cost model with a clear optimum at 200 MiB
+    def cost(chunk_bytes):
+        return abs(chunk_bytes - 200 * MiB) + 1.0
+    plan = plan_auto(10**11, 64, cost)
+    assert plan.chunk_bytes == 200 * MiB
+
+
+def test_plan_for_array_element_alignment():
+    plan = plan_for_array((4096, 4096), 2, movers=8)  # bf16 matrix
+    assert all(c.offset % 2 == 0 and c.length % 2 == 0 for c in plan.chunks[:-1])
+
+
+def test_invalid_args():
+    with pytest.raises(ValueError):
+        plan_chunks(-1, 4)
+    with pytest.raises(ValueError):
+        plan_chunks(10, 0)

@@ -1,0 +1,108 @@
+"""Property tests for the mergeable fingerprint algebra (core.integrity)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.integrity import (
+    BASES, Digest, EMPTY_DIGEST, P,
+    combine_at_offsets, fingerprint_bytes, merge_all, verify,
+)
+
+
+def brute(data: bytes) -> Digest:
+    hs = []
+    for r in BASES:
+        h = 0
+        for x in data:
+            h = (h * r + x) % P
+        hs.append(h)
+    return Digest(tuple(hs), len(data))
+
+
+@given(st.binary(min_size=0, max_size=4096))
+@settings(max_examples=80, deadline=None)
+def test_matches_reference_polynomial(data):
+    assert fingerprint_bytes(data) == brute(data)
+
+
+def test_block_boundaries_exact():
+    rng = np.random.default_rng(0)
+    for n in (0, 1, 65535, 65536, 65537, 2 * 65536 + 13):
+        d = rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+        assert fingerprint_bytes(d) == brute(d)
+
+
+@given(st.binary(min_size=0, max_size=2000), st.data())
+@settings(max_examples=60, deadline=None)
+def test_merge_law_split_anywhere(data, dd):
+    cut = dd.draw(st.integers(0, len(data)))
+    full = fingerprint_bytes(data)
+    left = fingerprint_bytes(data[:cut])
+    right = fingerprint_bytes(data[cut:])
+    assert left.merge(right) == full
+
+
+@given(st.lists(st.binary(min_size=0, max_size=300), min_size=1, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_merge_all_associative(parts):
+    whole = b"".join(parts)
+    assert merge_all(fingerprint_bytes(p) for p in parts) == fingerprint_bytes(whole)
+
+
+@given(st.lists(st.binary(min_size=1, max_size=200), min_size=1, max_size=8),
+       st.randoms())
+@settings(max_examples=50, deadline=None)
+def test_combine_out_of_order(parts, rnd):
+    whole = b"".join(parts)
+    offs = []
+    pos = 0
+    for p in parts:
+        offs.append((pos, fingerprint_bytes(p)))
+        pos += len(p)
+    rnd.shuffle(offs)
+    assert combine_at_offsets(offs, len(whole)) == fingerprint_bytes(whole)
+
+
+def test_combine_rejects_gaps_and_overlaps():
+    a = fingerprint_bytes(b"aaaa")
+    with pytest.raises(ValueError):
+        combine_at_offsets([(0, a), (5, a)], 9)       # gap at 4
+    with pytest.raises(ValueError):
+        combine_at_offsets([(0, a), (3, a)], 7)       # overlap
+    with pytest.raises(ValueError):
+        combine_at_offsets([(0, a)], 5)               # wrong total
+
+
+@given(st.binary(min_size=1, max_size=1000), st.data())
+@settings(max_examples=80, deadline=None)
+def test_detects_single_byte_corruption(data, dd):
+    i = dd.draw(st.integers(0, len(data) - 1))
+    delta = dd.draw(st.integers(1, 255))
+    bad = bytearray(data)
+    bad[i] = (bad[i] + delta) % 256
+    assert not verify(fingerprint_bytes(data), fingerprint_bytes(bytes(bad)))
+
+
+@given(st.binary(min_size=2, max_size=500), st.data())
+@settings(max_examples=50, deadline=None)
+def test_detects_swaps(data, dd):
+    i = dd.draw(st.integers(0, len(data) - 2))
+    if data[i] == data[i + 1]:
+        return
+    bad = bytearray(data)
+    bad[i], bad[i + 1] = bad[i + 1], bad[i]
+    assert fingerprint_bytes(bytes(bad)) != fingerprint_bytes(data)
+
+
+def test_length_always_carried():
+    # same residues would not suffice: zero-padding changes length, not hash 0
+    z1 = fingerprint_bytes(b"\x00" * 10)
+    z2 = fingerprint_bytes(b"\x00" * 20)
+    assert z1.h == z2.h == (0, 0, 0, 0)
+    assert not verify(z1, z2)
+
+
+def test_serialization_roundtrip():
+    d = fingerprint_bytes(b"some chunk data")
+    assert Digest.from_bytes(d.to_bytes()) == d
+    assert EMPTY_DIGEST.merge(d) == d and d.merge(EMPTY_DIGEST) == d

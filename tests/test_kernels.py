@@ -1,0 +1,91 @@
+"""Pallas kernels vs oracles: shape/dtype sweeps + hypothesis, interpret mode."""
+import ml_dtypes
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.integrity import fingerprint_bytes
+from repro.kernels import digest_of, fingerprint_and_copy, fingerprint_array, matmul_with_digest
+from repro.kernels import ref
+
+TILE = 64 * 128  # kernel tile in int32 words
+
+
+def host_digest(x: np.ndarray):
+    return fingerprint_bytes(np.ascontiguousarray(x).view(np.uint8))
+
+
+def make(shape, dtype, rng):
+    if dtype == np.int32:
+        return rng.integers(-2**31, 2**31 - 1, shape, dtype=np.int64).astype(np.int32)
+    return rng.standard_normal(np.prod(shape)).astype(dtype).reshape(shape)
+
+
+SHAPES = [(TILE,), (TILE + 5,), (3 * TILE,), (17,), (1,), (257, 129), (64, 128, 3)]
+DTYPES = [np.float32, np.int32, ml_dtypes.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_checksum_kernel_vs_host_oracle(shape, dtype, rng):
+    x = make(shape, dtype, rng)
+    got = digest_of(jnp.asarray(x))
+    assert got == host_digest(x), (shape, dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_jnp_ref_oracle_vs_host(shape, dtype, rng):
+    x = make(shape, dtype, rng)
+    res = np.asarray(jax.jit(ref.fingerprint_array_ref)(jnp.asarray(x)))
+    assert tuple(int(v) for v in res) == host_digest(x).h
+
+
+@pytest.mark.parametrize("shape", [(TILE,), (2 * TILE,), (TILE + 100,)])
+@pytest.mark.parametrize("dtype", [np.float32, ml_dtypes.bfloat16])
+def test_checksum_copy_kernel(shape, dtype, rng):
+    x = make(shape, dtype, rng)
+    res, copy = fingerprint_and_copy(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(copy).view(np.uint8),
+                                  np.asarray(x).view(np.uint8))
+    assert tuple(int(v) for v in np.asarray(res)) == host_digest(x).h
+
+
+@given(st.integers(1, 3 * TILE + 11))
+@settings(max_examples=20, deadline=None)
+def test_checksum_kernel_any_length(n):
+    rng = np.random.default_rng(n)
+    x = rng.standard_normal(n).astype(np.float32)
+    assert digest_of(jnp.asarray(x)) == host_digest(x)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128), (128, 512, 256)])
+def test_matmul_digest_kernel(m, k, n, rng):
+    a = jnp.asarray(rng.standard_normal((m, k)).astype(ml_dtypes.bfloat16))
+    b = jnp.asarray(rng.standard_normal((k, n)).astype(ml_dtypes.bfloat16))
+    c, dig = matmul_with_digest(a, b)
+    c_ref, dig_ref = ref.matmul_digest_ref(a, b)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(dig), np.asarray(dig_ref))
+
+
+def test_matmul_digest_detects_operand_corruption(rng):
+    a = jnp.asarray(rng.standard_normal((128, 128)).astype(ml_dtypes.bfloat16))
+    b = jnp.asarray(rng.standard_normal((128, 128)).astype(ml_dtypes.bfloat16))
+    _, dig1 = matmul_with_digest(a, b)
+    a_bad = a.at[7, 33].set(a[7, 33] + 1.0)
+    _, dig2 = matmul_with_digest(a_bad, b)
+    assert not np.array_equal(np.asarray(dig1), np.asarray(dig2))
+
+
+def test_device_digest_verifies_against_host_file_digest(rng, tmp_path):
+    """End-to-end: array digested on device == its bytes digested on host —
+    the property the checkpoint path relies on."""
+    x = rng.standard_normal((1000, 37)).astype(np.float32)
+    dev = digest_of(jnp.asarray(x))
+    path = tmp_path / "x.bin"
+    path.write_bytes(np.ascontiguousarray(x).tobytes())
+    host = fingerprint_bytes(path.read_bytes())
+    assert dev == host

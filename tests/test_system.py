@@ -1,0 +1,73 @@
+"""End-to-end behaviour: train -> checkpoint -> crash -> elastic resume; serve."""
+import numpy as np
+import pytest
+
+from conftest import run_multidevice
+
+
+def test_train_loss_decreases_and_resumes(tmp_path):
+    from repro.launch.train import main
+    out1 = main([
+        "--arch", "gemma-2b", "--smoke", "--mesh", "1x1", "--steps", "14",
+        "--seq-len", "32", "--global-batch", "4", "--ckpt-dir", str(tmp_path),
+        "--ckpt-every", "7", "--log-every", "0", "--lr", "3e-3",
+    ])
+    assert np.isfinite(out1["final_loss"])
+    assert out1["losses"][-1] < out1["losses"][0]          # learning happens
+
+    # resume: starts from step 14's checkpoint, runs to 18; loss continuous
+    out2 = main([
+        "--arch", "gemma-2b", "--smoke", "--mesh", "1x1", "--steps", "18",
+        "--seq-len", "32", "--global-batch", "4", "--ckpt-dir", str(tmp_path),
+        "--ckpt-every", "0", "--log-every", "0", "--lr", "3e-3",
+    ])
+    assert len(out2["losses"]) == 4                         # only steps 14..18
+    assert out2["final_loss"] < out1["losses"][0]
+
+
+ELASTIC = """
+import tempfile, numpy as np
+from repro.launch.train import main
+d = tempfile.mkdtemp()
+out1 = main(["--arch", "gemma-2b", "--smoke", "--mesh", "2x2", "--steps", "8",
+             "--seq-len", "32", "--global-batch", "4", "--ckpt-dir", d,
+             "--ckpt-every", "4", "--log-every", "0"])
+# "lose" half the nodes: resume the same checkpoint on a 1x2 mesh
+out2 = main(["--arch", "gemma-2b", "--smoke", "--mesh", "1x2", "--steps", "12",
+             "--seq-len", "32", "--global-batch", "4", "--ckpt-dir", d,
+             "--ckpt-every", "0", "--log-every", "0"])
+assert len(out2["losses"]) == 4, out2
+assert np.isfinite(out2["final_loss"])
+print("ELASTIC_OK", out1["final_loss"], out2["final_loss"])
+"""
+
+
+def test_elastic_restart_smaller_mesh():
+    out = run_multidevice(ELASTIC, n_devices=4, timeout=900)
+    assert "ELASTIC_OK" in out
+
+
+def test_serve_generates():
+    from repro.launch.serve import main
+    seqs = main(["--arch", "gemma2-2b", "--smoke", "--batch", "2",
+                 "--prompt-len", "6", "--gen", "8"])
+    assert seqs.shape == (2, 14)
+    assert (seqs >= 0).all()
+
+
+MULTIDEV_TRAIN = """
+import numpy as np
+from repro.launch.train import main
+# distributed data-parallel + tensor-parallel training on a 2x2 mesh
+out = main(["--arch", "qwen3-moe-30b-a3b", "--smoke", "--mesh", "2x2",
+            "--steps", "6", "--seq-len", "32", "--global-batch", "4",
+            "--log-every", "0", "--lr", "1e-2"])
+assert np.isfinite(out["final_loss"])
+assert out["losses"][-1] < out["losses"][0] + 0.5
+print("MULTIDEV_TRAIN_OK")
+"""
+
+
+def test_multidevice_moe_training():
+    out = run_multidevice(MULTIDEV_TRAIN, n_devices=4, timeout=900)
+    assert "MULTIDEV_TRAIN_OK" in out
