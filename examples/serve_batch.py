@@ -1,9 +1,62 @@
-"""Batched serving example: greedy decode with KV caches (gemma2 smoke).
+"""Submit a mixed batch of transfers through the TransferService.
+
+Creates a handful of small files and one large file for each of two tenants,
+submits them in one request per tenant (the Batcher coalesces the small ones
+and routes the large one to its own chunked task), streams lifecycle events,
+and prints the per-task report — including the per-item integrity digests
+the movers computed in-line with the data movement.
 
 Run: PYTHONPATH=src python examples/serve_batch.py
 """
-from repro.launch.serve import main
+import os
+import tempfile
 
-seqs = main(["--arch", "gemma2-2b", "--smoke", "--batch", "4",
-             "--prompt-len", "8", "--gen", "24"])
-print("shapes:", seqs.shape)
+import numpy as np
+
+from repro.core.chunker import MiB
+from repro.service import BatchConfig, ServiceConfig, TransferService
+
+root = tempfile.mkdtemp(prefix="transferd-")
+datadir = os.path.join(root, "data")
+os.makedirs(datadir)
+rng = np.random.default_rng(0)
+
+svc = TransferService(
+    os.path.join(root, "state"),
+    ServiceConfig(
+        mover_budget=8,
+        max_concurrent_tasks=4,
+        policy="marginal",
+        chunk_bytes=512 * 1024,
+        batch=BatchConfig(direct_bytes=4 * MiB, batch_files=8),
+    ),
+)
+svc.subscribe(lambda e: e.kind in ("ACTIVATED", "SUCCEEDED", "FAILED")
+              and print(f"  [event] {e.kind:9s} {e.task_id} ({e.tenant})"))
+
+task_ids = []
+for tenant in ("alice", "bob"):
+    items = []
+    for i in range(10):                                   # small files -> batched
+        p = os.path.join(datadir, f"{tenant}-{i}.bin")
+        with open(p, "wb") as fh:
+            fh.write(rng.integers(0, 256, 256 * 1024 + i, dtype=np.uint8).tobytes())
+        items.append((p, p + ".out"))
+    big = os.path.join(datadir, f"{tenant}-big.bin")      # large file -> own task
+    with open(big, "wb") as fh:
+        fh.write(rng.integers(0, 256, 8 * MiB, dtype=np.uint8).tobytes())
+    items.append((big, big + ".out"))
+    ids = svc.submit(items, tenant=tenant, label="mixed-batch")
+    print(f"{tenant}: 11 files submitted as {len(ids)} tasks: {ids}")
+    task_ids += ids
+
+print("\nper-task report:")
+for st in svc.wait_all(task_ids, timeout=120):
+    print(f"  {st.task_id:22s} {st.state:9s} tenant={st.tenant:5s} "
+          f"files={st.n_files:2d} bytes={st.bytes_done:>9d} "
+          f"chunks={st.chunks_done}/{st.chunks_total} latency={st.latency_s:.2f}s")
+    for rep in st.item_reports[:2]:
+        print(f"      {os.path.basename(rep.dst):20s} digest={rep.digest_hex[:24]}…")
+
+svc.close()
+print("\nall tasks complete; service state in", root)

@@ -17,7 +17,7 @@ Policies:
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Callable, Sequence
 
 from repro.core.simulator import (
     DEFAULT_LINK,
@@ -66,10 +66,18 @@ def allocate(
     policy: str = "marginal",
     link: LinkConfig = DEFAULT_LINK,
     step: int = 4,
+    predict: Callable[[TransferRequest, int], float] | None = None,
 ) -> list[Allocation]:
-    """Split a mover budget across transfers; returns per-transfer allocations."""
+    """Split a mover budget across transfers; returns per-transfer allocations.
+
+    ``predict(request, movers) -> seconds`` overrides the built-in simulator
+    cost model; the service layer passes a memoizing wrapper so repeated
+    reallocation over a stable active set stays cheap.
+    """
     if not requests:
         return []
+    if predict is None:
+        predict = lambda r, m: _predict(r, m, link)  # noqa: E731
     n = len(requests)
     if total_movers < n:
         raise ValueError(f"need >= 1 mover per transfer ({n} transfers, {total_movers} movers)")
@@ -93,11 +101,11 @@ def allocate(
         # Greedy water-filling on simulated completion-time reduction per mover.
         alloc = [1] * n
         budget = total_movers - n
-        cur = [_predict(r, 1, link) for r in requests]
+        cur = [predict(r, 1) for r in requests]
         while budget >= step:
             best_i, best_gain, best_t = -1, 0.0, 0.0
             for i, r in enumerate(requests):
-                t = _predict(r, alloc[i] + step, link)
+                t = predict(r, alloc[i] + step)
                 gain = cur[i] - t
                 if gain > best_gain:
                     best_i, best_gain, best_t = i, gain, t
@@ -111,7 +119,7 @@ def allocate(
 
     out = []
     for r, m in zip(requests, alloc):
-        secs = _predict(r, m, link)
+        secs = predict(r, m)
         total = sum(r.file_bytes)
         out.append(Allocation(r, m, secs, total * 8 / 1e9 / secs if secs > 0 else 0.0))
     return out

@@ -9,7 +9,8 @@ from __future__ import annotations
 import math
 
 import jax
-from jax.sharding import AxisType
+
+from repro.distributed.mesh import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,8 +24,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "before any jax import"
         )
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devices)
 
 
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
@@ -33,5 +33,4 @@ def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     devices = jax.devices()[:n]
     if len(devices) < n:
         raise RuntimeError(f"need {n} devices, have {len(devices)}")
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devices)

@@ -33,6 +33,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.ckpt import CheckpointManager
 from repro.configs.registry import SHAPES, ShapeCell, build_model
 from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.distributed.mesh import make_mesh
 from repro.launch.steps import build_train_step
 from repro.optim import adamw
 
@@ -48,8 +49,7 @@ def parse_mesh(spec: str):
     devices = jax.devices()[: int(np.prod(dims))]
     if len(devices) < int(np.prod(dims)):
         raise RuntimeError(f"mesh {spec} needs {np.prod(dims)} devices, have {len(devices)}")
-    return jax.make_mesh(tuple(dims), names, devices=devices,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    return make_mesh(tuple(dims), names, devices=devices)
 
 
 def restore_into(mesh, model, ocfg, mgr: CheckpointManager):

@@ -1,0 +1,167 @@
+"""transferd — drive the transfer-task service from the command line.
+
+Two modes:
+
+  * testbed (default): run a mixed multi-tenant workload through the
+    service scheduling stack in virtual time against the calibrated
+    ALCF->NERSC simulator, and report aggregate Gb/s + task-latency
+    percentiles per allocation policy. This answers "which mover-allocation
+    policy should the service run?" without a testbed:
+
+        PYTHONPATH=src python -m repro.launch.transferd \\
+            --policy all --small 1000 --small-mb 100 --large 4 --large-gb 1000
+
+  * --real DIR: spin a *real* TransferService in DIR, generate a small mixed
+    batch of local files, submit them across two tenants, and print each
+    task's lifecycle — a smoke test of the wall-clock path:
+
+        PYTHONPATH=src python -m repro.launch.transferd --real /tmp/transferd
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+from repro.core.chunker import MiB
+from repro.core.simulator import SITES
+from repro.service import (
+    BatchConfig,
+    ServiceConfig,
+    TransferService,
+    mixed_workload,
+    run_load,
+)
+
+POLICIES = ("fair", "file_bound", "marginal")
+
+
+def _fmt_row(policy: str, rep) -> str:
+    return (
+        f"{policy:11s} {rep.aggregate_gbps:9.2f} {rep.makespan_s:11.1f} "
+        f"{rep.p50_s:9.1f} {rep.p99_s:9.1f} {len(rep.tasks):6d}"
+    )
+
+
+def run_testbed(args) -> dict[str, object]:
+    work = mixed_workload(
+        n_small=args.small,
+        small_bytes=args.small_mb * 1000 * 1000,
+        n_large=args.large,
+        large_bytes=args.large_gb * 1000 * 1000 * 1000,
+        tenants=args.tenants,
+    )
+    total = sum(sum(s.file_bytes) for s in work)
+    print(f"# workload: {args.small} x {args.small_mb} MB + "
+          f"{args.large} x {args.large_gb} GB over {args.tenants} tenants "
+          f"({total / 1e12:.2f} TB total)")
+    print(f"# budget: {args.movers} movers, {args.concurrent} concurrent tasks, "
+          f"{args.src}->{args.dst}, chunk {args.chunk_mb} MB")
+    print(f"{'policy':11s} {'agg Gb/s':>9s} {'makespan s':>11s} "
+          f"{'p50 s':>9s} {'p99 s':>9s} {'tasks':>6s}")
+    policies = POLICIES if args.policy == "all" else (args.policy,)
+    reports = {}
+    for pol in policies:
+        t0 = time.perf_counter()
+        rep = run_load(
+            work,
+            policy=pol,
+            mover_budget=args.movers,
+            max_concurrent=args.concurrent,
+            chunk_bytes=args.chunk_mb * 1000 * 1000,
+            src=SITES[args.src],
+            dst=SITES[args.dst],
+            batch=BatchConfig(
+                direct_bytes=args.direct_mb * 1000 * 1000,
+                batch_files=args.batch_files,
+            ),
+        )
+        reports[pol] = rep
+        print(_fmt_row(pol, rep) + f"   ({time.perf_counter() - t0:.1f}s wall)")
+    if "marginal" in reports and "file_bound" in reports:
+        m, f = reports["marginal"], reports["file_bound"]
+        if f.aggregate_gbps > 0:
+            print(f"# marginal/file_bound aggregate speedup: "
+                  f"{m.aggregate_gbps / f.aggregate_gbps:.2f}x")
+    return reports
+
+
+def run_real(args) -> None:
+    import numpy as np
+
+    root = os.path.abspath(args.real)
+    datadir = os.path.join(root, "data")
+    os.makedirs(datadir, exist_ok=True)
+    rng = np.random.default_rng(args.seed)
+
+    budget = max(1, min(args.movers, 16))      # smoke mode: local threads
+    svc = TransferService(
+        os.path.join(root, "state"),
+        ServiceConfig(
+            mover_budget=budget,
+            max_concurrent_tasks=max(1, min(4, args.concurrent, budget)),
+            chunk_bytes=256 * 1024,
+            batch=BatchConfig(direct_bytes=4 * MiB, batch_files=8),
+        ),
+    )
+    events = []
+    svc.subscribe(lambda e: events.append(e))
+
+    all_ids = []
+    for k in range(2):
+        tenant = f"tenant{k}"
+        items = []
+        for i in range(6):
+            p = os.path.join(datadir, f"{tenant}-small{i}.bin")
+            with open(p, "wb") as fh:
+                fh.write(rng.integers(0, 256, 300_000 + i, dtype=np.uint8).tobytes())
+            items.append((p, p + ".out"))
+        big = os.path.join(datadir, f"{tenant}-big.bin")
+        with open(big, "wb") as fh:
+            fh.write(rng.integers(0, 256, 8 * MiB, dtype=np.uint8).tobytes())
+        items.append((big, big + ".out"))
+        all_ids += svc.submit(items, tenant=tenant, label="smoke")
+
+    print(f"submitted {len(all_ids)} tasks")
+    for st in svc.wait_all(all_ids, timeout=120):
+        print(f"  {st.task_id:24s} {st.state:9s} files={st.n_files:2d} "
+              f"chunks={st.chunks_done}/{st.chunks_total} "
+              f"retries={st.retries} latency={st.latency_s:.2f}s")
+    kinds = {}
+    for e in events:
+        kinds[e.kind] = kinds.get(e.kind, 0) + 1
+    print("events:", dict(sorted(kinds.items())))
+    svc.close()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="transferd", description=__doc__)
+    ap.add_argument("--policy", default="all", choices=POLICIES + ("all",))
+    ap.add_argument("--movers", type=int, default=64)
+    ap.add_argument("--concurrent", type=int, default=16)
+    ap.add_argument("--small", type=int, default=1000, help="# small files")
+    ap.add_argument("--small-mb", type=int, default=100)
+    ap.add_argument("--large", type=int, default=4, help="# large files")
+    ap.add_argument("--large-gb", type=int, default=1000)
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--chunk-mb", type=int, default=500)
+    ap.add_argument("--direct-mb", type=int, default=500, help="direct-route threshold")
+    ap.add_argument("--batch-files", type=int, default=64)
+    ap.add_argument("--src", default="ALCF", choices=sorted(SITES))
+    ap.add_argument("--dst", default="NERSC", choices=sorted(SITES))
+    ap.add_argument("--real", default=None, metavar="DIR",
+                    help="run a real local service smoke test in DIR instead")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.concurrent > args.movers:
+        ap.error(f"--concurrent ({args.concurrent}) must be <= --movers "
+                 f"({args.movers}): every active task needs a mover")
+
+    if args.real:
+        run_real(args)
+        return None
+    return run_testbed(args)
+
+
+if __name__ == "__main__":
+    main()

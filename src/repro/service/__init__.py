@@ -1,0 +1,46 @@
+"""Transfer Service — multi-tenant async task manager over the chunked engine.
+
+The service layer of the reproduction (the part of Globus the paper's
+client-driven chunking ships inside): tasks are submitted by many tenants,
+batched (service.batcher), scheduled under a global mover budget with
+chunk-aware marginal-benefit allocation and tenant fairness
+(service.scheduler), executed with per-chunk integrity + journaling
+(service.service), and survivable across service crashes (service.store).
+
+    from repro.service import TransferService, ServiceConfig
+    svc = TransferService("/srv/transferd", ServiceConfig(mover_budget=16))
+    [tid] = svc.submit([(src, dst)], tenant="alice")
+    svc.wait(tid)
+
+Virtual-time analysis of the same scheduling stack at testbed scale lives in
+service.testbed (used by benchmarks/service_load.py and repro.launch.transferd).
+"""
+from repro.service.batcher import BatchConfig, Batcher
+from repro.service.ckpt_bridge import CheckpointSubmission, submit_checkpoint
+from repro.service.events import EventBus, TaskEvent
+from repro.service.scheduler import AllocationEngine, TenantQuota, select_activations
+from repro.service.service import ServiceConfig, TransferService
+from repro.service.store import TaskRecord, TaskStore
+from repro.service.task import (
+    ACTIVE,
+    CANCELED,
+    FAILED,
+    PAUSED,
+    PENDING,
+    SUCCEEDED,
+    TERMINAL,
+    ItemReport,
+    TaskSpec,
+    TaskStatus,
+    TransferItem,
+)
+from repro.service.testbed import LoadReport, Submission, SimTask, mixed_workload, run_load
+
+__all__ = [
+    "ACTIVE", "CANCELED", "FAILED", "PAUSED", "PENDING", "SUCCEEDED", "TERMINAL",
+    "AllocationEngine", "BatchConfig", "Batcher", "CheckpointSubmission",
+    "EventBus", "ItemReport", "LoadReport", "ServiceConfig", "SimTask",
+    "Submission", "TaskEvent", "TaskRecord", "TaskSpec", "TaskStatus",
+    "TaskStore", "TenantQuota", "TransferItem", "TransferService",
+    "mixed_workload", "run_load", "select_activations", "submit_checkpoint",
+]

@@ -1,0 +1,120 @@
+"""Checkpoint writes as transfer-service tasks.
+
+``repro.ckpt.save_checkpoint`` drives its own movers synchronously. This
+bridge instead *submits* the checkpoint's leaves to a TransferService — the
+write becomes one async task competing (fairly) with every other tenant's
+traffic, scheduled under the global mover budget, journaled, and
+integrity-fingerprinted by the service's movers. The resulting directory is
+byte- and manifest-compatible with ``repro.ckpt.restore_checkpoint``.
+
+The leaf arrays are in-memory (ephemeral) sources: if the service dies before
+the task completes, recovery marks the task FAILED, the ``.tmp`` directory
+keeps its journaled chunks, and a re-submission after restart skips every
+chunk that already landed (the destination files and service journals are
+both keyed by the same deterministic chunk plan).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.ckpt.checkpoint import SaveReport, _flatten
+from repro.service.task import SUCCEEDED, TaskStatus
+
+
+@dataclasses.dataclass
+class CheckpointSubmission:
+    """Handle for an in-flight checkpoint-save task."""
+
+    service: Any
+    task_id: str
+    step: int
+    tmp_dir: str
+    final_dir: str
+    leaf_meta: list[tuple[str, tuple[int, ...], str]]   # (key, shape, dtype)
+    submitted_s: float
+
+    def status(self) -> TaskStatus:
+        return self.service.status(self.task_id)
+
+    def wait(self, timeout: float | None = None) -> SaveReport:
+        """Block until the save task finishes; finalize MANIFEST + rename."""
+        st = self.service.wait(self.task_id, timeout)
+        if st.state != SUCCEEDED:
+            raise RuntimeError(
+                f"checkpoint task {self.task_id} ended {st.state}: {st.error}"
+            )
+        manifest: dict[str, Any] = {"step": self.step, "process": 0, "leaves": {}}
+        total = 0
+        for (key, shape, dtype), rep in zip(self.leaf_meta, st.item_reports):
+            manifest["leaves"][key] = {
+                "shape": list(shape),
+                "dtype": dtype,
+                "nbytes": rep.nbytes,
+                "file": os.path.basename(rep.dst),
+                "digest": rep.digest_hex,
+                "chunk_bytes": rep.chunk_bytes,
+                "chunks": [dict(c) for c in rep.chunks],
+            }
+            total += rep.nbytes
+        with open(os.path.join(self.tmp_dir, "MANIFEST.json"), "w") as fh:
+            json.dump(manifest, fh, indent=1, sort_keys=True)
+        if os.path.exists(self.final_dir):
+            import shutil
+
+            shutil.rmtree(self.final_dir)
+        os.replace(self.tmp_dir, self.final_dir)
+        return SaveReport(
+            step=self.step,
+            path=self.final_dir,
+            total_bytes=total,
+            seconds=time.time() - self.submitted_s,
+            n_leaves=len(self.leaf_meta),
+            resumed_chunks=st.resumed_chunks,
+        )
+
+
+def submit_checkpoint(
+    service,
+    root: str | os.PathLike,
+    step: int,
+    tree: Any,
+    *,
+    tenant: str = "ckpt",
+    chunk_bytes: int | None = None,
+) -> CheckpointSubmission:
+    """Submit one checkpoint save as a single service task; returns a handle.
+
+    The caller keeps training while the service's movers drain the task; call
+    ``.wait()`` (or poll ``.status()``) before relying on the checkpoint.
+    """
+    final = os.path.join(str(root), f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = _flatten(tree)
+    buffers: list[tuple[np.ndarray, str]] = []
+    leaf_meta: list[tuple[str, tuple[int, ...], str]] = []
+    for key, arr in leaves.items():
+        safe = key.replace("/", "__")
+        data = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
+        buffers.append((data, os.path.join(tmp, f"{safe}.bin")))
+        leaf_meta.append((key, tuple(arr.shape), str(arr.dtype)))
+
+    task_id = service.submit_buffers(
+        buffers, tenant=tenant, label=f"ckpt-step{step}", chunk_bytes=chunk_bytes,
+    )
+    return CheckpointSubmission(
+        service=service,
+        task_id=task_id,
+        step=step,
+        tmp_dir=tmp,
+        final_dir=final,
+        leaf_meta=leaf_meta,
+        submitted_s=time.time(),
+    )

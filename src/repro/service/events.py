@@ -1,0 +1,76 @@
+"""Task event stream — progress callbacks for service clients.
+
+Subscribers get every TaskEvent in emission order. Callbacks run on service
+threads, so they must be quick and must not raise; a raising subscriber is
+isolated (the error is recorded, other subscribers still fire). A bounded
+ring buffer keeps recent history for late joiners / tests.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Any, Callable
+
+# event kinds
+SUBMITTED = "SUBMITTED"
+ACTIVATED = "ACTIVATED"
+PROGRESS = "PROGRESS"
+RETRY = "RETRY"
+REALLOC = "REALLOC"
+PAUSED = "PAUSED"
+RESUMED = "RESUMED"
+CANCELED = "CANCELED"
+SUCCEEDED = "SUCCEEDED"
+FAILED = "FAILED"
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskEvent:
+    seq: int
+    time_s: float
+    kind: str
+    task_id: str
+    tenant: str
+    payload: dict[str, Any]
+
+
+class EventBus:
+    def __init__(self, history: int = 4096):
+        self._lock = threading.Lock()
+        self._subs: list[Callable[[TaskEvent], None]] = []
+        self._seq = 0
+        self._history: collections.deque[TaskEvent] = collections.deque(maxlen=history)
+        self.subscriber_errors = 0
+
+    def subscribe(self, cb: Callable[[TaskEvent], None]) -> Callable[[], None]:
+        """Register a callback; returns an unsubscribe function."""
+        with self._lock:
+            self._subs.append(cb)
+
+        def unsubscribe() -> None:
+            with self._lock:
+                if cb in self._subs:
+                    self._subs.remove(cb)
+
+        return unsubscribe
+
+    def emit(self, kind: str, task_id: str, tenant: str, **payload: Any) -> TaskEvent:
+        with self._lock:
+            ev = TaskEvent(self._seq, time.time(), kind, task_id, tenant, payload)
+            self._seq += 1
+            self._history.append(ev)
+            subs = list(self._subs)
+        for cb in subs:
+            try:
+                cb(ev)
+            except Exception:
+                with self._lock:
+                    self.subscriber_errors += 1
+        return ev
+
+    def history(self, kind: str | None = None) -> list[TaskEvent]:
+        with self._lock:
+            evs = list(self._history)
+        return evs if kind is None else [e for e in evs if e.kind == kind]

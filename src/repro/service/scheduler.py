@@ -1,0 +1,179 @@
+"""Service-level scheduling: tenant-fair activation + mover allocation.
+
+Two decisions, both shared by the real (wall-clock) service and the
+virtual-time testbed:
+
+  1. *Which pending tasks go ACTIVE* — bounded by the global concurrent-task
+     cap and per-tenant quotas, selected round-robin by tenant load so a
+     tenant with one task is not starved behind another tenant's backlog
+     (max-min fairness over task slots).
+
+  2. *How many movers each ACTIVE task gets* — delegated to the chunk-aware
+     allocator (core.scheduler): "fair", "file_bound" (the pre-chunking
+     baseline), or "marginal" (greedy water-filling on simulated marginal
+     throughput gain). Predictions are memoized here because the service
+     reallocates on every active-set change over mostly-identical requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.scheduler import TransferRequest, allocate
+from repro.core.simulator import ALCF, DEFAULT_LINK, NERSC, LinkConfig, SiteConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """Per-tenant rate limits. None = unlimited (global caps still apply)."""
+
+    max_active: int | None = None    # concurrent ACTIVE tasks
+    max_movers: int | None = None    # movers summed over the tenant's tasks
+
+
+DEFAULT_QUOTA = TenantQuota()
+
+
+# ---------------------------------------------------------------------------
+# Activation: tenant-fair selection of pending tasks
+# ---------------------------------------------------------------------------
+def select_activations(
+    pending: Sequence[tuple[int, str, str]],    # (submit_seq, task_id, tenant)
+    active_by_tenant: dict[str, int],
+    *,
+    free_slots: int,
+    quotas: dict[str, TenantQuota] | None = None,
+    default_quota: TenantQuota = DEFAULT_QUOTA,
+    served_by_tenant: dict[str, int] | None = None,
+) -> list[str]:
+    """Pick up to ``free_slots`` pending task_ids, fairly across tenants.
+
+    Stride-style fairness: each tenant's priority is (currently ACTIVE +
+    historically served) task count, so a tenant submitting one task is not
+    starved behind another tenant's backlog even when only one slot frees at
+    a time. FIFO within a tenant; ``max_active`` quotas are respected; the
+    quota check uses ACTIVE counts only.
+    """
+    quotas = quotas or {}
+    served = dict(served_by_tenant or {})     # local copy: stay side-effect free
+    by_tenant: dict[str, list[tuple[int, str]]] = {}
+    for seq, task_id, tenant in sorted(pending):
+        by_tenant.setdefault(tenant, []).append((seq, task_id))
+    active = dict(active_by_tenant)
+    chosen: list[str] = []
+    while len(chosen) < free_slots:
+        best_tenant, best_key = None, None
+        for tenant, queue in by_tenant.items():
+            if not queue:
+                continue
+            quota = quotas.get(tenant, default_quota)
+            if quota.max_active is not None and active.get(tenant, 0) >= quota.max_active:
+                continue
+            key = (active.get(tenant, 0) + served.get(tenant, 0), queue[0][0])
+            if best_key is None or key < best_key:
+                best_tenant, best_key = tenant, key
+        if best_tenant is None:
+            break
+        _seq, task_id = by_tenant[best_tenant].pop(0)
+        chosen.append(task_id)
+        active[best_tenant] = active.get(best_tenant, 0) + 1
+        served[best_tenant] = served.get(best_tenant, 0) + 1
+    return chosen
+
+
+# ---------------------------------------------------------------------------
+# Allocation: movers across active tasks, with memoized predictions
+# ---------------------------------------------------------------------------
+class AllocationEngine:
+    """Memoizing wrapper around core.scheduler.allocate for one service."""
+
+    def __init__(
+        self,
+        *,
+        policy: str = "marginal",
+        mover_budget: int = 64,
+        src: SiteConfig = ALCF,
+        dst: SiteConfig = NERSC,
+        link: LinkConfig = DEFAULT_LINK,
+        step: int = 4,
+        quotas: dict[str, TenantQuota] | None = None,
+        default_quota: TenantQuota = DEFAULT_QUOTA,
+    ):
+        self.policy = policy
+        self.mover_budget = mover_budget
+        self.src, self.dst, self.link = src, dst, link
+        self.step = step
+        self.quotas = quotas or {}
+        self.default_quota = default_quota
+        self._cache: dict[tuple, float] = {}
+
+    # requests are rebuilt each round from stable task signatures, so the
+    # cache key is the request content, not object identity.
+    def _predict(self, req: TransferRequest, movers: int) -> float:
+        key = (req.src, req.dst, req.file_bytes, req.chunk_bytes,
+               req.integrity, req.stripe_count, movers)
+        t = self._cache.get(key)
+        if t is None:
+            from repro.core.scheduler import _predict
+            t = _predict(req, movers, self.link)
+            self._cache[key] = t
+        return t
+
+    def predict_seconds(self, req: TransferRequest, movers: int) -> float:
+        return self._predict(req, movers)
+
+    def allocate(
+        self, tasks: Sequence[tuple[str, str, TransferRequest]]
+    ) -> dict[str, int]:
+        """(task_id, tenant, request) -> task_id -> movers.
+
+        Applies the configured policy under the global budget, then clamps
+        each tenant to its ``max_movers`` quota (freed movers are handed to
+        unclamped tenants in allocation order).
+        """
+        if not tasks:
+            return {}
+        reqs = [req for _tid, _ten, req in tasks]
+        allocs = allocate(
+            reqs,
+            total_movers=self.mover_budget,
+            policy=self.policy,
+            link=self.link,
+            step=self.step,
+            predict=self._predict,
+        )
+        movers = {tid: a.movers for (tid, _ten, _req), a in zip(tasks, allocs)}
+
+        # per-tenant mover caps: proportional clamp with a floor of 1
+        by_tenant: dict[str, list[str]] = {}
+        tenant_of: dict[str, str] = {}
+        for tid, tenant, _req in tasks:
+            by_tenant.setdefault(tenant, []).append(tid)
+            tenant_of[tid] = tenant
+        freed = 0
+        uncapped: list[str] = []
+        for tenant, tids in by_tenant.items():
+            quota = self.quotas.get(tenant, self.default_quota)
+            total = sum(movers[t] for t in tids)
+            if quota.max_movers is None or total <= quota.max_movers:
+                uncapped.extend(tids)
+                continue
+            scale = quota.max_movers / total
+            for t in tids:
+                new = max(1, int(movers[t] * scale))
+                freed += movers[t] - new
+                movers[t] = new
+        # hand freed movers to other tasks, re-checking each RECIPIENT
+        # tenant's own cap so redistribution never pushes it over quota
+        for t in uncapped:
+            if freed <= 0:
+                break
+            tenant = tenant_of[t]
+            cap = self.quotas.get(tenant, self.default_quota).max_movers
+            if cap is not None:
+                total = sum(movers[x] for x in by_tenant[tenant])
+                if total >= cap:
+                    continue
+            movers[t] += 1
+            freed -= 1
+        return movers

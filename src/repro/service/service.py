@@ -1,0 +1,779 @@
+"""The multi-tenant asynchronous transfer-task service.
+
+This is the service layer the paper's client-driven chunking lives inside of:
+clients *submit* transfer tasks and walk away; the service batches, schedules,
+monitors, retries, integrity-checks and journals them across tenants.
+
+Architecture (one TransferService per service root):
+
+  * submit() batches requests into tasks (service.batcher), persists them to
+    the TaskStore and returns task ids immediately;
+  * one scheduler thread activates PENDING tasks under the global
+    concurrent-task cap with tenant-fair selection (service.scheduler), and
+    reallocates the global mover budget across ACTIVE tasks with the
+    chunk-aware marginal-benefit policy whenever the active set changes;
+  * each ACTIVE task runs a _TaskRunner thread owning a work queue of chunks
+    (natural work stealing) and a dynamic pool of mover threads sized by the
+    current allocation; chunk moves are fingerprinted, verified by dest
+    read-back, retried with exponential backoff, and journaled;
+  * a crash (or kill()) loses nothing: on construction the service replays the
+    task log, re-queues durable non-terminal tasks, and their journals make
+    the runners skip every chunk that already landed.
+
+Client API: submit / submit_buffers / status / tasks / wait / wait_all /
+cancel / pause / resume / subscribe / flush / close / kill.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import threading
+import time
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core.chunker import ChunkPlan, MiB, plan_chunks
+from repro.core.integrity import (
+    EMPTY_DIGEST,
+    combine_at_offsets,
+    fingerprint_bytes,
+    verify,
+)
+from repro.core.journal import ChunkJournal, JournalRecord
+from repro.core.scheduler import TransferRequest
+from repro.core.simulator import ALCF, DEFAULT_LINK, NERSC, LinkConfig, SiteConfig
+from repro.core.transfer import BufferSource, ByteSource, FileDest, FileSource, IntegrityError
+from repro.service import events as ev
+from repro.service.batcher import BatchConfig, Batcher
+from repro.service.events import EventBus
+from repro.service.scheduler import (
+    DEFAULT_QUOTA,
+    AllocationEngine,
+    TenantQuota,
+    select_activations,
+)
+from repro.service import task as tk
+from repro.service.store import TaskStore
+from repro.service.task import ItemReport, TaskSpec, TaskStatus, TransferItem, TransitionError
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    mover_budget: int = 8            # global mover threads across tasks
+    max_concurrent_tasks: int = 4    # ACTIVE task cap (<= mover_budget)
+    policy: str = "marginal"         # fair | file_bound | marginal
+    chunk_bytes: int = 8 * MiB       # default chunk size for task items
+    integrity: bool = True           # dest read-back verification per chunk
+    max_retries: int = 3             # per-chunk attempts - 1
+    retry_backoff_s: float = 0.01    # exponential backoff base
+    tick_s: float = 0.005            # scheduler/runner poll period
+    batch: BatchConfig = dataclasses.field(default_factory=BatchConfig)
+    quotas: dict[str, TenantQuota] = dataclasses.field(default_factory=dict)
+    default_quota: TenantQuota = DEFAULT_QUOTA
+    src_site: SiteConfig = ALCF      # cost-model endpoints for allocation
+    dst_site: SiteConfig = NERSC
+    link: LinkConfig = DEFAULT_LINK
+    alloc_step: int = 2              # water-filling granularity
+
+    def __post_init__(self):
+        if self.max_concurrent_tasks > self.mover_budget:
+            raise ValueError(
+                f"max_concurrent_tasks ({self.max_concurrent_tasks}) must be "
+                f"<= mover_budget ({self.mover_budget}): every active task "
+                "needs at least one mover"
+            )
+
+
+class _Task:
+    """Service-internal mutable task state (specs stay frozen)."""
+
+    def __init__(self, spec: TaskSpec, seq: int, chunk_bytes: int):
+        self.spec = spec
+        self.seq = seq
+        self.state = tk.PENDING
+        self.error: str | None = None
+        self.lock = threading.Lock()
+        self.pause_evt = threading.Event()
+        self.cancel_evt = threading.Event()
+        self.target_movers = 1
+        self.n_workers = 0
+        self.failed_error: str | None = None
+        self.started_s: float | None = None
+        self.finished_s: float | None = None
+        self.retries = 0
+        self.resumed_chunks = 0
+        self.item_reports: tuple[ItemReport, ...] = ()
+
+        # Deterministic chunk plans (same across service incarnations): the
+        # journal's global chunk ids must mean the same byte ranges forever.
+        self.plans: list[ChunkPlan] = []
+        self.chunk_base: list[int] = []
+        base = 0
+        for it in spec.items:
+            plan = (
+                plan_chunks(
+                    it.nbytes, 1, chunk_bytes=spec.chunk_bytes or chunk_bytes,
+                    min_chunk=1, max_chunk=1 << 62, alignment=1,
+                )
+                if it.nbytes
+                else plan_chunks(0, 1)
+            )
+            self.plans.append(plan)
+            self.chunk_base.append(base)
+            base += plan.n_chunks
+        self.chunks_total = base
+        self.chunks_done = 0
+        self.bytes_total = spec.total_bytes
+        self.bytes_done = 0
+
+        # lazily-opened per-item endpoints (shared by this task's movers)
+        self._sources: dict[int, ByteSource] = {}
+        self._dests: dict[int, FileDest] = {}
+
+class TransferService:
+    """Multi-tenant async task manager over the chunked-transfer engine."""
+
+    def __init__(
+        self,
+        root: str | os.PathLike,
+        config: ServiceConfig | None = None,
+        *,
+        fault_injector: Callable[[str, int, Any, int], None] | None = None,
+    ):
+        self.config = config or ServiceConfig()
+        self.store = TaskStore(root)
+        self.events = EventBus()
+        self.batcher = Batcher(self.config.batch)
+        self.engine = AllocationEngine(
+            policy=self.config.policy,
+            mover_budget=self.config.mover_budget,
+            src=self.config.src_site,
+            dst=self.config.dst_site,
+            link=self.config.link,
+            step=self.config.alloc_step,
+            quotas=self.config.quotas,
+            default_quota=self.config.default_quota,
+        )
+        self._fault_injector = fault_injector
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._tasks: dict[str, _Task] = {}
+        self._mem_sources: dict[tuple[str, int], ByteSource] = {}
+        self._runners: dict[str, threading.Thread] = {}
+        self._stop_evt = threading.Event()
+        self._kill_evt = threading.Event()
+        self._alloc_dirty = True
+        self._served: dict[str, int] = {}    # per-tenant activation history
+        self.moved_chunks = 0        # chunks physically moved by THIS incarnation
+
+        self._recover()
+        self._scheduler = threading.Thread(
+            target=self._scheduler_loop, name="transferd-sched", daemon=True
+        )
+        self._scheduler.start()
+
+    # ------------------------------------------------------------------
+    # recovery
+    # ------------------------------------------------------------------
+    def _recover(self) -> None:
+        """Rebuild tasks from the log; re-queue durable non-terminal tasks."""
+        for task_id, rec in sorted(self.store.records.items(), key=lambda kv: kv[1].seq):
+            t = _Task(rec.spec, rec.seq, self.config.chunk_bytes)
+            t.state = rec.state
+            t.error = rec.error
+            if rec.state in tk.TERMINAL:
+                t.finished_s = rec.spec.submitted_s   # best effort: log has no ts
+                if rec.state == tk.SUCCEEDED:
+                    t.chunks_done = t.chunks_total
+                    t.bytes_done = t.bytes_total
+                self._tasks[task_id] = t
+                continue
+            if not rec.spec.durable:
+                # in-memory sources died with the previous process
+                t.state = tk.FAILED
+                t.error = "ephemeral source lost across service restart"
+                t.finished_s = time.time()
+                self.store.append_state(task_id, tk.FAILED, t.error)
+                self._tasks[task_id] = t
+                self.events.emit(ev.FAILED, task_id, rec.spec.tenant, error=t.error)
+                continue
+            # ACTIVE at crash time -> PENDING; PAUSED stays PAUSED.
+            if rec.state in (tk.ACTIVE, tk.PENDING):
+                t.state = tk.PENDING
+                if rec.state == tk.ACTIVE:
+                    self.store.append_state(task_id, tk.PENDING, "recovered after restart")
+            elif rec.state == tk.PAUSED:
+                t.pause_evt.set()
+            self._tasks[task_id] = t
+
+    # ------------------------------------------------------------------
+    # client API: submission
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        items: Sequence[TransferItem | tuple[str, str] | tuple[str, str, int]],
+        *,
+        tenant: str = "default",
+        label: str = "",
+        chunk_bytes: int | None = None,
+        batch: bool = True,
+    ) -> list[str]:
+        """Submit a transfer request; returns the task ids it was split into.
+
+        Items are (src_path, dst_path[, nbytes]) or TransferItem. With
+        ``batch=True`` the Batcher coalesces small files into shared tasks and
+        routes large files to dedicated chunked tasks; ``batch=False`` forces
+        a single task for the whole request.
+        """
+        norm = [self._norm_item(it) for it in items]
+        if not norm:
+            raise ValueError("empty submission")
+        groups = self.batcher.split(norm) if batch else [list(norm)]
+        return [self._submit_group(g, tenant, label, chunk_bytes) for g in groups]
+
+    def submit_buffers(
+        self,
+        buffers: Sequence[tuple[bytes | np.ndarray | ByteSource, str]],
+        *,
+        tenant: str = "default",
+        label: str = "",
+        chunk_bytes: int | None = None,
+    ) -> str:
+        """Submit in-memory payloads (e.g. checkpoint arrays) as ONE task.
+
+        Ephemeral by construction: if the service dies before the task
+        completes, recovery fails the task (the bytes are gone) — callers at
+        a higher level (repro.ckpt) re-submit and the destination journals
+        still prevent re-moving landed chunks.
+        """
+        items, sources = [], []
+        for i, (payload, dst) in enumerate(buffers):
+            src = payload if hasattr(payload, "read") else BufferSource(payload)
+            items.append(TransferItem(f"mem:{i}", str(dst), src.nbytes, mem=True))
+            sources.append(src)
+        task_id = self._submit_group(items, tenant, label, chunk_bytes)
+        with self._lock:
+            for i, src in enumerate(sources):
+                self._mem_sources[(task_id, i)] = src
+        return task_id
+
+    def _norm_item(self, it) -> TransferItem:
+        if isinstance(it, TransferItem):
+            return it
+        if len(it) == 2:
+            src, dst = it
+            return TransferItem(str(src), str(dst), os.path.getsize(src))
+        src, dst, nbytes = it
+        return TransferItem(str(src), str(dst), int(nbytes))
+
+    def _submit_group(
+        self, items: Sequence[TransferItem], tenant: str, label: str,
+        chunk_bytes: int | None,
+    ) -> str:
+        with self._cond:
+            if self._stop_evt.is_set():
+                raise RuntimeError("service is shut down")
+            task_id = self.store.next_task_id(tenant)
+            # pin the EFFECTIVE chunk size into the persisted spec: chunk
+            # plans (and so the journal's global chunk ids) must mean the
+            # same byte ranges even if the service restarts with a
+            # different configured default
+            spec = TaskSpec(
+                task_id=task_id, tenant=tenant, label=label,
+                items=tuple(items),
+                chunk_bytes=chunk_bytes or self.config.chunk_bytes,
+            )
+            rec = self.store.append_submit(spec)
+            self._tasks[task_id] = _Task(spec, rec.seq, self.config.chunk_bytes)
+            self._cond.notify_all()
+        self.events.emit(
+            ev.SUBMITTED, task_id, tenant,
+            files=len(items), bytes=sum(i.nbytes for i in items), label=label,
+        )
+        return task_id
+
+    # ------------------------------------------------------------------
+    # client API: lifecycle
+    # ------------------------------------------------------------------
+    def status(self, task_id: str) -> TaskStatus:
+        with self._lock:
+            t = self._require(task_id)
+            return self._snapshot(t)
+
+    def tasks(self, *, tenant: str | None = None) -> list[TaskStatus]:
+        with self._lock:
+            out = [self._snapshot(t) for t in self._tasks.values()
+                   if tenant is None or t.spec.tenant == tenant]
+        return sorted(out, key=lambda s: s.task_id)
+
+    def wait(self, task_id: str, timeout: float | None = None) -> TaskStatus:
+        """Block until the task reaches a terminal state."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            t = self._require(task_id)
+            while t.state not in tk.TERMINAL:
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(f"task {task_id} still {t.state} after {timeout}s")
+                self._cond.wait(remaining if remaining is not None else 0.5)
+            return self._snapshot(t)
+
+    def wait_all(self, task_ids: Sequence[str], timeout: float | None = None) -> list[TaskStatus]:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        return [
+            self.wait(tid, None if deadline is None else max(0.0, deadline - time.monotonic()))
+            for tid in task_ids
+        ]
+
+    def cancel(self, task_id: str) -> TaskStatus:
+        with self._cond:
+            t = self._require(task_id)
+            if t.state in tk.TERMINAL:
+                return self._snapshot(t)
+            if t.state in (tk.PENDING, tk.PAUSED):
+                self._transition(t, tk.CANCELED)
+                self.events.emit(ev.CANCELED, task_id, t.spec.tenant)
+            else:
+                t.cancel_evt.set()     # runner finalizes the transition
+            self._cond.notify_all()
+        return self.status(task_id)
+
+    def pause(self, task_id: str) -> TaskStatus:
+        with self._cond:
+            t = self._require(task_id)
+            if t.state == tk.PENDING:
+                self._transition(t, tk.PAUSED)
+                t.pause_evt.set()
+                self.events.emit(ev.PAUSED, task_id, t.spec.tenant)
+            elif t.state == tk.ACTIVE:
+                t.pause_evt.set()      # runner drains in-flight chunks first
+            self._cond.notify_all()
+        return self.status(task_id)
+
+    def resume(self, task_id: str) -> TaskStatus:
+        with self._cond:
+            t = self._require(task_id)
+            if t.state == tk.PAUSED:
+                t.pause_evt.clear()
+                self._transition(t, tk.PENDING)
+                self.events.emit(ev.RESUMED, task_id, t.spec.tenant)
+                self._cond.notify_all()
+            elif t.state == tk.ACTIVE and t.pause_evt.is_set():
+                # pause still draining: withdraw it; _finish() sees the
+                # cleared event and re-queues instead of landing on PAUSED
+                t.pause_evt.clear()
+                self.events.emit(ev.RESUMED, task_id, t.spec.tenant)
+                self._cond.notify_all()
+        return self.status(task_id)
+
+    def subscribe(self, cb) -> Callable[[], None]:
+        return self.events.subscribe(cb)
+
+    # ------------------------------------------------------------------
+    # shutdown
+    # ------------------------------------------------------------------
+    def close(self, *, drain: bool = False, timeout: float | None = None) -> None:
+        """Graceful stop. ``drain=True`` waits for active+pending work first;
+        otherwise non-terminal tasks stay journaled and resume on restart."""
+        if drain:
+            open_ids = [t.spec.task_id for t in self._tasks.values()
+                        if t.state not in tk.TERMINAL and not t.pause_evt.is_set()]
+            self.wait_all(open_ids, timeout)
+        self._stop_evt.set()
+        with self._cond:
+            still_active = any(t.state == tk.ACTIVE for t in self._tasks.values())
+            self._cond.notify_all()
+        if still_active:
+            # suspend in-flight movers crash-consistently: journals keep what
+            # landed, the log keeps ACTIVE, and a restart re-queues the tasks
+            self._kill_evt.set()
+        self._scheduler.join(timeout=5.0)
+        for r in list(self._runners.values()):
+            r.join(timeout=5.0)
+        self.store.close()
+
+    def kill(self) -> None:
+        """Crash simulation: abandon all threads mid-flight, record nothing.
+
+        Chunk journals and the task log keep whatever had already been
+        fsynced — exactly the state a SIGKILL would leave behind.
+        """
+        self._kill_evt.set()
+        self._stop_evt.set()
+        with self._cond:
+            self._cond.notify_all()
+        self._scheduler.join(timeout=5.0)
+        for r in list(self._runners.values()):
+            r.join(timeout=5.0)
+        self.store.close()
+
+    # ------------------------------------------------------------------
+    # scheduler loop
+    # ------------------------------------------------------------------
+    def _scheduler_loop(self) -> None:
+        while not self._stop_evt.is_set():
+            with self._cond:
+                self._activate_locked()
+                dirty = self._alloc_dirty
+                self._alloc_dirty = False
+                reqs = self._allocation_requests_locked() if dirty else None
+            if reqs:
+                # predictions may run the event-stepped simulator on cache
+                # misses — keep the service lock free while they do
+                movers = self.engine.allocate(reqs)
+                self._apply_allocation(movers)
+            with self._cond:
+                self._cond.wait(self.config.tick_s)
+
+    def _activate_locked(self) -> None:
+        active = [t for t in self._tasks.values() if t.state == tk.ACTIVE]
+        free = self.config.max_concurrent_tasks - len(active)
+        if free <= 0:
+            return
+        pending = [
+            (t.seq, t.spec.task_id, t.spec.tenant)
+            for t in self._tasks.values() if t.state == tk.PENDING
+        ]
+        if not pending:
+            return
+        active_by_tenant: dict[str, int] = {}
+        for t in active:
+            active_by_tenant[t.spec.tenant] = active_by_tenant.get(t.spec.tenant, 0) + 1
+        chosen = select_activations(
+            pending, active_by_tenant, free_slots=free,
+            quotas=self.config.quotas, default_quota=self.config.default_quota,
+            served_by_tenant=self._served,
+        )
+        for task_id in chosen:
+            t = self._tasks[task_id]
+            self._served[t.spec.tenant] = self._served.get(t.spec.tenant, 0) + 1
+            self._transition(t, tk.ACTIVE)
+            t.started_s = t.started_s or time.time()
+            runner = threading.Thread(
+                target=self._run_task, args=(t,), name=f"runner-{task_id}", daemon=True
+            )
+            self._runners[task_id] = runner
+            runner.start()
+            self.events.emit(ev.ACTIVATED, task_id, t.spec.tenant)
+            self._alloc_dirty = True
+
+    def _allocation_requests_locked(self) -> list[tuple[str, str, TransferRequest]]:
+        return [
+            (
+                t.spec.task_id,
+                t.spec.tenant,
+                TransferRequest(
+                    name=t.spec.task_id,
+                    src=self.config.src_site,
+                    dst=self.config.dst_site,
+                    file_bytes=tuple(max(1, it.nbytes) for it in t.spec.items),
+                    chunk_bytes=t.spec.chunk_bytes or self.config.chunk_bytes,
+                    integrity=self.config.integrity,
+                ),
+            )
+            for t in self._tasks.values() if t.state == tk.ACTIVE
+        ]
+
+    def _apply_allocation(self, movers: dict[str, int]) -> None:
+        with self._lock:
+            for tid, m in movers.items():
+                t = self._tasks.get(tid)
+                if t is not None and t.state == tk.ACTIVE:
+                    t.target_movers = max(1, m)
+        self.events.emit(
+            ev.REALLOC, "-", "-",
+            allocation=dict(movers), policy=self.config.policy,
+        )
+
+    # ------------------------------------------------------------------
+    # task runner (one thread per ACTIVE task)
+    # ------------------------------------------------------------------
+    def _run_task(self, t: _Task) -> None:
+        task_id = t.spec.task_id
+        try:
+            journal = self.store.open_journal(task_id)
+        except Exception as e:  # noqa: BLE001
+            self._finish(t, tk.FAILED, error=f"journal open failed: {e}")
+            return
+        jlock = threading.Lock()
+        try:
+            done = set(journal.records)
+            with t.lock:
+                t.resumed_chunks = len(done)
+                t.chunks_done = len(done)
+                t.bytes_done = sum(r.length for r in journal.records.values())
+            work: "queue.Queue[tuple[int, int, Any]]" = queue.Queue()
+            n_work = 0
+            for i, plan in enumerate(t.plans):
+                if plan.n_chunks == 0:
+                    self._dest(t, i)        # zero-byte item: materialize the file
+                    continue
+                base = t.chunk_base[i]
+                for c in plan.chunks:
+                    if base + c.index not in done:
+                        work.put((base + c.index, i, c))
+                        n_work += 1
+
+            reason = self._drive_workers(t, work, journal, jlock, n_work)
+            if reason is None:          # killed: vanish without a trace
+                return
+            if reason == tk.SUCCEEDED:
+                try:
+                    reports = self._build_reports(t, journal)
+                except Exception as e:  # noqa: BLE001
+                    self._finish(t, tk.FAILED, error=f"finalize failed: {e}")
+                    return
+                self._finish(t, tk.SUCCEEDED, reports=reports)
+            elif reason == tk.PAUSED:
+                self._finish(t, tk.PAUSED)
+            elif reason == tk.CANCELED:
+                self._finish(t, tk.CANCELED)
+            else:
+                self._finish(t, tk.FAILED, error=t.failed_error or "unknown failure")
+        finally:
+            # on kill() the handle is left open, as a real SIGKILL would leave
+            # it: a straggler mover may still be appending its last record
+            if not self._kill_evt.is_set():
+                journal.close()
+            with self._lock:
+                # a resumed task may already have a NEW runner registered
+                if self._runners.get(task_id) is threading.current_thread():
+                    self._runners.pop(task_id, None)
+
+    def _drive_workers(self, t, work, journal, jlock, n_work) -> str | None:
+        """Spawn/trim movers until the task reaches an outcome; returns the
+        outcome state, or None when the service was killed mid-flight."""
+        while True:
+            if self._kill_evt.is_set():
+                return None
+            if t.cancel_evt.is_set():
+                outcome = tk.CANCELED
+            elif t.pause_evt.is_set():
+                outcome = tk.PAUSED
+            else:
+                with t.lock:
+                    if t.failed_error:
+                        outcome = tk.FAILED
+                    elif t.chunks_done >= t.chunks_total:
+                        outcome = tk.SUCCEEDED
+                    else:
+                        outcome = ""
+            if outcome:
+                break
+            with t.lock:
+                want = min(max(1, t.target_movers), max(1, t.chunks_total - t.chunks_done))
+                # don't spawn movers that would find an empty queue: the last
+                # chunks are in flight with the workers already holding them
+                want = min(want, work.qsize() + t.n_workers)
+                short = want - t.n_workers
+                for _ in range(max(0, short)):
+                    t.n_workers += 1
+                    threading.Thread(
+                        target=self._worker, args=(t, work, journal, jlock),
+                        daemon=True,
+                    ).start()
+            time.sleep(self.config.tick_s)
+        # wind down: workers observe the same events/counters and drain
+        while True:
+            with t.lock:
+                if t.n_workers == 0:
+                    return outcome
+            if self._kill_evt.is_set():
+                return None
+            time.sleep(self.config.tick_s / 2)
+
+    def _worker(self, t: _Task, work, journal, jlock) -> None:
+        try:
+            while True:
+                if (
+                    self._kill_evt.is_set()
+                    or t.cancel_evt.is_set()
+                    or t.pause_evt.is_set()
+                ):
+                    return
+                with t.lock:
+                    if t.failed_error:
+                        return
+                    if t.n_workers > max(1, t.target_movers):
+                        return               # trimmed by reallocation
+                try:
+                    gidx, item_idx, chunk = work.get_nowait()
+                except queue.Empty:
+                    return
+                try:
+                    digest = self._move_chunk(t, item_idx, chunk)
+                except Exception as e:  # noqa: BLE001
+                    with t.lock:
+                        t.failed_error = (
+                            f"item {item_idx} chunk {chunk.index} "
+                            f"(offset={chunk.offset}): {e}"
+                        )
+                    return
+                try:
+                    with jlock:
+                        journal.append(JournalRecord(
+                            gidx, chunk.offset, chunk.length, digest.hexdigest()
+                        ))
+                except Exception:  # noqa: BLE001 — only possible mid-kill()
+                    if not self._kill_evt.is_set():
+                        raise
+                    return
+                with self._lock:
+                    self.moved_chunks += 1
+                with t.lock:
+                    t.chunks_done += 1
+                    t.bytes_done += chunk.length
+                    done, total = t.chunks_done, t.chunks_total
+                self.events.emit(
+                    ev.PROGRESS, t.spec.task_id, t.spec.tenant,
+                    chunks_done=done, chunks_total=total,
+                )
+                if done >= total:
+                    with self._cond:
+                        self._cond.notify_all()
+        finally:
+            with t.lock:
+                t.n_workers -= 1
+
+    def _move_chunk(self, t: _Task, item_idx: int, chunk):
+        """One chunk: read -> fingerprint -> write -> read-back verify, with
+        bounded exponential-backoff retries (chunk-granular fault recovery)."""
+        item = t.spec.items[item_idx]
+        src = self._source(t, item_idx)
+        dst = self._dest(t, item_idx)
+        attempts = 0
+        while True:
+            attempts += 1
+            try:
+                if self._fault_injector is not None:
+                    self._fault_injector(t.spec.task_id, item_idx, chunk, attempts)
+                data = src.read(chunk.offset, chunk.length)
+                if len(data) != chunk.length:
+                    raise IOError(
+                        f"short read at {chunk.offset}: {len(data)}/{chunk.length}"
+                    )
+                digest = fingerprint_bytes(data)
+                dst.write(chunk.offset, data)
+                if self.config.integrity:
+                    back = dst.read_back(chunk.offset, chunk.length)
+                    if not verify(digest, fingerprint_bytes(back)):
+                        raise IntegrityError(
+                            f"read-back digest mismatch ({item.dst} @ {chunk.offset})"
+                        )
+                return digest
+            except Exception:
+                if attempts > self.config.max_retries:
+                    raise
+                with t.lock:
+                    t.retries += 1
+                self.events.emit(
+                    ev.RETRY, t.spec.task_id, t.spec.tenant,
+                    item=item_idx, chunk=chunk.index, attempt=attempts,
+                )
+                time.sleep(self.config.retry_backoff_s * (2 ** (attempts - 1)))
+
+    def _source(self, t: _Task, item_idx: int) -> ByteSource:
+        with t.lock:
+            src = t._sources.get(item_idx)
+            if src is None:
+                item = t.spec.items[item_idx]
+                if item.mem:
+                    src = self._mem_sources[(t.spec.task_id, item_idx)]
+                else:
+                    src = FileSource(item.src)
+                t._sources[item_idx] = src
+            return src
+
+    def _dest(self, t: _Task, item_idx: int) -> FileDest:
+        with t.lock:
+            dst = t._dests.get(item_idx)
+            if dst is None:
+                item = t.spec.items[item_idx]
+                parent = os.path.dirname(item.dst)
+                if parent:
+                    os.makedirs(parent, exist_ok=True)
+                dst = FileDest(item.dst, item.nbytes)
+                t._dests[item_idx] = dst
+            return dst
+
+    def _build_reports(self, t: _Task, journal: ChunkJournal) -> tuple[ItemReport, ...]:
+        reports = []
+        for i, (item, plan) in enumerate(zip(t.spec.items, t.plans)):
+            base = t.chunk_base[i]
+            chunks, parts = [], []
+            for c in plan.chunks:
+                rec = journal.records[base + c.index]
+                parts.append((rec.offset, rec.digest()))
+                chunks.append({
+                    "index": c.index, "offset": c.offset,
+                    "length": c.length, "digest": rec.digest_hex,
+                })
+            digest = combine_at_offsets(parts, item.nbytes) if parts else EMPTY_DIGEST
+            reports.append(ItemReport(
+                src=item.src, dst=item.dst, nbytes=item.nbytes,
+                digest_hex=digest.hexdigest(),
+                chunk_bytes=plan.chunk_bytes, chunks=tuple(chunks),
+            ))
+        return tuple(reports)
+
+    # ------------------------------------------------------------------
+    # bookkeeping
+    # ------------------------------------------------------------------
+    def _require(self, task_id: str) -> _Task:
+        t = self._tasks.get(task_id)
+        if t is None:
+            raise KeyError(f"unknown task {task_id!r}")
+        return t
+
+    def _transition(self, t: _Task, state: str, error: str | None = None) -> None:
+        if not tk.can_transition(t.state, state):
+            raise TransitionError(t.spec.task_id, t.state, state)
+        t.state = state
+        t.error = error
+        self.store.append_state(t.spec.task_id, state, error)
+
+    def _finish(self, t: _Task, state: str, *, error: str | None = None,
+                reports: tuple[ItemReport, ...] = ()) -> None:
+        with self._cond:
+            if state == tk.PAUSED and not t.pause_evt.is_set():
+                state = tk.PENDING      # resume() raced the pause drain
+            self._transition(t, state, error)
+            if state in tk.TERMINAL:
+                t.finished_s = time.time()
+            if state == tk.SUCCEEDED:
+                t.item_reports = reports
+            self._alloc_dirty = True
+            self._cond.notify_all()
+        kind = {
+            tk.SUCCEEDED: ev.SUCCEEDED, tk.FAILED: ev.FAILED,
+            tk.CANCELED: ev.CANCELED, tk.PAUSED: ev.PAUSED,
+            tk.PENDING: ev.RESUMED,     # pause withdrawn mid-drain
+        }[state]
+        payload: dict[str, Any] = {"chunks_done": t.chunks_done}
+        if error:
+            payload["error"] = error
+        self.events.emit(kind, t.spec.task_id, t.spec.tenant, **payload)
+
+    def _snapshot(self, t: _Task) -> TaskStatus:
+        with t.lock:
+            return TaskStatus(
+                task_id=t.spec.task_id,
+                tenant=t.spec.tenant,
+                label=t.spec.label,
+                state=t.state,
+                error=t.error or t.failed_error,
+                n_files=t.spec.n_files,
+                bytes_total=t.bytes_total,
+                bytes_done=t.bytes_done,
+                chunks_total=t.chunks_total,
+                chunks_done=t.chunks_done,
+                resumed_chunks=t.resumed_chunks,
+                retries=t.retries,
+                movers=t.target_movers if t.state == tk.ACTIVE else 0,
+                submitted_s=t.spec.submitted_s,
+                started_s=t.started_s,
+                finished_s=t.finished_s,
+                item_reports=t.item_reports,
+            )

@@ -1,0 +1,128 @@
+"""Persistent task store — the service's crash-recoverable source of truth.
+
+Two kinds of on-disk state under one service root:
+
+    <root>/tasks.log                append-only task event log (JSONL)
+    <root>/journals/<task_id>.journal   per-task chunk-completion journal
+
+``tasks.log`` records submissions and every state transition. Like the chunk
+journal (core.journal) each line is self-checksummed so a torn tail write from
+a crashed service is detected and dropped on replay instead of corrupting
+recovery. Replay order reconstructs submission order (used for FIFO fairness).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from typing import IO
+
+from repro.core.integrity import fingerprint_bytes
+from repro.core.journal import ChunkJournal
+from repro.service.task import PENDING, STATES, TaskSpec
+
+
+def _self_check(payload: str) -> str:
+    return fingerprint_bytes(payload.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    """Replayed view of one task: spec + last persisted state."""
+
+    seq: int                     # submission order
+    spec: TaskSpec
+    state: str = PENDING
+    error: str | None = None
+
+
+class TaskStore:
+    """Append-only, self-checksummed task log + per-task chunk journals."""
+
+    def __init__(self, root: str | os.PathLike):
+        self.root = str(root)
+        os.makedirs(os.path.join(self.root, "journals"), exist_ok=True)
+        self.log_path = os.path.join(self.root, "tasks.log")
+        self._lock = threading.Lock()
+        self._fh: IO[str] | None = None
+        self._n_submitted = 0
+        self.records: dict[str, TaskRecord] = {}
+        if os.path.exists(self.log_path):
+            self._replay()
+        self._fh = open(self.log_path, "a", encoding="utf-8")
+
+    # -- replay ------------------------------------------------------------
+    def _replay(self) -> None:
+        with open(self.log_path, "r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    obj = json.loads(line)
+                    body = obj["body"]
+                    if obj["check"] != _self_check(json.dumps(body, sort_keys=True)):
+                        continue                      # torn/corrupt record
+                    kind = body["type"]
+                except (json.JSONDecodeError, KeyError, TypeError):
+                    continue                          # truncated tail line
+                if kind == "submit":
+                    spec = TaskSpec.from_json(body["spec"])
+                    self.records[spec.task_id] = TaskRecord(self._n_submitted, spec)
+                    self._n_submitted += 1
+                elif kind == "state":
+                    rec = self.records.get(body.get("task_id"))
+                    if rec is not None and body.get("state") in STATES:
+                        rec.state = body["state"]
+                        rec.error = body.get("error")
+
+    # -- appends -----------------------------------------------------------
+    def _append(self, body: dict) -> None:
+        line = json.dumps(
+            {"body": body, "check": _self_check(json.dumps(body, sort_keys=True))}
+        )
+        with self._lock:
+            assert self._fh is not None
+            self._fh.write(line + "\n")
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+
+    def append_submit(self, spec: TaskSpec) -> TaskRecord:
+        self._append({"type": "submit", "spec": spec.to_json()})
+        with self._lock:
+            rec = TaskRecord(self._n_submitted, spec)
+            self._n_submitted += 1
+            self.records[spec.task_id] = rec
+        return rec
+
+    def append_state(self, task_id: str, state: str, error: str | None = None) -> None:
+        self._append({"type": "state", "task_id": task_id, "state": state, "error": error})
+        with self._lock:
+            rec = self.records.get(task_id)
+            if rec is not None:
+                rec.state = state
+                rec.error = error
+
+    # -- journals ----------------------------------------------------------
+    def journal_path(self, task_id: str) -> str:
+        return os.path.join(self.root, "journals", f"{task_id}.journal")
+
+    def open_journal(self, task_id: str) -> ChunkJournal:
+        return ChunkJournal(self.journal_path(task_id))
+
+    def next_task_id(self, tenant: str) -> str:
+        with self._lock:
+            return f"task-{self._n_submitted:06d}-{tenant}"
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+    def __enter__(self) -> "TaskStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,178 @@
+"""Transfer-task model: specs, the task state machine, and status snapshots.
+
+A *task* is the service-side unit of work (the Globus "transfer task"): a set
+of (source, destination) items owned by one tenant, moved chunk-by-chunk with
+per-chunk integrity fingerprints and a journal that makes a restarted service
+resume the task at chunk granularity.
+
+State machine (persisted transition-by-transition in the TaskStore):
+
+    PENDING ──► ACTIVE ──► SUCCEEDED
+       │           │  ╲──► FAILED
+       │           │  ╲──► CANCELED
+       │           ▼
+       │        PAUSED ──► PENDING   (resume re-queues; journal is kept)
+       ╰──────────────────► CANCELED
+
+A service crash records nothing: recovery treats on-disk ACTIVE as PENDING
+(durable tasks) or FAILED (ephemeral in-memory sources), and the chunk journal
+ensures already-moved chunks are never moved again.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+# ---------------------------------------------------------------------------
+# States
+# ---------------------------------------------------------------------------
+PENDING = "PENDING"
+ACTIVE = "ACTIVE"
+PAUSED = "PAUSED"
+SUCCEEDED = "SUCCEEDED"
+FAILED = "FAILED"
+CANCELED = "CANCELED"
+
+STATES = (PENDING, ACTIVE, PAUSED, SUCCEEDED, FAILED, CANCELED)
+TERMINAL = frozenset({SUCCEEDED, FAILED, CANCELED})
+
+_ALLOWED: dict[str, frozenset[str]] = {
+    PENDING: frozenset({ACTIVE, CANCELED, FAILED}),
+    ACTIVE: frozenset({SUCCEEDED, FAILED, CANCELED, PAUSED, PENDING}),
+    PAUSED: frozenset({PENDING, ACTIVE, CANCELED, FAILED}),
+    SUCCEEDED: frozenset(),
+    FAILED: frozenset(),
+    CANCELED: frozenset(),
+}
+
+
+def can_transition(src: str, dst: str) -> bool:
+    return dst in _ALLOWED.get(src, frozenset())
+
+
+class TransitionError(RuntimeError):
+    def __init__(self, task_id: str, src: str, dst: str):
+        super().__init__(f"task {task_id}: illegal transition {src} -> {dst}")
+        self.src, self.dst = src, dst
+
+
+# ---------------------------------------------------------------------------
+# Specs (persisted)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TransferItem:
+    """One (source, destination) pair inside a task.
+
+    ``mem=True`` marks an ephemeral in-process source (e.g. a checkpoint
+    array); such tasks are not crash-recoverable and are failed on restart.
+    """
+
+    src: str
+    dst: str
+    nbytes: int
+    mem: bool = False
+
+    def to_json(self) -> dict[str, Any]:
+        return {"src": self.src, "dst": self.dst, "nbytes": self.nbytes, "mem": self.mem}
+
+    @staticmethod
+    def from_json(obj: dict[str, Any]) -> "TransferItem":
+        return TransferItem(obj["src"], obj["dst"], int(obj["nbytes"]), bool(obj.get("mem")))
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """The persisted description of a task — enough to re-create it on restart."""
+
+    task_id: str
+    tenant: str
+    label: str
+    items: tuple[TransferItem, ...]
+    chunk_bytes: int | None = None
+    submitted_s: float = dataclasses.field(default_factory=time.time)
+
+    @property
+    def durable(self) -> bool:
+        return all(not it.mem for it in self.items)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(it.nbytes for it in self.items)
+
+    @property
+    def n_files(self) -> int:
+        return len(self.items)
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "task_id": self.task_id,
+            "tenant": self.tenant,
+            "label": self.label,
+            "items": [it.to_json() for it in self.items],
+            "chunk_bytes": self.chunk_bytes,
+            "submitted_s": self.submitted_s,
+        }
+
+    @staticmethod
+    def from_json(obj: dict[str, Any]) -> "TaskSpec":
+        return TaskSpec(
+            task_id=obj["task_id"],
+            tenant=obj["tenant"],
+            label=obj.get("label", ""),
+            items=tuple(TransferItem.from_json(o) for o in obj["items"]),
+            chunk_bytes=obj.get("chunk_bytes"),
+            submitted_s=float(obj.get("submitted_s", 0.0)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Reports / status snapshots (API surface)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ItemReport:
+    """Per-item outcome of a SUCCEEDED task (digests come from the journal)."""
+
+    src: str
+    dst: str
+    nbytes: int
+    digest_hex: str
+    chunk_bytes: int
+    chunks: tuple[dict[str, Any], ...]   # {"index", "offset", "length", "digest"}
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskStatus:
+    """Immutable snapshot returned by the client API (status/wait)."""
+
+    task_id: str
+    tenant: str
+    label: str
+    state: str
+    error: str | None
+    n_files: int
+    bytes_total: int
+    bytes_done: int
+    chunks_total: int
+    chunks_done: int
+    resumed_chunks: int
+    retries: int
+    movers: int
+    submitted_s: float
+    started_s: float | None
+    finished_s: float | None
+    item_reports: tuple[ItemReport, ...] = ()
+
+    @property
+    def done(self) -> bool:
+        return self.state in TERMINAL
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.finished_s is None:
+            return None
+        return self.finished_s - self.submitted_s
+
+    @property
+    def progress(self) -> float:
+        return self.bytes_done / self.bytes_total if self.bytes_total else 1.0

@@ -1,0 +1,121 @@
+"""Deterministic stand-in for `hypothesis` when the package is absent.
+
+The tier-1 suite's property tests import this as a fallback:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypofallback import given, settings, strategies as st
+
+It implements just the strategy surface those tests use (integers, binary,
+lists, data, randoms) and a `given` that replays a fixed, seeded set of
+examples — boundary values first, then pseudo-random draws — so the
+properties still execute (deterministically) without hypothesis. With
+hypothesis installed (requirements-dev.txt) the real shrinking search runs
+instead; this fallback never shadows it.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+
+_MAX_EXAMPLES_CAP = 25   # keep the no-hypothesis suite fast
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rnd: random.Random):
+        return self._draw_fn(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    if min_value > max_value:
+        raise ValueError(f"empty integer range [{min_value}, {max_value}]")
+
+    def draw(rnd):
+        roll = rnd.random()
+        if roll < 0.15:
+            return min_value
+        if roll < 0.30:
+            return max_value
+        return rnd.randint(min_value, max_value)
+
+    return _Strategy(draw)
+
+
+def binary(min_size: int = 0, max_size: int = 64) -> _Strategy:
+    def draw(rnd):
+        n = integers(min_size, max_size).draw(rnd)
+        return bytes(rnd.getrandbits(8) for _ in range(n))
+
+    return _Strategy(draw)
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 8) -> _Strategy:
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        return [elements.draw(rnd) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+class _DataObject:
+    """Mirror of hypothesis' `data()` draw handle."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: _Strategy):
+        return strategy.draw(self._rnd)
+
+
+def data() -> _Strategy:
+    return _Strategy(lambda rnd: _DataObject(rnd))
+
+
+def randoms() -> _Strategy:
+    return _Strategy(lambda rnd: random.Random(rnd.getrandbits(64)))
+
+
+def settings(max_examples: int = _MAX_EXAMPLES_CAP, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(fn, "_fallback_max_examples", _MAX_EXAMPLES_CAP),
+                    _MAX_EXAMPLES_CAP)
+            # one fixed stream per test: failures replay identically
+            rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = [s.draw(rnd) for s in arg_strategies]
+                drawn_kw = {k: s.draw(rnd) for k, s in kw_strategies.items()}
+                fn(*drawn, *args, **{**kwargs, **drawn_kw})
+
+        # hide strategy-covered params from pytest's fixture resolution
+        # (real hypothesis does the same signature rewrite)
+        params = list(inspect.signature(fn).parameters.values())
+        covered = set(kw_strategies)
+        remaining = [
+            p for i, p in enumerate(params)
+            if i >= len(arg_strategies) and p.name not in covered
+        ]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+# `from _hypofallback import strategies as st` mirrors the hypothesis import
+strategies = sys.modules[__name__]

@@ -1,6 +1,10 @@
 """Property tests for chunk planning (core.chunker)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # optional dev dep: deterministic fallback examples
+    from _hypofallback import given, settings, strategies as st
 
 from repro.core.chunker import MiB, plan_auto, plan_chunks, plan_for_array
 

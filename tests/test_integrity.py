@@ -1,7 +1,11 @@
 """Property tests for the mergeable fingerprint algebra (core.integrity)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # optional dev dep: deterministic fallback examples
+    from _hypofallback import given, settings, strategies as st
 
 from repro.core.integrity import (
     BASES, Digest, EMPTY_DIGEST, P,

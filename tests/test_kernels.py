@@ -4,7 +4,11 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # optional dev dep: deterministic fallback examples
+    from _hypofallback import given, settings, strategies as st
 
 from repro.core.integrity import fingerprint_bytes
 from repro.kernels import digest_of, fingerprint_and_copy, fingerprint_array, matmul_with_digest
