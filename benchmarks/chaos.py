@@ -1,0 +1,405 @@
+"""Chaos conformance benchmark: N-seed fault campaigns over the whole stack.
+
+Runs the ``repro.faults`` scenario matrix (silent corruption at scaled
+Globus-log rates, mover deaths mid-chunk, endpoint outage windows, stalls,
+torn journal tails — alone and composed) against
+
+  * the REAL threaded chunked-transfer engine (``core.transfer``), including
+    a crash + torn-journal + restart leg per campaign,
+  * the REAL multi-tenant service (``repro.service``) on the compound
+    campaign, including a kill() + restart leg, and
+  * the VIRTUAL-time testbed (``service.testbed``) across the full matrix,
+
+and reports, per scenario aggregated over seeds:
+
+  * ``escapes``             — integrity escapes: final destination bytes that
+    differ from the source after recovery. MUST be 0.
+  * ``re_moved_journaled``  — journaled (fsync'd, verified) chunks that a
+    restarted engine/service moved again. MUST be 0.
+  * ``corrupt_writes`` / ``healed`` — every corrupt chunk landing must be
+    caught by the read-back digest and healed by a source re-fetch
+    (healed == corrupt_writes, enforced).
+  * ``goodput_retention``   — faulted vs fault-free throughput.
+  * ``retry_amplification`` — chunk move attempts / chunks needed.
+
+Prints ``name,value,unit`` CSV like the other benchmarks and exits non-zero
+on any conformance violation, so CI can gate on it.
+
+Run: PYTHONPATH=src python -m benchmarks.chaos [--seeds N] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core import (
+    BufferSource,
+    ChunkJournal,
+    ChunkedTransfer,
+    FileDest,
+    plan_chunks,
+)
+from repro.faults import FULL_MATRIX, FaultCampaign, parse_scenario, tear_journal_tail
+from repro.service import BatchConfig, ServiceConfig, TransferService, run_load
+from repro.service.testbed import Submission
+
+
+# ---------------------------------------------------------------------------
+# real-engine campaigns
+# ---------------------------------------------------------------------------
+class _HostCrash(Exception):
+    """The crash bomb: simulates the host dying mid-transfer (leg 2 setup)."""
+
+
+def _payload(seed: int, nbytes: int) -> bytes:
+    return np.random.default_rng(seed).integers(0, 256, nbytes, dtype=np.uint8).tobytes()
+
+
+def _engine_run(payload, plan, campaign, jpath, *, injector=None, max_retries=3):
+    dst = FileDest(jpath + ".out", len(payload))
+    journal = ChunkJournal(jpath)
+    try:
+        eng = ChunkedTransfer(
+            campaign.wrap_source(BufferSource(payload)),
+            campaign.wrap_dest(dst),
+            plan,
+            journal=journal,
+            max_retries=max_retries,
+            fault_injector=injector,
+        )
+        report = eng.run()
+    finally:
+        journal.close()
+    with open(jpath + ".out", "rb") as fh:
+        final = fh.read()
+    return report, final
+
+
+def engine_campaign(expr: str, seed: int, *, nbytes: int, chunk: int, movers: int,
+                    clean_seconds: float, tmpdir: str) -> dict:
+    scenario = parse_scenario(expr).scaled_to(nbytes, target_events=4.0)
+    payload = _payload(seed, nbytes)
+    plan = plan_chunks(nbytes, movers, chunk_bytes=chunk, min_chunk=1, max_chunk=1 << 50)
+    out = dict(escapes=0, re_moved_journaled=0, corrupt_writes=0, healed=0,
+               mover_deaths=0, outage_rejections=0, amplification=1.0, retention=1.0)
+
+    # ---- leg A: full faulted transfer (no crash): escapes + healed + timing
+    camp = FaultCampaign(scenario, total_bytes=nbytes, seed=seed, movers=movers)
+    attempts = [0]
+    lock = threading.Lock()
+
+    def count(_chunk, _attempt):
+        with lock:
+            attempts[0] += 1
+
+    ja = os.path.join(tmpdir, f"A-{expr.replace('+', '_')}-{seed}.journal")
+    t0 = time.perf_counter()
+    report, final = _engine_run(payload, plan, camp, ja, injector=count)
+    secs = time.perf_counter() - t0
+    out["escapes"] += int(final != payload)
+    out["corrupt_writes"] += camp.stats.corrupt_writes
+    out["healed"] += report.refetches
+    out["mover_deaths"] += report.mover_deaths
+    out["outage_rejections"] += camp.stats.outage_rejections
+    out["amplification"] = attempts[0] / max(1, plan.n_chunks)
+    out["retention"] = min(1.0, clean_seconds / secs) if secs > 0 else 1.0
+
+    # ---- leg B: crash mid-transfer (+ torn tail), restart, count re-moves
+    jb = os.path.join(tmpdir, f"B-{expr.replace('+', '_')}-{seed}.journal")
+    camp1 = FaultCampaign(scenario, total_bytes=nbytes, seed=seed + 101, movers=movers)
+    bomb_after = max(1, plan.n_chunks // 2)
+    calls = [0]
+
+    def bomb(_chunk, _attempt):
+        with lock:
+            calls[0] += 1
+            if calls[0] > bomb_after:
+                raise _HostCrash("host died mid-transfer")
+
+    try:
+        _engine_run(payload, plan, camp1, jb, injector=bomb, max_retries=0)
+    except (_HostCrash, RuntimeError):
+        pass                     # the crash (or a fault it raced) is the point
+    if scenario.torn_journal and os.path.exists(jb):
+        tear_journal_tail(jb, seed=seed)
+    probe = ChunkJournal(jb)     # replay stops at the torn record, repairs tail
+    journaled = set(probe.records)
+    probe.close()
+
+    camp2 = FaultCampaign(scenario.replace(torn_journal=False),
+                          total_bytes=nbytes, seed=seed + 202, movers=movers)
+    moved2: list[int] = []
+
+    def record(chunk, _attempt):
+        with lock:
+            moved2.append(chunk.index)
+
+    report2, final2 = _engine_run(payload, plan, camp2, jb, injector=record)
+    out["escapes"] += int(final2 != payload)
+    out["re_moved_journaled"] += len(set(moved2) & journaled)
+    out["corrupt_writes"] += camp2.stats.corrupt_writes
+    out["healed"] += report2.refetches
+    return out
+
+
+# ---------------------------------------------------------------------------
+# real-service campaign (compound scenario + kill/restart leg)
+# ---------------------------------------------------------------------------
+def service_campaign(expr: str, seed: int, *, nbytes: int, tmpdir: str) -> dict:
+    scenario = parse_scenario(expr)
+    root = os.path.join(tmpdir, f"svc-{expr.replace('+', '_')}-{seed}")
+    os.makedirs(root, exist_ok=True)
+    rng = np.random.default_rng(seed)
+    items = []
+    for i in range(2):
+        p = os.path.join(root, f"src{i}.bin")
+        with open(p, "wb") as fh:
+            fh.write(rng.integers(0, 256, nbytes, dtype=np.uint8).tobytes())
+        items.append((p, p + ".out"))
+    total = 2 * nbytes
+    scenario = scenario.scaled_to(total, target_events=4.0)
+    cfg = ServiceConfig(
+        mover_budget=4, max_concurrent_tasks=2, chunk_bytes=32 * 1024,
+        tick_s=0.002, retry_backoff_s=0.001,
+        batch=BatchConfig(direct_bytes=1 << 30, batch_files=64),
+    )
+    out = dict(escapes=0, re_moved_journaled=0, corrupt_writes=0, healed=0,
+               mover_deaths=0)
+
+    # ---- leg A: faulted submit -> SUCCEEDED
+    sizes = [os.path.getsize(p) for p, _ in items]
+    camp = FaultCampaign(scenario, total_bytes=total, seed=seed,
+                         movers=cfg.mover_budget, item_bytes=sizes)
+    svc = TransferService(os.path.join(root, "svcA"), cfg,
+                          source_wrapper=camp.service_source_wrapper,
+                          dest_wrapper=camp.service_dest_wrapper)
+    try:
+        [tid] = svc.submit(items, batch=False)
+        st = svc.wait(tid, timeout=120)
+        ok = st.state == "SUCCEEDED"
+        for src, dst in items:
+            with open(src, "rb") as a, open(dst, "rb") as b:
+                ok = ok and a.read() == b.read()
+        out["escapes"] += int(not ok)
+        out["corrupt_writes"] += camp.stats.corrupt_writes
+        out["healed"] += st.refetches
+        out["mover_deaths"] += st.mover_deaths
+    finally:
+        svc.close()
+
+    # ---- leg B: kill mid-flight (+ torn journal), restart, count re-moves
+    for _src, dst in items:
+        if os.path.exists(dst):
+            os.remove(dst)
+    rootB = os.path.join(root, "svcB")
+    pace = lambda *_a: time.sleep(0.003)  # noqa: E731
+    svc1 = TransferService(rootB, cfg, fault_injector=pace)
+    [tid] = svc1.submit(items, batch=False)
+    deadline = time.monotonic() + 60
+    while svc1.status(tid).chunks_done < 4 and time.monotonic() < deadline:
+        time.sleep(0.002)
+    svc1.kill()
+    jpath = svc1.store.journal_path(tid)
+    if scenario.torn_journal and os.path.exists(jpath):
+        tear_journal_tail(jpath, seed=seed)
+    probe = ChunkJournal(jpath)
+    journaled = set(probe.records)
+    probe.close()
+
+    camp2 = FaultCampaign(scenario.replace(torn_journal=False),
+                          total_bytes=total, seed=seed + 77,
+                          movers=cfg.mover_budget, item_bytes=sizes)
+    moved2: list[tuple] = []
+    lock = threading.Lock()
+
+    def record(task_id, item_idx, chunk, _attempt):
+        with lock:
+            moved2.append((task_id, item_idx, chunk.offset))
+
+    svc2 = TransferService(rootB, cfg, fault_injector=record,
+                           source_wrapper=camp2.service_source_wrapper,
+                           dest_wrapper=camp2.service_dest_wrapper)
+    try:
+        st = svc2.wait(tid, timeout=120)
+        ok = st.state == "SUCCEEDED"
+        for src, dst in items:
+            with open(src, "rb") as a, open(dst, "rb") as b:
+                ok = ok and a.read() == b.read()
+        out["escapes"] += int(not ok)
+        # global chunk ids: offsets within item i start at chunk_base[i]
+        t = svc2._tasks[tid]
+        gidx = {(i, c.offset): t.chunk_base[i] + c.index
+                for i, plan in enumerate(t.plans) for c in plan.chunks}
+        moved_g = {gidx[(i, off)] for (_tid, i, off) in moved2}
+        out["re_moved_journaled"] += len(moved_g & journaled)
+        out["corrupt_writes"] += camp2.stats.corrupt_writes
+        out["healed"] += st.refetches
+        out["mover_deaths"] += st.mover_deaths
+    finally:
+        svc2.close()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# virtual-time testbed campaigns
+# ---------------------------------------------------------------------------
+def testbed_workload(quick: bool):
+    GB = 10**9
+    n = 8 if quick else 16
+    subs = [Submission(0.0, f"t{k % 3}", (20 * GB,)) for k in range(n)]
+    subs.append(Submission(0.0, "t3", tuple([2 * GB] * 8)))
+    return subs
+
+
+def testbed_campaign(expr: str, seed: int, *, work, clean_makespan: float) -> dict:
+    scenario = parse_scenario(expr)
+    total = sum(sum(s.file_bytes) for s in work)
+    scenario = scenario.scaled_to(total, target_events=8.0)
+    try:
+        rep = run_load(
+            work, policy="marginal", mover_budget=32, max_concurrent=8,
+            chunk_bytes=500 * 10**6,
+            batch=BatchConfig(direct_bytes=10**9, batch_files=16),
+            scenario=scenario, seed=seed,
+        )
+    except RuntimeError:
+        # run_load raises (deadlock / convergence guard) rather than
+        # returning unfinished tasks — report it as the conformance failure
+        # it is instead of crashing the sweep
+        return dict(unfinished=1, amplification=1.0, retention=0.0, corruptions=0)
+    return dict(
+        unfinished=0,
+        amplification=rep.retry_amplification,
+        retention=min(1.0, clean_makespan / rep.makespan_s) if rep.makespan_s else 1.0,
+        corruptions=rep.faults.corruptions,
+    )
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def _merge(agg: dict, one: dict) -> None:
+    for k, v in one.items():
+        agg[k] = agg.get(k, 0) + v
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=5)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+
+    nbytes = (1 * 1024 * 1024 + 4093) if args.quick else (3 * 1024 * 1024 + 4093)
+    chunk, movers = 96 * 1024, 8
+    svc_bytes = 96 * 1024 if args.quick else 256 * 1024
+    rows: list[tuple[str, float, str]] = []
+    violations: list[str] = []
+
+    with tempfile.TemporaryDirectory(prefix="chaos-") as tmpdir:
+        # clean engine reference timing
+        plan = plan_chunks(nbytes, movers, chunk_bytes=chunk, min_chunk=1, max_chunk=1 << 50)
+        payload = _payload(0, nbytes)
+        camp0 = FaultCampaign(parse_scenario("clean"), total_bytes=nbytes, seed=0)
+        t0 = time.perf_counter()
+        _engine_run(payload, plan, camp0, os.path.join(tmpdir, "clean.journal"))
+        clean_secs = time.perf_counter() - t0
+
+        # ---- real engine: full matrix x seeds
+        for expr in FULL_MATRIX:
+            agg: dict = {}
+            amps, rets = [], []
+            for seed in range(args.seeds):
+                one = engine_campaign(
+                    expr, seed, nbytes=nbytes, chunk=chunk, movers=movers,
+                    clean_seconds=clean_secs, tmpdir=tmpdir,
+                )
+                amps.append(one.pop("amplification"))
+                rets.append(one.pop("retention"))
+                _merge(agg, one)
+            pre = f"chaos/engine/{expr}"
+            rows.append((f"{pre}/escapes", agg["escapes"], "chunks"))
+            rows.append((f"{pre}/re_moved_journaled", agg["re_moved_journaled"], "chunks"))
+            rows.append((f"{pre}/corrupt_writes", agg["corrupt_writes"], "events"))
+            rows.append((f"{pre}/healed_by_refetch", agg["healed"], "events"))
+            rows.append((f"{pre}/mover_deaths", agg["mover_deaths"], "movers"))
+            rows.append((f"{pre}/retry_amplification", round(sum(amps) / len(amps), 3), "x"))
+            rows.append((f"{pre}/goodput_retention", round(sum(rets) / len(rets), 3), "frac"))
+            if agg["escapes"]:
+                violations.append(f"engine/{expr}: {agg['escapes']} integrity escapes")
+            if agg["re_moved_journaled"]:
+                violations.append(
+                    f"engine/{expr}: {agg['re_moved_journaled']} journaled chunks re-moved")
+            if agg["healed"] != agg["corrupt_writes"]:
+                violations.append(
+                    f"engine/{expr}: {agg['corrupt_writes']} corrupt writes but "
+                    f"{agg['healed']} healed by re-fetch")
+
+        # ---- real service: compound + torn campaigns x seeds
+        for expr in ("corrupt_1_per_TiB+kill_2_movers+outage_at_50pct",
+                     "corrupt_1_per_TiB+torn_journal_tail"):
+            agg = {}
+            for seed in range(args.seeds):
+                _merge(agg, service_campaign(expr, seed, nbytes=svc_bytes, tmpdir=tmpdir))
+            pre = f"chaos/service/{expr}"
+            rows.append((f"{pre}/escapes", agg["escapes"], "tasks"))
+            rows.append((f"{pre}/re_moved_journaled", agg["re_moved_journaled"], "chunks"))
+            rows.append((f"{pre}/corrupt_writes", agg["corrupt_writes"], "events"))
+            rows.append((f"{pre}/healed_by_refetch", agg["healed"], "events"))
+            rows.append((f"{pre}/mover_deaths", agg["mover_deaths"], "movers"))
+            if agg["escapes"]:
+                violations.append(f"service/{expr}: {agg['escapes']} integrity escapes")
+            if agg["re_moved_journaled"]:
+                violations.append(
+                    f"service/{expr}: {agg['re_moved_journaled']} journaled chunks re-moved")
+            if agg["healed"] != agg["corrupt_writes"]:
+                violations.append(
+                    f"service/{expr}: {agg['corrupt_writes']} corrupt writes but "
+                    f"{agg['healed']} healed by re-fetch")
+
+        # ---- virtual testbed: full matrix x seeds
+        work = testbed_workload(args.quick)
+        clean = run_load(
+            work, policy="marginal", mover_budget=32, max_concurrent=8,
+            chunk_bytes=500 * 10**6, batch=BatchConfig(direct_bytes=10**9, batch_files=16),
+        )
+        for expr in FULL_MATRIX:
+            amps, rets, unfin, corr = [], [], 0, 0
+            for seed in range(args.seeds):
+                one = testbed_campaign(expr, seed, work=work, clean_makespan=clean.makespan_s)
+                amps.append(one["amplification"])
+                rets.append(one["retention"])
+                unfin += one["unfinished"]
+                corr += one["corruptions"]
+            pre = f"chaos/testbed/{expr}"
+            rows.append((f"{pre}/failed_campaigns", unfin, "runs"))
+            rows.append((f"{pre}/corruptions", corr, "events"))
+            rows.append((f"{pre}/retry_amplification", round(sum(amps) / len(amps), 4), "x"))
+            rows.append((f"{pre}/goodput_retention", round(sum(rets) / len(rets), 3), "frac"))
+            if unfin:
+                violations.append(f"testbed/{expr}: {unfin} campaigns failed to converge")
+
+    total_escapes = sum(v for n, v, _u in rows if n.endswith("/escapes"))
+    total_re_moved = sum(v for n, v, _u in rows if n.endswith("/re_moved_journaled"))
+    rows.append(("chaos/total_escapes", total_escapes, "chunks"))
+    rows.append(("chaos/total_re_moved_journaled", total_re_moved, "chunks"))
+    rows.append(("chaos/seeds", args.seeds, "seeds"))
+
+    print("name,value,unit")
+    for name, val, unit in rows:
+        print(f"{name},{val},{unit}")
+    if violations:
+        print("\nCONFORMANCE VIOLATIONS:", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,19 +15,23 @@ from repro.core.integrity import (
     EMPTY_DIGEST,
     P,
     combine_at_offsets,
+    describe_mismatch,
     fingerprint_bytes,
     fingerprint_ndarray,
     merge_all,
     verify,
 )
-from repro.core.journal import ChunkJournal, JournalRecord
+from repro.core.journal import ChunkJournal, JournalRecord, replay_checked_lines
 from repro.core.transfer import (
     BufferDest,
     BufferSource,
     ChunkedTransfer,
+    EndpointOutage,
     FileDest,
     FileSource,
     IntegrityError,
+    MoverCrash,
+    QuarantineRecord,
     TransferReport,
     transfer_verified,
 )
@@ -35,8 +39,10 @@ from repro.core.transfer import (
 __all__ = [
     "Chunk", "ChunkPlan", "plan_auto", "plan_chunks", "plan_for_array",
     "BASES", "Digest", "EMPTY_DIGEST", "P", "combine_at_offsets",
-    "fingerprint_bytes", "fingerprint_ndarray", "merge_all", "verify",
-    "ChunkJournal", "JournalRecord",
-    "BufferDest", "BufferSource", "ChunkedTransfer", "FileDest", "FileSource",
-    "IntegrityError", "TransferReport", "transfer_verified",
+    "describe_mismatch", "fingerprint_bytes", "fingerprint_ndarray",
+    "merge_all", "verify",
+    "ChunkJournal", "JournalRecord", "replay_checked_lines",
+    "BufferDest", "BufferSource", "ChunkedTransfer", "EndpointOutage",
+    "FileDest", "FileSource", "IntegrityError", "MoverCrash",
+    "QuarantineRecord", "TransferReport", "transfer_verified",
 ]

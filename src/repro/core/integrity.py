@@ -207,3 +207,22 @@ def combine_at_offsets(
 
 def verify(expected: Digest, actual: Digest) -> bool:
     return expected.h == actual.h and expected.length == actual.length
+
+
+def describe_mismatch(expected: Digest, actual: Digest) -> str:
+    """Human-readable diagnosis of a failed ``verify`` (for fault reports).
+
+    Distinguishes a length mismatch (short/over read — an I/O fault) from a
+    residue mismatch (content corruption) and names the evaluation points
+    that disagree: a single disagreeing base on equal lengths is the
+    signature of in-flight bit corruption rather than a framing error.
+    """
+    if expected.length != actual.length:
+        return f"length mismatch ({expected.length} vs {actual.length} bytes)"
+    bad = [i for i in range(NBASES) if expected.h[i] != actual.h[i]]
+    if not bad:
+        return "digests match"
+    return (
+        f"content corruption: {len(bad)}/{NBASES} residues disagree "
+        f"(bases {tuple(BASES[i] for i in bad)})"
+    )

@@ -24,7 +24,13 @@ from typing import Callable, Protocol
 import numpy as np
 
 from repro.core.chunker import Chunk, ChunkPlan
-from repro.core.integrity import Digest, combine_at_offsets, fingerprint_bytes, verify
+from repro.core.integrity import (
+    Digest,
+    combine_at_offsets,
+    describe_mismatch,
+    fingerprint_bytes,
+    verify,
+)
 from repro.core.journal import ChunkJournal, JournalRecord
 
 
@@ -119,6 +125,48 @@ class BufferDest:
 
 
 # ---------------------------------------------------------------------------
+# Fault taxonomy — the failure classes the recovery logic distinguishes
+# ---------------------------------------------------------------------------
+class IntegrityError(RuntimeError):
+    """Per-chunk digest mismatch that survived the re-fetch budget."""
+
+
+class MoverCrash(RuntimeError):
+    """A data mover died mid-chunk. The worker thread that raises (or
+    observes) this is gone; the chunk it held is re-queued for surviving
+    movers — a dead mover costs one chunk re-move, never the transfer."""
+
+
+class EndpointOutage(IOError):
+    """An endpoint is temporarily unavailable (reads/writes raise for a
+    window). Retried on a separate, larger budget than generic I/O errors
+    with backoff, because outages heal on their own clock, not the chunk's."""
+
+
+@dataclasses.dataclass(frozen=True)
+class QuarantineRecord:
+    """One corrupt chunk landing, caught by the read-back digest and healed
+    by a re-fetch from the source (the paper's §3.2 rationale: a bad chunk
+    costs one chunk re-read, not a terabyte-file restart)."""
+
+    chunk_index: int
+    offset: int
+    length: int
+    attempt: int
+    expected_hex: str
+    actual_hex: str
+    detail: str
+
+
+class _ChunkCorruption(Exception):
+    """Internal: read-back digest disagreed with the source digest."""
+
+    def __init__(self, expected: Digest, actual: Digest):
+        super().__init__(describe_mismatch(expected, actual))
+        self.expected, self.actual = expected, actual
+
+
+# ---------------------------------------------------------------------------
 # Transfer engine
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -139,14 +187,14 @@ class TransferReport:
     retries: int
     skipped_chunks: int            # restored from journal (partial restart)
     speculated: int
+    refetches: int = 0             # corrupt chunks healed by source re-read
+    mover_deaths: int = 0          # worker threads lost mid-chunk, survived
+    outage_retries: int = 0        # ops rejected by an endpoint outage window
+    quarantined: tuple[QuarantineRecord, ...] = ()
 
     @property
     def gbps(self) -> float:
         return self.total_bytes * 8 / 1e9 / self.seconds if self.seconds > 0 else 0.0
-
-
-class IntegrityError(RuntimeError):
-    pass
 
 
 class ChunkedTransfer:
@@ -161,6 +209,10 @@ class ChunkedTransfer:
         integrity: bool = True,
         journal: ChunkJournal | None = None,
         max_retries: int = 3,
+        max_refetches: int = 3,            # re-reads per chunk on digest mismatch
+        outage_retries: int = 64,          # endpoint-outage budget per chunk
+        outage_backoff_s: float = 0.002,
+        max_mover_deaths: int | None = None,   # None -> 4*movers + 4
         fault_injector: Callable[[Chunk, int], None] | None = None,
         speculative_factor: float = 0.0,   # >0 enables straggler duplication
     ):
@@ -170,17 +222,39 @@ class ChunkedTransfer:
         self.integrity = integrity
         self.journal = journal
         self.max_retries = max_retries
+        self.max_refetches = max_refetches
+        self.outage_retries = outage_retries
+        self.outage_backoff_s = outage_backoff_s
+        self.max_mover_deaths = max_mover_deaths
         self.fault_injector = fault_injector
         self.speculative_factor = speculative_factor
         self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)   # completion/error/death
         self._outcomes: dict[int, ChunkOutcome] = {}
         self._retries = 0
+        self._refetches = 0
+        self._outage_retries_seen = 0
+        self._mover_deaths = 0
         self._speculated = 0
+        self._quarantined: list[QuarantineRecord] = []
         self._errors: list[BaseException] = []
+        self._target = 0           # chunks this run() must land
+        self._live_workers = 0
+        self._death_budget = 0
 
     # -- single chunk (one ERET/ESTO pair) --------------------------------
     def _move_chunk(self, chunk: Chunk, mover: int) -> ChunkOutcome:
-        attempts = 0
+        """Move one chunk with per-failure-class recovery budgets.
+
+        * generic I/O error  -> up to ``max_retries`` in-place retries;
+        * digest mismatch    -> quarantine + re-fetch from source, up to
+          ``max_refetches`` times (chunk-granular corruption healing);
+        * endpoint outage    -> wait out the window on its own (larger)
+          budget with backoff — outages must not eat the chunk's budget;
+        * mover crash        -> NOT retried here: the mover is gone, the
+          exception propagates and the worker re-queues the chunk.
+        """
+        attempts = generic = refetches = outages = 0
         t0 = time.perf_counter()
         while True:
             attempts += 1
@@ -198,40 +272,95 @@ class ChunkedTransfer:
                     back = self.dest.read_back(chunk.offset, chunk.length)
                     dst_digest = fingerprint_bytes(back)
                     if not verify(src_digest, dst_digest):
-                        raise IntegrityError(
-                            f"chunk {chunk.index} digest mismatch "
-                            f"(offset={chunk.offset}, len={chunk.length})"
-                        )
+                        raise _ChunkCorruption(src_digest, dst_digest)
                 return ChunkOutcome(chunk, src_digest, attempts, mover, time.perf_counter() - t0)
+            except MoverCrash:
+                raise
+            except _ChunkCorruption as c:
+                refetches += 1
+                with self._lock:
+                    self._retries += 1
+                    self._refetches += 1
+                    self._quarantined.append(QuarantineRecord(
+                        chunk.index, chunk.offset, chunk.length, attempts,
+                        c.expected.hexdigest(), c.actual.hexdigest(), str(c),
+                    ))
+                if refetches > self.max_refetches:
+                    raise IntegrityError(
+                        f"chunk {chunk.index} digest mismatch persisted through "
+                        f"{self.max_refetches} re-fetches (offset={chunk.offset}, "
+                        f"len={chunk.length}): {c}"
+                    ) from None
+            except EndpointOutage:
+                outages += 1
+                with self._lock:
+                    self._outage_retries_seen += 1
+                if outages > self.outage_retries:
+                    raise
+                time.sleep(self.outage_backoff_s * min(outages, 8))
             except Exception:
-                if attempts > self.max_retries:
+                generic += 1
+                if generic > self.max_retries:
                     raise
                 with self._lock:
                     self._retries += 1
 
     # -- worker loop: pull-from-queue == work stealing ---------------------
-    def _worker(self, mover: int, q: "queue.Queue[Chunk | None]") -> None:
-        while True:
-            chunk = q.get()
-            if chunk is None:
-                return
-            with self._lock:
-                if chunk.index in self._outcomes:   # speculated twin already landed
-                    continue
-            try:
-                out = self._move_chunk(chunk, mover)
-            except BaseException as e:  # noqa: BLE001 — propagated to caller
+    def _worker(self, mover: int, q: "queue.Queue[Chunk]") -> None:
+        try:
+            while True:
                 with self._lock:
-                    self._errors.append(e)
-                return
-            with self._lock:
-                first = chunk.index not in self._outcomes
-                if first:
-                    self._outcomes[chunk.index] = out
-            if first and self.journal is not None:
-                self.journal.append(
-                    JournalRecord(chunk.index, chunk.offset, chunk.length, out.digest.hexdigest())
-                )
+                    if self._errors or len(self._outcomes) >= self._target:
+                        return
+                try:
+                    chunk = q.get(timeout=0.02)
+                except queue.Empty:
+                    continue           # in-flight chunks may still re-queue
+                with self._lock:
+                    if chunk.index in self._outcomes:   # speculated twin landed
+                        continue
+                try:
+                    out = self._move_chunk(chunk, mover)
+                except MoverCrash:
+                    # the mover dies; the chunk survives it (re-queued for
+                    # whoever is left — or for a respawn if nobody is)
+                    with self._lock:
+                        self._mover_deaths += 1
+                        over = self._mover_deaths > self._death_budget
+                        if over:
+                            self._errors.append(RuntimeError(
+                                f"mover-death budget exhausted "
+                                f"({self._mover_deaths} > {self._death_budget})"
+                            ))
+                    if not over:
+                        q.put(chunk)
+                    return
+                except BaseException as e:  # noqa: BLE001 — propagated to caller
+                    with self._lock:
+                        self._errors.append(e)
+                    return
+                with self._lock:
+                    first = chunk.index not in self._outcomes
+                    if first:
+                        self._outcomes[chunk.index] = out
+                        if len(self._outcomes) >= self._target:
+                            self._cond.notify_all()
+                if first and self.journal is not None:
+                    try:
+                        self.journal.append(
+                            JournalRecord(chunk.index, chunk.offset, chunk.length,
+                                          out.digest.hexdigest())
+                        )
+                    except Exception as e:  # noqa: BLE001 — dead journal:
+                        with self._lock:    # fail fast, don't churn movers
+                            self._errors.append(RuntimeError(
+                                f"journal append failed for chunk {chunk.index}: {e}"
+                            ))
+                        return
+        finally:
+            with self._cond:
+                self._live_workers -= 1
+                self._cond.notify_all()    # wake the supervisor on death/error
 
     def run(self) -> TransferReport:
         t0 = time.perf_counter()
@@ -241,28 +370,49 @@ class ChunkedTransfer:
                 done_before[idx] = rec.digest()
 
         pending = [c for c in self.plan.chunks if c.index not in done_before]
-        q: "queue.Queue[Chunk | None]" = queue.Queue()
+        q: "queue.Queue[Chunk]" = queue.Queue()
         for c in pending:
             q.put(c)
+        self._target = len(pending)
 
-        movers = max(1, min(self.plan.movers, len(pending))) if pending else 1
-        threads = [
-            threading.Thread(target=self._worker, args=(m, q), daemon=True)
-            for m in range(movers)
-        ]
+        movers = max(1, min(self.plan.movers, len(pending))) if pending else 0
+        if self.max_mover_deaths is not None:
+            self._death_budget = self.max_mover_deaths
+        else:
+            self._death_budget = 4 * movers + 4
+        threads: list[threading.Thread] = []
+
+        def spawn(mover_id: int) -> None:
+            with self._lock:
+                self._live_workers += 1
+            th = threading.Thread(target=self._worker, args=(mover_id, q), daemon=True)
+            threads.append(th)
+            th.start()
+
+        for m in range(movers):
+            spawn(m)
         # Straggler mitigation: when the queue drains, re-enqueue the oldest
         # in-flight chunks so idle movers can duplicate them (first write wins
         # — writes are idempotent on disjoint ranges).
         if self.speculative_factor > 0 and pending:
-            watcher = threading.Thread(target=self._speculate, args=(q, movers), daemon=True)
-        else:
-            watcher = None
-        for th in threads:
-            th.start()
-        if watcher:
+            watcher = threading.Thread(
+                target=self._speculate, args=(q, movers, set(done_before)), daemon=True
+            )
             watcher.start()
-        for _ in threads:
-            q.put(None)
+        # Supervise: the transfer outlives its movers. If every worker died
+        # (MoverCrash) with work outstanding, spawn a replacement. Sleeps on
+        # the condition workers signal at completion, error, and death — no
+        # busy-polling in the fault-free path.
+        next_mover = movers
+        while pending:
+            with self._cond:
+                if self._errors or len(self._outcomes) >= self._target:
+                    break
+                if self._live_workers > 0:
+                    self._cond.wait(0.1)
+                    continue
+            spawn(next_mover)
+            next_mover += 1
         for th in threads:
             th.join()
         if self._errors:
@@ -280,18 +430,26 @@ class ChunkedTransfer:
             retries=self._retries,
             skipped_chunks=len(done_before),
             speculated=self._speculated,
+            refetches=self._refetches,
+            mover_deaths=self._mover_deaths,
+            outage_retries=self._outage_retries_seen,
+            quarantined=tuple(self._quarantined),
         )
 
-    def _speculate(self, q: "queue.Queue[Chunk | None]", movers: int) -> None:
+    def _speculate(self, q: "queue.Queue[Chunk]", movers: int, skip: set[int]) -> None:
+        # NOTE: journaled chunks (``skip``) must never be duplicated — a
+        # speculated twin of an already-landed chunk would re-move journaled
+        # bytes, the exact thing partial restart exists to avoid.
+        target = self._target
         while True:
             time.sleep(0.005)
             with self._lock:
                 done = len(self._outcomes)
-                total = self.plan.n_chunks
-                if done >= total or self._errors:
+                if done >= target or self._errors:
                     return
-                if q.qsize() <= movers and total - done <= movers:
-                    missing = [c for c in self.plan.chunks if c.index not in self._outcomes]
+                if q.qsize() <= movers and target - done <= movers:
+                    missing = [c for c in self.plan.chunks
+                               if c.index not in self._outcomes and c.index not in skip]
                     for c in missing[: movers]:
                         q.put(c)
                         self._speculated += 1

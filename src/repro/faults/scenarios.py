@@ -1,0 +1,148 @@
+"""Composable fault-campaign scenarios — the chaos DSL.
+
+A ``Scenario`` names a set of faults to inject into one transfer (or one
+service workload): silent bit-flip corruption at a bytes-per-error rate (the
+paper's Globus logs: ~one corruption per 1.26 TB moved, §2.3), mover deaths
+mid-chunk, stalled/straggler movers, endpoint outage windows, and torn
+journal tails. Scenarios compose with ``+``::
+
+    parse_scenario("corrupt_1_per_TiB+kill_2_movers+outage_at_50pct")
+
+and the same scenario object drives BOTH backends:
+
+  * the real threaded engine/service via ``repro.faults.injectors.FaultCampaign``
+    (wrapped ByteSource/ByteDest endpoints + mover-pool injection), and
+  * the virtual-time testbed via ``repro.service.testbed.run_load(scenario=...)``
+    (fluid-model equivalents: re-moved bytes, mover-budget kills, rate-zero
+    outage windows).
+
+These are the repo's executable conformance campaigns: `benchmarks/chaos.py`
+runs the ``FULL_MATRIX`` across seeds and asserts zero integrity escapes and
+zero re-moved journaled chunks — the invariants every future PR must keep.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+TiB = 1024**4
+PAPER_BYTES_PER_ERROR = 1.26e12     # one silent corruption per 1.26 TB (§2.3)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named fault campaign. All fields are deterministic *plans*; the
+    random realisation (which byte flips, which op dies) comes from the seed
+    given to the injector/testbed, never from global state."""
+
+    name: str = "clean"
+    # silent corruption: mean bytes between injected bit flips (None = off).
+    bytes_per_error: float | None = None
+    # mover deaths: kill this many movers mid-chunk, starting once the
+    # transfer has moved ``kill_at_frac`` of its bytes.
+    kill_movers: int = 0
+    kill_at_frac: float = 0.25
+    # endpoint outage: at ``outage_at_frac`` progress the endpoints reject
+    # the next ``outage_ops`` operations (real engine) / go rate-zero for
+    # ``outage_s`` virtual seconds (testbed).
+    outage_at_frac: float | None = None
+    outage_ops: int = 24
+    outage_s: float = 30.0
+    # stragglers: this many one-shot stalls of ``stall_s`` wall-clock seconds.
+    stall_movers: int = 0
+    stall_s: float = 0.02
+    # torn journal: after a crash, truncate the journal mid-way through its
+    # final record before restarting (exercised by chaos restart legs).
+    torn_journal: bool = False
+
+    def __post_init__(self):
+        if self.bytes_per_error is not None and self.bytes_per_error <= 0:
+            raise ValueError("bytes_per_error must be > 0")
+        if not (0.0 <= self.kill_at_frac <= 1.0):
+            raise ValueError("kill_at_frac must be in [0, 1]")
+        if self.outage_at_frac is not None and not (0.0 <= self.outage_at_frac <= 1.0):
+            raise ValueError("outage_at_frac must be in [0, 1]")
+
+    # -- composition --------------------------------------------------------
+    def __add__(self, other: "Scenario") -> "Scenario":
+        """Merge two campaigns: for every field, the non-default wins (the
+        right side wins when both differ from the default)."""
+        merged = {}
+        for f in dataclasses.fields(self):
+            if f.name == "name":
+                continue
+            default = f.default
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            merged[f.name] = b if b != default else a
+        name = self.name if other.name == "clean" else (
+            other.name if self.name == "clean" else f"{self.name}+{other.name}"
+        )
+        return Scenario(name=name, **merged)
+
+    def replace(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+    def scaled_to(self, total_bytes: int, *, target_events: float = 4.0) -> "Scenario":
+        """Rescale the corruption rate so ~``target_events`` strikes hit a
+        payload of ``total_bytes`` — the paper's per-TB rates would inject
+        nothing into a test-sized payload; conformance runs scale the rate,
+        not the mechanism."""
+        if self.bytes_per_error is None or total_bytes <= 0:
+            return self
+        return dataclasses.replace(
+            self, bytes_per_error=max(1.0, total_bytes / target_events)
+        )
+
+    @property
+    def is_clean(self) -> bool:
+        return (
+            self.bytes_per_error is None and self.kill_movers == 0
+            and self.outage_at_frac is None and self.stall_movers == 0
+            and not self.torn_journal
+        )
+
+
+# ---------------------------------------------------------------------------
+# named registry
+# ---------------------------------------------------------------------------
+CLEAN = Scenario()
+SCENARIOS: dict[str, Scenario] = {
+    "clean": CLEAN,
+    # corruption at the paper's calibrated Globus-log rate (§2.3) and at a
+    # round per-TiB rate; conformance runs call .scaled_to(payload) on these.
+    "corrupt_paper_rate": Scenario(name="corrupt_paper_rate",
+                                   bytes_per_error=PAPER_BYTES_PER_ERROR),
+    "corrupt_1_per_TiB": Scenario(name="corrupt_1_per_TiB", bytes_per_error=float(TiB)),
+    "kill_2_movers": Scenario(name="kill_2_movers", kill_movers=2),
+    "kill_all_movers": Scenario(name="kill_all_movers", kill_movers=1 << 10),
+    "outage_at_50pct": Scenario(name="outage_at_50pct", outage_at_frac=0.5),
+    "stall_1_mover": Scenario(name="stall_1_mover", stall_movers=1),
+    "torn_journal_tail": Scenario(name="torn_journal_tail", torn_journal=True),
+}
+
+
+def parse_scenario(expr: str) -> Scenario:
+    """``"corrupt_1_per_TiB+kill_2_movers"`` -> the composed Scenario."""
+    parts = [p.strip() for p in expr.split("+") if p.strip()]
+    if not parts:
+        raise ValueError(f"empty scenario expression {expr!r}")
+    out = CLEAN
+    for p in parts:
+        if p not in SCENARIOS:
+            raise ValueError(f"unknown scenario {p!r} (known: {sorted(SCENARIOS)})")
+        out = out + SCENARIOS[p]
+    return out
+
+
+# The conformance matrix benchmarks/chaos.py sweeps: every fault class alone,
+# then the compound campaigns (the paper's failure cocktail).
+FULL_MATRIX: tuple[str, ...] = (
+    "corrupt_1_per_TiB",
+    "kill_2_movers",
+    "outage_at_50pct",
+    "stall_1_mover",
+    "corrupt_1_per_TiB+kill_2_movers",
+    "corrupt_1_per_TiB+outage_at_50pct",
+    "corrupt_1_per_TiB+kill_2_movers+outage_at_50pct",
+    "torn_journal_tail",
+    "corrupt_1_per_TiB+torn_journal_tail",
+)

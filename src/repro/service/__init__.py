@@ -29,18 +29,27 @@ from repro.service.task import (
     PENDING,
     SUCCEEDED,
     TERMINAL,
+    FaultReport,
     ItemReport,
     TaskSpec,
     TaskStatus,
     TransferItem,
 )
-from repro.service.testbed import LoadReport, Submission, SimTask, mixed_workload, run_load
+from repro.service.testbed import (
+    FaultLog,
+    LoadReport,
+    Submission,
+    SimTask,
+    mixed_workload,
+    run_load,
+)
 
 __all__ = [
     "ACTIVE", "CANCELED", "FAILED", "PAUSED", "PENDING", "SUCCEEDED", "TERMINAL",
     "AllocationEngine", "BatchConfig", "Batcher", "CheckpointSubmission",
-    "EventBus", "ItemReport", "LoadReport", "ServiceConfig", "SimTask",
-    "Submission", "TaskEvent", "TaskRecord", "TaskSpec", "TaskStatus",
-    "TaskStore", "TenantQuota", "TransferItem", "TransferService",
-    "mixed_workload", "run_load", "select_activations", "submit_checkpoint",
+    "EventBus", "FaultLog", "FaultReport", "ItemReport", "LoadReport",
+    "ServiceConfig", "SimTask", "Submission", "TaskEvent", "TaskRecord",
+    "TaskSpec", "TaskStatus", "TaskStore", "TenantQuota", "TransferItem",
+    "TransferService", "mixed_workload", "run_load", "select_activations",
+    "submit_checkpoint",
 ]

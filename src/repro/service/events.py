@@ -18,6 +18,10 @@ SUBMITTED = "SUBMITTED"
 ACTIVATED = "ACTIVATED"
 PROGRESS = "PROGRESS"
 RETRY = "RETRY"
+# chunk-level fault observation: payload carries fault= "corruption" |
+# "outage" | "mover_death", the (item, chunk, attempt) coordinates, and
+# fatal=True when the fault exhausted its retry budget and failed the task.
+FAULT = "FAULT"
 REALLOC = "REALLOC"
 PAUSED = "PAUSED"
 RESUMED = "RESUMED"

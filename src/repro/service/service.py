@@ -44,7 +44,16 @@ from repro.core.integrity import (
 from repro.core.journal import ChunkJournal, JournalRecord
 from repro.core.scheduler import TransferRequest
 from repro.core.simulator import ALCF, DEFAULT_LINK, NERSC, LinkConfig, SiteConfig
-from repro.core.transfer import BufferSource, ByteSource, FileDest, FileSource, IntegrityError
+from repro.core.transfer import (
+    BufferSource,
+    ByteDest,
+    ByteSource,
+    EndpointOutage,
+    FileDest,
+    FileSource,
+    IntegrityError,
+    MoverCrash,
+)
 from repro.service import events as ev
 from repro.service.batcher import BatchConfig, Batcher
 from repro.service.events import EventBus
@@ -56,7 +65,15 @@ from repro.service.scheduler import (
 )
 from repro.service import task as tk
 from repro.service.store import TaskStore
-from repro.service.task import ItemReport, TaskSpec, TaskStatus, TransferItem, TransitionError
+from repro.service.task import (
+    FaultReport,
+    ItemReport,
+    TaskSpec,
+    TaskStatus,
+    TransferItem,
+    TransitionError,
+    classify_fault,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,7 +83,10 @@ class ServiceConfig:
     policy: str = "marginal"         # fair | file_bound | marginal
     chunk_bytes: int = 8 * MiB       # default chunk size for task items
     integrity: bool = True           # dest read-back verification per chunk
-    max_retries: int = 3             # per-chunk attempts - 1
+    max_retries: int = 3             # per-chunk generic-I/O retries
+    max_refetches: int = 3           # per-chunk source re-reads on digest mismatch
+    outage_retries: int = 64         # per-chunk endpoint-outage budget
+    max_mover_deaths: int = 16       # per-task mover-crash budget
     retry_backoff_s: float = 0.01    # exponential backoff base
     tick_s: float = 0.005            # scheduler/runner poll period
     batch: BatchConfig = dataclasses.field(default_factory=BatchConfig)
@@ -100,9 +120,13 @@ class _Task:
         self.target_movers = 1
         self.n_workers = 0
         self.failed_error: str | None = None
+        self.fault: FaultReport | None = None
         self.started_s: float | None = None
         self.finished_s: float | None = None
         self.retries = 0
+        self.refetches = 0
+        self.outages = 0
+        self.mover_deaths = 0
         self.resumed_chunks = 0
         self.item_reports: tuple[ItemReport, ...] = ()
 
@@ -130,7 +154,7 @@ class _Task:
 
         # lazily-opened per-item endpoints (shared by this task's movers)
         self._sources: dict[int, ByteSource] = {}
-        self._dests: dict[int, FileDest] = {}
+        self._dests: dict[int, ByteDest] = {}
 
 class TransferService:
     """Multi-tenant async task manager over the chunked-transfer engine."""
@@ -141,6 +165,8 @@ class TransferService:
         config: ServiceConfig | None = None,
         *,
         fault_injector: Callable[[str, int, Any, int], None] | None = None,
+        source_wrapper: Callable[[str, int, ByteSource], ByteSource] | None = None,
+        dest_wrapper: Callable[[str, int, ByteDest], ByteDest] | None = None,
     ):
         self.config = config or ServiceConfig()
         self.store = TaskStore(root)
@@ -157,6 +183,11 @@ class TransferService:
             default_quota=self.config.default_quota,
         )
         self._fault_injector = fault_injector
+        # chaos hooks: wrap the per-item endpoints ((task_id, item_idx,
+        # endpoint) -> endpoint) so fault campaigns can corrupt/outage/kill
+        # the data path without the service knowing
+        self._source_wrapper = source_wrapper
+        self._dest_wrapper = dest_wrapper
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
         self._tasks: dict[str, _Task] = {}
@@ -604,21 +635,52 @@ class TransferService:
                     return
                 try:
                     digest = self._move_chunk(t, item_idx, chunk)
+                except MoverCrash as e:
+                    # the mover thread dies; the chunk survives it. Re-queue
+                    # the chunk for the remaining movers (the driver tops the
+                    # pool back up) unless the death budget is exhausted.
+                    with t.lock:
+                        t.mover_deaths += 1
+                        over = t.mover_deaths > self.config.max_mover_deaths
+                        if over:
+                            t.failed_error = (
+                                f"mover-death budget exhausted "
+                                f"({t.mover_deaths} > {self.config.max_mover_deaths})"
+                            )
+                            t.fault = self._fault_report(t, "mover_death", item_idx, chunk, e)
+                    self.events.emit(
+                        ev.FAULT, t.spec.task_id, t.spec.tenant,
+                        fault="mover_death", item=item_idx, chunk=chunk.index,
+                        fatal=over,
+                    )
+                    if not over:
+                        work.put((gidx, item_idx, chunk))
+                    return
                 except Exception as e:  # noqa: BLE001
                     with t.lock:
                         t.failed_error = (
                             f"item {item_idx} chunk {chunk.index} "
                             f"(offset={chunk.offset}): {e}"
                         )
+                        t.fault = self._fault_report(t, classify_fault(e), item_idx, chunk, e)
                     return
                 try:
                     with jlock:
                         journal.append(JournalRecord(
                             gidx, chunk.offset, chunk.length, digest.hexdigest()
                         ))
-                except Exception:  # noqa: BLE001 — only possible mid-kill()
-                    if not self._kill_evt.is_set():
-                        raise
+                except Exception as e:  # noqa: BLE001
+                    if self._kill_evt.is_set():
+                        return          # kill() closed the journal under us
+                    # a dead journal (ENOSPC, pulled mount) must FAIL the
+                    # task with a report, not strand it ACTIVE: completions
+                    # that can't be made durable are not completions
+                    with t.lock:
+                        t.failed_error = (
+                            f"journal append failed for item {item_idx} chunk "
+                            f"{chunk.index}: {e}"
+                        )
+                        t.fault = self._fault_report(t, "io", item_idx, chunk, e)
                     return
                 with self._lock:
                     self.moved_chunks += 1
@@ -637,13 +699,34 @@ class TransferService:
             with t.lock:
                 t.n_workers -= 1
 
+    def _fault_report(self, t: _Task, kind: str, item_idx: int, chunk,
+                      exc: BaseException) -> FaultReport:
+        """Structured terminal-fault description (caller holds t.lock)."""
+        return FaultReport(
+            kind=kind, item=item_idx, chunk=chunk.index, offset=chunk.offset,
+            error=str(exc), retries=t.retries, refetches=t.refetches,
+            outages=t.outages, mover_deaths=t.mover_deaths,
+        )
+
     def _move_chunk(self, t: _Task, item_idx: int, chunk):
         """One chunk: read -> fingerprint -> write -> read-back verify, with
-        bounded exponential-backoff retries (chunk-granular fault recovery)."""
+        per-failure-class recovery budgets (chunk-granular fault recovery):
+
+        * digest mismatch -> immediate re-fetch from source (quarantine the
+          landing), up to ``max_refetches``;
+        * endpoint outage -> wait the window out with backoff on the (larger)
+          ``outage_retries`` budget — outages heal on their own clock;
+        * mover crash -> propagates to the worker, which re-queues the chunk;
+        * anything else -> exponential-backoff retries up to ``max_retries``.
+
+        Every fault is propagated through the event stream (FAULT/RETRY); the
+        task only FAILs — with a structured FaultReport — after the budget of
+        the terminal failure class is exhausted.
+        """
         item = t.spec.items[item_idx]
         src = self._source(t, item_idx)
         dst = self._dest(t, item_idx)
-        attempts = 0
+        attempts = generic = refetches = outages = 0
         while True:
             attempts += 1
             try:
@@ -663,8 +746,35 @@ class TransferService:
                             f"read-back digest mismatch ({item.dst} @ {chunk.offset})"
                         )
                 return digest
+            except MoverCrash:
+                raise                      # the mover is gone; no in-place retry
+            except IntegrityError:
+                refetches += 1
+                with t.lock:
+                    t.retries += 1
+                    t.refetches += 1
+                self.events.emit(
+                    ev.FAULT, t.spec.task_id, t.spec.tenant,
+                    fault="corruption", item=item_idx, chunk=chunk.index,
+                    attempt=attempts, fatal=refetches > self.config.max_refetches,
+                )
+                if refetches > self.config.max_refetches:
+                    raise
+            except EndpointOutage:
+                outages += 1
+                with t.lock:
+                    t.outages += 1
+                self.events.emit(
+                    ev.FAULT, t.spec.task_id, t.spec.tenant,
+                    fault="outage", item=item_idx, chunk=chunk.index,
+                    attempt=attempts, fatal=outages > self.config.outage_retries,
+                )
+                if outages > self.config.outage_retries:
+                    raise
+                time.sleep(self.config.retry_backoff_s * min(outages, 8))
             except Exception:
-                if attempts > self.config.max_retries:
+                generic += 1
+                if generic > self.config.max_retries:
                     raise
                 with t.lock:
                     t.retries += 1
@@ -672,7 +782,7 @@ class TransferService:
                     ev.RETRY, t.spec.task_id, t.spec.tenant,
                     item=item_idx, chunk=chunk.index, attempt=attempts,
                 )
-                time.sleep(self.config.retry_backoff_s * (2 ** (attempts - 1)))
+                time.sleep(self.config.retry_backoff_s * (2 ** (generic - 1)))
 
     def _source(self, t: _Task, item_idx: int) -> ByteSource:
         with t.lock:
@@ -683,10 +793,12 @@ class TransferService:
                     src = self._mem_sources[(t.spec.task_id, item_idx)]
                 else:
                     src = FileSource(item.src)
+                if self._source_wrapper is not None:
+                    src = self._source_wrapper(t.spec.task_id, item_idx, src)
                 t._sources[item_idx] = src
             return src
 
-    def _dest(self, t: _Task, item_idx: int) -> FileDest:
+    def _dest(self, t: _Task, item_idx: int) -> ByteDest:
         with t.lock:
             dst = t._dests.get(item_idx)
             if dst is None:
@@ -695,6 +807,8 @@ class TransferService:
                 if parent:
                     os.makedirs(parent, exist_ok=True)
                 dst = FileDest(item.dst, item.nbytes)
+                if self._dest_wrapper is not None:
+                    dst = self._dest_wrapper(t.spec.task_id, item_idx, dst)
                 t._dests[item_idx] = dst
             return dst
 
@@ -754,6 +868,8 @@ class TransferService:
         payload: dict[str, Any] = {"chunks_done": t.chunks_done}
         if error:
             payload["error"] = error
+        if state == tk.FAILED and t.fault is not None:
+            payload["fault"] = t.fault.to_json()
         self.events.emit(kind, t.spec.task_id, t.spec.tenant, **payload)
 
     def _snapshot(self, t: _Task) -> TaskStatus:
@@ -776,4 +892,8 @@ class TransferService:
                 started_s=t.started_s,
                 finished_s=t.finished_s,
                 item_reports=t.item_reports,
+                refetches=t.refetches,
+                outages=t.outages,
+                mover_deaths=t.mover_deaths,
+                fault=t.fault,
             )

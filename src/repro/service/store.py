@@ -6,9 +6,12 @@ Two kinds of on-disk state under one service root:
     <root>/journals/<task_id>.journal   per-task chunk-completion journal
 
 ``tasks.log`` records submissions and every state transition. Like the chunk
-journal (core.journal) each line is self-checksummed so a torn tail write from
-a crashed service is detected and dropped on replay instead of corrupting
-recovery. Replay order reconstructs submission order (used for FIFO fairness).
+journal (core.journal) each line is self-checksummed; replay keeps every
+verified record (damaged lines in between are skipped — each record vouches
+for itself) and truncates the torn tail after the last verified record
+before reopening for append, so recovery never glues a new record onto a
+half-written line. Replay order reconstructs submission order (used for
+FIFO fairness).
 """
 from __future__ import annotations
 
@@ -19,7 +22,7 @@ import threading
 from typing import IO
 
 from repro.core.integrity import fingerprint_bytes
-from repro.core.journal import ChunkJournal
+from repro.core.journal import ChunkJournal, replay_checked_lines
 from repro.service.task import PENDING, STATES, TaskSpec
 
 
@@ -48,34 +51,30 @@ class TaskStore:
         self._fh: IO[str] | None = None
         self._n_submitted = 0
         self.records: dict[str, TaskRecord] = {}
+        self.torn_tail_bytes = 0          # bytes dropped from a crashed append
         if os.path.exists(self.log_path):
             self._replay()
         self._fh = open(self.log_path, "a", encoding="utf-8")
 
     # -- replay ------------------------------------------------------------
     def _replay(self) -> None:
-        with open(self.log_path, "r", encoding="utf-8") as fh:
-            for line in fh:
-                line = line.strip()
-                if not line:
-                    continue
-                try:
-                    obj = json.loads(line)
-                    body = obj["body"]
-                    if obj["check"] != _self_check(json.dumps(body, sort_keys=True)):
-                        continue                      # torn/corrupt record
-                    kind = body["type"]
-                except (json.JSONDecodeError, KeyError, TypeError):
-                    continue                          # truncated tail line
-                if kind == "submit":
-                    spec = TaskSpec.from_json(body["spec"])
-                    self.records[spec.task_id] = TaskRecord(self._n_submitted, spec)
-                    self._n_submitted += 1
-                elif kind == "state":
-                    rec = self.records.get(body.get("task_id"))
-                    if rec is not None and body.get("state") in STATES:
-                        rec.state = body["state"]
-                        rec.error = body.get("error")
+        data, valid_end = replay_checked_lines(self.log_path, self._apply)
+        self.torn_tail_bytes = len(data) - valid_end
+        if self.torn_tail_bytes:
+            with open(self.log_path, "r+b") as fh:
+                fh.truncate(valid_end)
+
+    def _apply(self, body: dict) -> None:
+        kind = body["type"]
+        if kind == "submit":
+            spec = TaskSpec.from_json(body["spec"])
+            self.records[spec.task_id] = TaskRecord(self._n_submitted, spec)
+            self._n_submitted += 1
+        elif kind == "state":
+            rec = self.records.get(body.get("task_id"))
+            if rec is not None and body.get("state") in STATES:
+                rec.state = body["state"]
+                rec.error = body.get("error")
 
     # -- appends -----------------------------------------------------------
     def _append(self, body: dict) -> None:

@@ -130,6 +130,45 @@ class TaskSpec:
 # Reports / status snapshots (API surface)
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
+class FaultReport:
+    """Structured description of the fault that failed a task.
+
+    Attached to TaskStatus (and the FAILED event payload) only after the
+    per-class retry budgets exhausted: ``kind`` names the terminal failure
+    class, the coordinates pin the chunk that could not be recovered, and the
+    counters record how much recovery was attempted before giving up.
+    """
+
+    kind: str          # "corruption" | "outage" | "mover_death" | "io" | "error"
+    item: int
+    chunk: int
+    offset: int
+    error: str
+    retries: int = 0
+    refetches: int = 0
+    outages: int = 0
+    mover_deaths: int = 0
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def classify_fault(exc: BaseException) -> str:
+    """Map an exception from the chunk-move path to a FaultReport kind."""
+    from repro.core.transfer import EndpointOutage, IntegrityError, MoverCrash
+
+    if isinstance(exc, IntegrityError):
+        return "corruption"
+    if isinstance(exc, EndpointOutage):
+        return "outage"
+    if isinstance(exc, MoverCrash):
+        return "mover_death"
+    if isinstance(exc, OSError):
+        return "io"
+    return "error"
+
+
+@dataclasses.dataclass(frozen=True)
 class ItemReport:
     """Per-item outcome of a SUCCEEDED task (digests come from the journal)."""
 
@@ -162,6 +201,11 @@ class TaskStatus:
     started_s: float | None
     finished_s: float | None
     item_reports: tuple[ItemReport, ...] = ()
+    # chunk-level fault/recovery accounting (chaos-hardened recovery):
+    refetches: int = 0        # corrupt chunk landings healed by source re-read
+    outages: int = 0          # ops rejected by endpoint outage windows
+    mover_deaths: int = 0     # movers lost mid-chunk (chunks re-queued)
+    fault: FaultReport | None = None    # set when state == FAILED
 
     @property
     def done(self) -> bool:

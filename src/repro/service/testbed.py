@@ -15,6 +15,23 @@ at every arrival/activation/completion. Chunk-level transients inside one
 task (pipelining warm-up, checksum tails) are already folded into the
 predicted rate because predictions come from the event-stepped per-chunk
 simulator.
+
+Fault campaigns (``run_load(scenario=..., seed=...)``) execute the same
+``repro.faults`` scenarios the real engine runs, translated to fluid-model
+equivalents:
+
+  * corruption at ``bytes_per_error`` -> seeded Poisson draw of corrupt-chunk
+    events per task, each costing one chunk re-move (extra bytes on the
+    task's remaining counter — the chunk-granular re-fetch cost);
+  * ``kill_movers`` -> the global mover budget shrinks when total progress
+    crosses ``kill_at_frac`` (dead movers are not replaced at testbed scale);
+  * outage windows  -> every active task's rate is zero for ``outage_s``
+    virtual seconds once progress crosses ``outage_at_frac``;
+  * ``torn_journal`` has no fluid equivalent (journals are a real-engine
+    artifact) and is a no-op here.
+
+The injected totals are accounted in ``LoadReport.faults`` so chaos sweeps
+can report goodput retention and retry amplification against the clean run.
 """
 from __future__ import annotations
 
@@ -22,8 +39,11 @@ import dataclasses
 import math
 from typing import Sequence
 
+import numpy as np
+
 from repro.core.scheduler import TransferRequest
 from repro.core.simulator import ALCF, DEFAULT_LINK, NERSC, LinkConfig, SiteConfig
+from repro.faults.scenarios import Scenario
 from repro.service.batcher import BatchConfig, Batcher
 from repro.service.scheduler import (
     DEFAULT_QUOTA,
@@ -75,11 +95,30 @@ class SimTask:
 
 
 @dataclasses.dataclass
+class FaultLog:
+    """Faults injected into one virtual-time run (fluid-model accounting)."""
+
+    corruptions: int = 0          # corrupt-chunk events drawn across tasks
+    re_moved_bytes: float = 0.0   # extra bytes moved to heal them
+    mover_kills: int = 0
+    outage_s: float = 0.0         # virtual seconds of rate-zero window
+
+
+@dataclasses.dataclass
 class LoadReport:
     policy: str
     tasks: list[SimTask]
     makespan_s: float
     aggregate_gbps: float
+    scenario: str = "clean"
+    faults: FaultLog = dataclasses.field(default_factory=FaultLog)
+    goodput_bytes: float = 0.0    # client-useful bytes (sum of task sizes)
+    moved_bytes: float = 0.0      # bytes actually moved (goodput + re-moves)
+
+    @property
+    def retry_amplification(self) -> float:
+        """moved/goodput — 1.0 means no byte was moved twice."""
+        return self.moved_bytes / self.goodput_bytes if self.goodput_bytes else 1.0
 
     def latencies(self, *, large_bytes: int | None = None) -> list[float]:
         sel = self.tasks
@@ -118,6 +157,8 @@ def run_load(
     default_quota: TenantQuota = DEFAULT_QUOTA,
     alloc_step: int = 4,
     integrity: bool = True,
+    scenario: Scenario | None = None,
+    seed: int = 0,
 ) -> LoadReport:
     """Drive the service scheduling stack over a workload in virtual time."""
     if max_concurrent > mover_budget:
@@ -144,6 +185,28 @@ def run_load(
                 seq=len(tasks),
                 remaining_bytes=float(sum(sizes)),
             ))
+
+    # ---- fault campaign: seeded fluid-model realisation
+    flog = FaultLog()
+    goodput_bytes = float(sum(t.total_bytes for t in tasks))
+    if scenario is not None and scenario.bytes_per_error is not None:
+        rng = np.random.default_rng(seed)
+        for task in tasks:
+            n = int(rng.poisson(task.total_bytes / scenario.bytes_per_error))
+            if n:
+                eff_chunk = min(task.chunk_bytes or task.total_bytes, task.total_bytes)
+                extra = float(min(n * eff_chunk, 4 * task.total_bytes))
+                task.remaining_bytes += extra     # chunk-granular re-fetch cost
+                flog.corruptions += n
+                flog.re_moved_bytes += extra
+    grand_total = float(sum(t.remaining_bytes for t in tasks))
+    kill_at = outage_at = None
+    if scenario is not None and scenario.kill_movers > 0:
+        kill_at = scenario.kill_at_frac * grand_total
+    if scenario is not None and scenario.outage_at_frac is not None:
+        outage_at = scenario.outage_at_frac * grand_total
+    outage_until: float | None = None
+    moved_bytes = 0.0
 
     pending: list[SimTask] = []
     active: list[SimTask] = []
@@ -211,7 +274,13 @@ def run_load(
             moved = True
         if moved or active or pending:
             reschedule()
-        # next event: earliest completion vs next arrival
+        # endpoint outage window: every active task's rate is zero
+        in_outage = outage_until is not None and t_now < outage_until - 1e-12
+        if in_outage:
+            for a in active:
+                a.rate_gbps = 0.0
+        agg_Bps = sum(a.rate_gbps for a in active) * 1e9 / 8
+        # next event: earliest completion vs next arrival vs fault events
         dt_done = math.inf
         for a in active:
             if a.rate_gbps > 0:
@@ -220,12 +289,29 @@ def run_load(
             arrivals[ai].submit_s - t_now if ai < len(arrivals) else math.inf
         )
         dt = min(dt_done, dt_arrive)
+        if in_outage:
+            dt = min(dt, outage_until - t_now)
+        for trigger in (kill_at, outage_at):
+            if trigger is not None and agg_Bps > 0 and moved_bytes < trigger:
+                dt = min(dt, (trigger - moved_bytes) / agg_Bps)
         if not math.isfinite(dt):
             raise RuntimeError("testbed deadlock: nothing progresses")
         dt = max(dt, 0.0)
         t_now += dt
         for a in active:
             a.remaining_bytes -= a.rate_gbps * 1e9 / 8 * dt
+        moved_bytes += agg_Bps * dt
+        # fault triggers crossed by this step
+        if kill_at is not None and moved_bytes >= kill_at - 1e-6:
+            engine.mover_budget = max(1, engine.mover_budget - scenario.kill_movers)
+            flog.mover_kills = scenario.kill_movers
+            kill_at = None
+        if outage_at is not None and moved_bytes >= outage_at - 1e-6:
+            outage_until = t_now + scenario.outage_s
+            flog.outage_s = scenario.outage_s
+            outage_at = None
+        if outage_until is not None and t_now >= outage_until - 1e-12:
+            outage_until = None
         done_now = [a for a in active if a.remaining_bytes <= 1e-6]
         for a in done_now:
             a.done_s = t_now
@@ -241,6 +327,10 @@ def run_load(
         tasks=finished,
         makespan_s=makespan,
         aggregate_gbps=total_bytes * 8 / 1e9 / makespan if makespan > 0 else 0.0,
+        scenario=scenario.name if scenario is not None else "clean",
+        faults=flog,
+        goodput_bytes=goodput_bytes,
+        moved_bytes=moved_bytes,
     )
 
 

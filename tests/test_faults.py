@@ -1,0 +1,434 @@
+"""Scenario conformance suite: the fault-injection engine and the recovery
+it exists to prove. Every fault class is injected deterministically and the
+stack must catch + heal it: corruption -> quarantine + chunk re-fetch, mover
+death -> chunk re-queue (+ pool respawn), outage -> waited out on its own
+budget, torn journal -> clean replay stop. These are the executable
+invariants behind the paper's §2.3/§3.1/§3.2 claims."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BufferDest,
+    BufferSource,
+    ChunkedTransfer,
+    EndpointOutage,
+    IntegrityError,
+    MoverCrash,
+    fingerprint_bytes,
+    plan_chunks,
+)
+from repro.faults import (
+    FULL_MATRIX,
+    FaultCampaign,
+    SCENARIOS,
+    Scenario,
+    parse_scenario,
+)
+from repro.service import BatchConfig, ServiceConfig, TransferService, run_load
+from repro.service.testbed import Submission
+
+CHUNK = 64 * 1024
+
+
+@pytest.fixture
+def payload(rng):
+    return rng.integers(0, 256, 1024 * 1024 + 17, dtype=np.uint8).tobytes()
+
+
+def make_plan(n, movers=6):
+    return plan_chunks(n, movers, chunk_bytes=CHUNK, min_chunk=1, max_chunk=1 << 40)
+
+
+def run_campaign(payload, scenario, seed=0, movers=6, **engine_kw):
+    plan = make_plan(len(payload), movers)
+    camp = FaultCampaign(scenario, total_bytes=len(payload), seed=seed, movers=movers)
+    dst = BufferDest(len(payload))
+    eng = ChunkedTransfer(
+        camp.wrap_source(BufferSource(payload)), camp.wrap_dest(dst), plan,
+        **engine_kw,
+    )
+    return eng.run(), dst, camp
+
+
+# ---------------------------------------------------------------------------
+# scenario DSL
+# ---------------------------------------------------------------------------
+def test_scenario_composition_and_parse():
+    sc = parse_scenario("corrupt_1_per_TiB+kill_2_movers+outage_at_50pct")
+    assert sc.bytes_per_error == float(1024**4)
+    assert sc.kill_movers == 2 and sc.outage_at_frac == 0.5
+    assert sc.name == "corrupt_1_per_TiB+kill_2_movers+outage_at_50pct"
+    assert (SCENARIOS["clean"] + SCENARIOS["kill_2_movers"]).kill_movers == 2
+    with pytest.raises(ValueError):
+        parse_scenario("no_such_scenario")
+    with pytest.raises(ValueError):
+        Scenario(kill_at_frac=1.5)
+
+
+def test_scenario_scaled_to_payload():
+    sc = SCENARIOS["corrupt_1_per_TiB"].scaled_to(1_000_000, target_events=4)
+    assert sc.bytes_per_error == 250_000
+    assert SCENARIOS["kill_2_movers"].scaled_to(1_000_000).bytes_per_error is None
+
+
+def test_campaign_determinism():
+    sc = SCENARIOS["corrupt_1_per_TiB"].scaled_to(1 << 20, target_events=8)
+    a = FaultCampaign(sc, total_bytes=1 << 20, seed=3)
+    b = FaultCampaign(sc, total_bytes=1 << 20, seed=3)
+    c = FaultCampaign(sc, total_bytes=1 << 20, seed=4)
+    assert a._corrupt == b._corrupt and a.planned_corruptions > 0
+    assert a._corrupt != c._corrupt
+
+
+# ---------------------------------------------------------------------------
+# engine: corruption caught + healed by chunk re-fetch
+# ---------------------------------------------------------------------------
+def test_corruption_every_injection_caught_and_healed(payload):
+    sc = SCENARIOS["corrupt_1_per_TiB"].scaled_to(len(payload), target_events=6)
+    for seed in range(3):
+        rep, dst, camp = run_campaign(payload, sc, seed=seed)
+        assert bytes(dst.buf) == payload                      # zero escapes
+        assert camp.stats.corrupt_writes > 0 or camp.planned_corruptions == 0
+        assert rep.refetches == camp.stats.corrupt_writes     # all caught
+        assert rep.file_digest == fingerprint_bytes(payload)
+        # quarantine carries the diagnosis
+        assert len(rep.quarantined) == rep.refetches
+        assert all("corruption" in q.detail for q in rep.quarantined)
+
+
+def test_persistent_corruption_exhausts_refetch_budget(payload):
+    plan = make_plan(len(payload))
+
+    class AlwaysCorrupt(BufferDest):
+        def write(self, offset, data):
+            if offset == plan.chunks[2].offset:
+                data = bytes([data[0] ^ 0x01]) + data[1:]     # sticky bit error
+            super().write(offset, data)
+
+    with pytest.raises(IntegrityError, match="re-fetches"):
+        ChunkedTransfer(BufferSource(payload), AlwaysCorrupt(len(payload)), plan,
+                        max_refetches=2).run()
+
+
+# ---------------------------------------------------------------------------
+# engine: mover deaths mid-chunk
+# ---------------------------------------------------------------------------
+def test_mover_deaths_cost_chunks_not_the_transfer(payload):
+    sc = SCENARIOS["kill_2_movers"]
+    rep, dst, camp = run_campaign(payload, sc, seed=1)
+    assert bytes(dst.buf) == payload
+    assert rep.mover_deaths == 2 == camp.stats.mover_kills
+
+
+def test_all_movers_die_pool_respawns(payload):
+    rep, dst, camp = run_campaign(payload, SCENARIOS["kill_all_movers"], seed=2,
+                                  movers=4)
+    assert bytes(dst.buf) == payload
+    assert rep.mover_deaths == 4          # every original mover was killed once
+
+
+def test_mover_death_budget_fails_the_transfer(payload):
+    plan = make_plan(len(payload))
+
+    def always_crash(chunk, attempt):
+        raise MoverCrash("flaky pool")
+
+    with pytest.raises(RuntimeError, match="mover-death budget"):
+        ChunkedTransfer(BufferSource(payload), BufferDest(len(payload)), plan,
+                        fault_injector=always_crash, max_mover_deaths=3).run()
+
+
+# ---------------------------------------------------------------------------
+# engine: endpoint outages are waited out on their own budget
+# ---------------------------------------------------------------------------
+def test_outage_survived_without_consuming_chunk_retries(payload):
+    # max_retries=0: any generic failure would abort, so surviving the outage
+    # proves the outage budget is separate from the chunk retry budget
+    sc = SCENARIOS["outage_at_50pct"]
+    rep, dst, camp = run_campaign(payload, sc, seed=3, max_retries=0)
+    assert bytes(dst.buf) == payload
+    assert camp.stats.outage_rejections == sc.outage_ops
+    assert rep.outage_retries == sc.outage_ops
+    assert rep.retries == 0               # generic budget untouched
+
+
+def test_outage_budget_exhaustion_raises(payload):
+    plan = make_plan(len(payload))
+
+    def always_down(chunk, attempt):
+        raise EndpointOutage("endpoint gone for good")
+
+    with pytest.raises(EndpointOutage):
+        ChunkedTransfer(BufferSource(payload), BufferDest(len(payload)), plan,
+                        fault_injector=always_down,
+                        outage_retries=2, outage_backoff_s=0.0).run()
+
+
+# ---------------------------------------------------------------------------
+# engine: the compound campaign (the paper's failure cocktail)
+# ---------------------------------------------------------------------------
+def test_compound_campaign_full_recovery(payload):
+    sc = parse_scenario("corrupt_1_per_TiB+kill_2_movers+outage_at_50pct")
+    sc = sc.scaled_to(len(payload), target_events=5)
+    for seed in range(3):
+        rep, dst, camp = run_campaign(payload, sc, seed=seed)
+        assert bytes(dst.buf) == payload, seed
+        assert rep.refetches == camp.stats.corrupt_writes
+        assert rep.mover_deaths == 2
+        assert camp.stats.outage_rejections > 0
+
+
+def test_full_matrix_parses_and_runs_one_seed(payload):
+    for expr in FULL_MATRIX:
+        sc = parse_scenario(expr).scaled_to(len(payload), target_events=3)
+        rep, dst, camp = run_campaign(payload, sc.replace(torn_journal=False), seed=0)
+        assert bytes(dst.buf) == payload, expr
+
+
+# ---------------------------------------------------------------------------
+# service: fault events, counters, structured failure reports
+# ---------------------------------------------------------------------------
+def _svc_files(tmp_path, n=2, nbytes=200_000, seed=0):
+    rng = np.random.default_rng(seed)
+    items = []
+    for i in range(n):
+        p = os.path.join(str(tmp_path), f"f{i}.bin")
+        with open(p, "wb") as fh:
+            fh.write(rng.integers(0, 256, nbytes + i, dtype=np.uint8).tobytes())
+        items.append((p, p + ".out"))
+    return items
+
+
+def _svc_config(**kw):
+    defaults = dict(mover_budget=4, max_concurrent_tasks=2, chunk_bytes=32 * 1024,
+                    tick_s=0.002, retry_backoff_s=0.001,
+                    batch=BatchConfig(direct_bytes=1 << 30, batch_files=64))
+    defaults.update(kw)
+    return ServiceConfig(**defaults)
+
+
+def test_service_corruption_faults_propagate_and_heal(tmp_path):
+    items = _svc_files(tmp_path)
+    sizes = [os.path.getsize(p) for p, _ in items]
+    total = sum(sizes)
+    sc = SCENARIOS["corrupt_1_per_TiB"].scaled_to(total, target_events=4)
+    camp = FaultCampaign(sc, total_bytes=total, seed=0, movers=4, item_bytes=sizes)
+    events = []
+    svc = TransferService(tmp_path / "svc", _svc_config(),
+                          source_wrapper=camp.service_source_wrapper,
+                          dest_wrapper=camp.service_dest_wrapper)
+    svc.subscribe(lambda e: e.kind == "FAULT" and events.append(e))
+    try:
+        [tid] = svc.submit(items, batch=False)
+        st = svc.wait(tid, timeout=60)
+        assert st.state == "SUCCEEDED"
+        for src, dst in items:
+            assert open(src, "rb").read() == open(dst, "rb").read()
+        assert st.refetches == camp.stats.corrupt_writes > 0
+        corr = [e for e in events if e.payload.get("fault") == "corruption"]
+        assert len(corr) == st.refetches
+        assert all(not e.payload["fatal"] for e in corr)
+    finally:
+        svc.close()
+
+
+def test_service_multi_item_corruption_spans_all_items(tmp_path):
+    """With per-item offset bases, a planned corruption beyond the first
+    item's size must land (and be healed) in a later item — the whole
+    workload is reachable, not just [0, item0_size)."""
+    items = _svc_files(tmp_path, n=3, nbytes=120_000, seed=9)
+    sizes = [os.path.getsize(p) for p, _ in items]
+    total = sum(sizes)
+    # every planned offset beyond item 0: bytes_per_error chosen so draws
+    # spread across the whole range; assert at least one lands past item 0
+    sc = SCENARIOS["corrupt_1_per_TiB"].scaled_to(total, target_events=12)
+    camp = FaultCampaign(sc, total_bytes=total, seed=5, movers=4, item_bytes=sizes)
+    assert any(p >= sizes[0] for p in camp._corrupt), "seed draws all in item 0"
+    svc = TransferService(tmp_path / "svc", _svc_config(),
+                          dest_wrapper=camp.service_dest_wrapper)
+    try:
+        [tid] = svc.submit(items, batch=False)
+        st = svc.wait(tid, timeout=60)
+        assert st.state == "SUCCEEDED"
+        assert camp.stats.corruptions_injected == camp.planned_corruptions
+        assert st.refetches == camp.stats.corrupt_writes > 0
+        for src, dst in items:
+            assert open(src, "rb").read() == open(dst, "rb").read()
+    finally:
+        svc.close()
+
+
+def test_service_mover_deaths_requeue_chunks(tmp_path):
+    items = _svc_files(tmp_path, seed=1)
+    total = sum(os.path.getsize(p) for p, _ in items)
+    camp = FaultCampaign(SCENARIOS["kill_2_movers"], total_bytes=total, seed=1, movers=4)
+    events = []
+    svc = TransferService(tmp_path / "svc", _svc_config(),
+                          dest_wrapper=camp.service_dest_wrapper)
+    svc.subscribe(lambda e: e.kind == "FAULT" and events.append(e))
+    try:
+        [tid] = svc.submit(items, batch=False)
+        st = svc.wait(tid, timeout=60)
+        assert st.state == "SUCCEEDED"
+        assert st.mover_deaths == 2
+        assert sum(1 for e in events if e.payload.get("fault") == "mover_death") == 2
+        for src, dst in items:
+            assert open(src, "rb").read() == open(dst, "rb").read()
+    finally:
+        svc.close()
+
+
+def test_service_outage_survived(tmp_path):
+    items = _svc_files(tmp_path, seed=2)
+    total = sum(os.path.getsize(p) for p, _ in items)
+    camp = FaultCampaign(SCENARIOS["outage_at_50pct"], total_bytes=total, seed=2, movers=4)
+    svc = TransferService(tmp_path / "svc", _svc_config(),
+                          source_wrapper=camp.service_source_wrapper,
+                          dest_wrapper=camp.service_dest_wrapper)
+    try:
+        [tid] = svc.submit(items, batch=False)
+        st = svc.wait(tid, timeout=60)
+        assert st.state == "SUCCEEDED"
+        assert st.outages == camp.stats.outage_rejections > 0
+    finally:
+        svc.close()
+
+
+def test_service_failed_task_carries_structured_fault_report(tmp_path):
+    items = _svc_files(tmp_path, n=1, seed=3)
+
+    def sticky_corrupt(task_id, item_idx, dst):
+        class Sticky:
+            def write(self, offset, data):
+                if offset == 0:
+                    data = bytes([data[0] ^ 0x80]) + data[1:]
+                dst.write(offset, data)
+            def read_back(self, offset, length):
+                return dst.read_back(offset, length)
+        return Sticky()
+
+    failed_events = []
+    svc = TransferService(tmp_path / "svc", _svc_config(max_refetches=1),
+                          dest_wrapper=sticky_corrupt)
+    svc.subscribe(lambda e: e.kind == "FAILED" and failed_events.append(e))
+    try:
+        [tid] = svc.submit(items, batch=False)
+        st = svc.wait(tid, timeout=60)
+        assert st.state == "FAILED"
+        assert st.fault is not None
+        assert st.fault.kind == "corruption"
+        assert st.fault.chunk == 0 and st.fault.offset == 0
+        assert st.fault.refetches >= 2        # budget spent before giving up
+        [ev] = failed_events
+        assert ev.payload["fault"]["kind"] == "corruption"
+    finally:
+        svc.close()
+
+
+def test_service_mover_death_budget_fails_with_report(tmp_path):
+    items = _svc_files(tmp_path, n=1, seed=4)
+
+    def always_crash(task_id, item_idx, chunk, attempt):
+        raise MoverCrash("pool on fire")
+
+    svc = TransferService(tmp_path / "svc", _svc_config(max_mover_deaths=2),
+                          fault_injector=always_crash)
+    try:
+        [tid] = svc.submit(items, batch=False)
+        st = svc.wait(tid, timeout=60)
+        assert st.state == "FAILED"
+        assert st.fault is not None and st.fault.kind == "mover_death"
+        # budget 2 + the fatal third; concurrent movers may crash past the
+        # budget before the task lands on FAILED, so >= not ==
+        assert st.mover_deaths >= 3
+    finally:
+        svc.close()
+
+
+def test_engine_dead_journal_fails_fast(payload, tmp_path):
+    """A journal that can't accept appends (ENOSPC, pulled mount) must fail
+    the transfer promptly — completions that can't be made durable are not
+    completions — rather than churning through movers."""
+    from repro.core import ChunkJournal
+
+    plan = make_plan(len(payload))
+    j = ChunkJournal(tmp_path / "dead.journal")
+    j.close()                                     # appends now raise
+    with pytest.raises(RuntimeError, match="journal append failed"):
+        ChunkedTransfer(BufferSource(payload), BufferDest(len(payload)), plan,
+                        journal=j).run()
+
+
+def test_service_dead_journal_fails_task_with_report(tmp_path):
+    """Same contract at service level: the task lands on FAILED with a
+    structured report instead of hanging ACTIVE forever."""
+    items = _svc_files(tmp_path, n=1, seed=6)
+    svc = TransferService(tmp_path / "svc", _svc_config())
+    try:
+        # sabotage journal opening: every append hits a closed file handle
+        orig_open = svc.store.open_journal
+
+        def dead_journal(task_id):
+            j = orig_open(task_id)
+            j._fh.close()
+            return j
+
+        svc.store.open_journal = dead_journal
+        [tid] = svc.submit(items, batch=False)
+        st = svc.wait(tid, timeout=30)
+        assert st.state == "FAILED"
+        assert "journal append failed" in (st.error or "")
+        assert st.fault is not None and st.fault.kind == "io"
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# virtual testbed: scenarios in virtual time
+# ---------------------------------------------------------------------------
+def _tb_work():
+    GB = 10**9
+    return [Submission(0.0, f"t{k % 2}", (20 * GB,)) for k in range(6)]
+
+
+def _tb_run(scenario=None, seed=0):
+    return run_load(_tb_work(), policy="marginal", mover_budget=16, max_concurrent=4,
+                    chunk_bytes=500 * 10**6,
+                    batch=BatchConfig(direct_bytes=10**9, batch_files=8),
+                    scenario=scenario, seed=seed)
+
+
+def test_testbed_outage_stretches_makespan():
+    clean = _tb_run()
+    faulted = _tb_run(SCENARIOS["outage_at_50pct"])
+    assert all(t.done_s is not None for t in faulted.tasks)
+    assert faulted.makespan_s >= clean.makespan_s + 0.5 * SCENARIOS[
+        "outage_at_50pct"].outage_s
+    assert faulted.faults.outage_s == SCENARIOS["outage_at_50pct"].outage_s
+
+
+def test_testbed_corruption_amplifies_moved_bytes():
+    total = sum(sum(s.file_bytes) for s in _tb_work())
+    sc = SCENARIOS["corrupt_1_per_TiB"].scaled_to(total, target_events=10)
+    faulted = _tb_run(sc, seed=1)
+    assert all(t.done_s is not None for t in faulted.tasks)
+    assert faulted.faults.corruptions > 0
+    assert faulted.retry_amplification > 1.0
+    assert faulted.moved_bytes > faulted.goodput_bytes
+
+
+def test_testbed_mover_kills_shrink_budget():
+    clean = _tb_run()
+    faulted = _tb_run(SCENARIOS["kill_2_movers"].replace(kill_movers=12), seed=2)
+    assert all(t.done_s is not None for t in faulted.tasks)
+    assert faulted.faults.mover_kills == 12
+    assert faulted.makespan_s >= clean.makespan_s   # fewer movers, never faster
+
+
+def test_testbed_clean_run_unchanged_by_scenario_plumbing():
+    a, b = _tb_run(), _tb_run(SCENARIOS["clean"])
+    assert a.makespan_s == b.makespan_s
+    assert b.retry_amplification == 1.0 and b.faults.corruptions == 0

@@ -1,0 +1,225 @@
+"""Crash-consistency of the chunk journal and the service task log.
+
+The regression the chaos engine flushed out: a reopened journal used to
+append straight onto a torn partial line, gluing a fresh record onto
+garbage. Replay must keep every self-check-verified record (each vouches
+for itself; damaged lines in between are skipped), truncate only the torn
+tail after the LAST verified record, and leave the file appendable.
+"""
+import json
+import os
+import shutil
+
+import pytest
+
+from repro.core.integrity import fingerprint_bytes
+from repro.core.journal import ChunkJournal, JournalRecord
+from repro.faults import tear_journal_tail
+from repro.service.store import TaskStore
+from repro.service.task import TaskSpec, TransferItem
+
+
+def _write_journal(path, n=3):
+    j = ChunkJournal(path)
+    for i in range(n):
+        j.append(JournalRecord(i, i * 100, 100,
+                               fingerprint_bytes(bytes([i]) * 100).hexdigest()))
+    j.close()
+
+
+def test_truncation_at_every_byte_of_last_record(tmp_path):
+    """Crash mid-append: for EVERY byte boundary inside the last record,
+    replay keeps exactly the complete records, repairs the file, and the
+    journal accepts (and persists) new appends afterwards."""
+    ref = tmp_path / "ref.journal"
+    _write_journal(ref, n=3)
+    raw = ref.read_bytes()
+    lines = raw.splitlines(keepends=True)
+    last_start = len(raw) - len(lines[-1])
+
+    for cut in range(last_start, len(raw)):      # drop 1..len(last) bytes
+        p = tmp_path / f"cut{cut}.journal"
+        shutil.copyfile(ref, p)
+        with open(p, "r+b") as fh:
+            fh.truncate(cut)
+        j = ChunkJournal(p)
+        assert set(j.records) == {0, 1}, cut      # record 2 torn -> dropped
+        assert j.torn_tail_bytes == (cut - last_start)
+        assert os.path.getsize(p) == last_start   # torn tail truncated away
+        # a post-crash append must start on a clean line and survive replay
+        j.append(JournalRecord(7, 700, 100, fingerprint_bytes(b"z" * 100).hexdigest()))
+        j.close()
+        j2 = ChunkJournal(p)
+        assert set(j2.records) == {0, 1, 7}, cut
+        assert j2.torn_tail_bytes == 0
+        j2.close()
+
+
+def test_garbled_mid_file_record_skipped_without_data_loss(tmp_path):
+    """Every record vouches for itself: a damaged line mid-file (bit rot, or
+    the legacy glued-line artifact) loses ONLY that record — the verified
+    records after it are kept and the file is not truncated."""
+    p = tmp_path / "j.journal"
+    _write_journal(p, n=4)
+    lines = p.read_bytes().splitlines(keepends=True)
+    corrupt = bytearray(lines[1])
+    corrupt[len(corrupt) // 2] ^= 0xFF            # flip a byte mid-record
+    raw = lines[0] + bytes(corrupt) + b"".join(lines[2:])
+    p.write_bytes(raw)
+    j = ChunkJournal(p)
+    assert set(j.records) == {0, 2, 3}            # only record 1 lost
+    assert j.torn_tail_bytes == 0                 # nothing truncated
+    j.close()
+    assert p.read_bytes() == raw
+
+
+def test_legacy_glued_line_tolerated(tmp_path):
+    """A pre-fix appender could write a fresh record straight onto a torn
+    partial line (no truncation + append mode). Replay must lose only the
+    glued pair, not the valid records after them."""
+    p = tmp_path / "j.journal"
+    _write_journal(p, n=2)
+    raw = p.read_bytes()
+    j = ChunkJournal(p)                           # simulate old appender:
+    j._fh.write('{"body": {"chunk_index": 9, "off')   # torn write...
+    j._fh.flush()
+    j.append(JournalRecord(5, 500, 100,           # ...glued onto by a record
+                           fingerprint_bytes(b"g" * 100).hexdigest()))
+    j.append(JournalRecord(6, 600, 100,
+                           fingerprint_bytes(b"h" * 100).hexdigest()))
+    j.close()
+    j2 = ChunkJournal(p)
+    assert set(j2.records) == {0, 1, 6}           # glued pair lost, 6 kept
+    j2.close()
+
+
+def test_trailing_failed_self_check_record_dropped(tmp_path):
+    p = tmp_path / "j.journal"
+    _write_journal(p, n=2)
+    body = {"chunk_index": 9, "offset": 900, "length": 100,
+            "digest_hex": fingerprint_bytes(b"q" * 100).hexdigest(), "status": "done"}
+    with open(p, "a", encoding="utf-8") as fh:     # well-formed JSON, bad check
+        fh.write(json.dumps({"body": body, "check": "0" * 16}) + "\n")
+    j = ChunkJournal(p)
+    assert set(j.records) == {0, 1}
+    j.close()
+
+
+def test_semantic_apply_failure_stops_replay_without_truncation(tmp_path):
+    """A record whose self-check PASSES but whose body this version cannot
+    interpret (e.g. written by newer code) stops replay — but the file must
+    stay byte-identical: truncating intact records over a schema mismatch
+    would turn an upgrade into data loss."""
+    from repro.core.journal import _self_check
+
+    p = tmp_path / "j.journal"
+    _write_journal(p, n=2)
+    body = {"chunk_index": 5, "offset": 500, "length": 100,
+            "digest_hex": fingerprint_bytes(b"n" * 100).hexdigest(),
+            "status": "done", "field_from_the_future": 1}
+    with open(p, "a", encoding="utf-8") as fh:     # valid check, unknown field
+        fh.write(json.dumps(
+            {"body": body, "check": _self_check(json.dumps(body, sort_keys=True))}
+        ) + "\n")
+    raw = p.read_bytes()
+    j = ChunkJournal(p)
+    assert set(j.records) == {0, 1}               # future record not applied
+    assert j.torn_tail_bytes == 0                 # ...and nothing truncated
+    j.close()
+    assert p.read_bytes()[: len(raw)] == raw      # intact bytes preserved
+
+
+def test_tear_journal_tail_helper(tmp_path):
+    p = tmp_path / "j.journal"
+    _write_journal(p, n=3)
+    size = os.path.getsize(p)
+    removed = tear_journal_tail(p, seed=5)
+    assert removed > 0 and os.path.getsize(p) == size - removed
+    data = (tmp_path / "j.journal").read_bytes()
+    assert not data.endswith(b"\n")               # genuinely torn tail
+    j = ChunkJournal(p)
+    assert set(j.records) == {0, 1}
+    assert j.torn_tail_bytes > 0
+    j.close()
+    # deterministic: same seed on an identical file picks the same cut
+    q = tmp_path / "k.journal"
+    _write_journal(q, n=3)
+    assert tear_journal_tail(q, seed=5) == removed
+
+
+def test_task_store_torn_tail_truncated_and_appendable(tmp_path):
+    root = tmp_path / "svc"
+    store = TaskStore(root)
+    spec = TaskSpec(task_id="task-000000-a", tenant="a", label="",
+                    items=(TransferItem("s", "d", 10),))
+    store.append_submit(spec)
+    store.append_state("task-000000-a", "ACTIVE")
+    store.close()
+    log = root / "tasks.log"
+    good = log.read_bytes()
+    with open(log, "ab") as fh:                   # crash mid-append
+        fh.write(b'{"body": {"type": "state", "task_')
+    store2 = TaskStore(root)
+    assert store2.torn_tail_bytes > 0
+    assert os.path.getsize(log) == len(good)      # repaired
+    rec = store2.records["task-000000-a"]
+    assert rec.state == "ACTIVE"
+    store2.append_state("task-000000-a", "PENDING")   # post-repair append
+    store2.close()
+    store3 = TaskStore(root)
+    assert store3.records["task-000000-a"].state == "PENDING"
+    assert store3.torn_tail_bytes == 0
+    store3.close()
+
+
+def test_intact_journal_unchanged_by_replay(tmp_path):
+    p = tmp_path / "j.journal"
+    _write_journal(p, n=5)
+    raw = p.read_bytes()
+    j = ChunkJournal(p)
+    assert set(j.records) == set(range(5)) and j.torn_tail_bytes == 0
+    j.close()
+    assert p.read_bytes() == raw                  # no gratuitous rewrites
+
+
+@pytest.mark.parametrize("n", [1, 2])
+def test_tear_then_restart_transfer_no_rework(tmp_path, n):
+    """End-to-end: crash a journaled transfer, tear the journal tail, restart
+    — the engine re-moves only non-journaled chunks and the bytes match."""
+    import numpy as np
+    from repro.core import BufferDest, BufferSource, ChunkedTransfer, plan_chunks
+
+    rng = np.random.default_rng(n)
+    payload = rng.integers(0, 256, 512 * 1024 + 17, dtype=np.uint8).tobytes()
+    plan = plan_chunks(len(payload), 4, chunk_bytes=64 * 1024, min_chunk=1,
+                       max_chunk=1 << 40)
+    jpath = tmp_path / "t.journal"
+
+    class Crash(Exception):
+        pass
+
+    count = {"n": 0}
+
+    def bomb(chunk, attempt):
+        count["n"] += 1
+        if count["n"] > plan.n_chunks // 2:
+            raise Crash("host died")
+
+    dst = BufferDest(len(payload))
+    j = ChunkJournal(jpath)
+    with pytest.raises(Crash):
+        ChunkedTransfer(BufferSource(payload), dst, plan, journal=j,
+                        fault_injector=bomb, max_retries=0).run()
+    j.close()
+    tear_journal_tail(jpath, seed=n)
+
+    j2 = ChunkJournal(jpath)
+    journaled = set(j2.records)
+    assert journaled                              # something survived the tear
+    moved = []
+    rep = ChunkedTransfer(BufferSource(payload), dst, plan, journal=j2,
+                          fault_injector=lambda c, a: moved.append(c.index)).run()
+    j2.close()
+    assert not (set(moved) & journaled)           # zero journaled re-moves
+    assert rep.skipped_chunks == len(journaled)
+    assert bytes(dst.buf) == payload
