@@ -1,0 +1,71 @@
+"""Machine-readable benchmark results — ``BENCH_<name>.json`` emission.
+
+Every benchmark that prints its ``name,value,unit`` CSV also writes a JSON
+document next to it so the performance trajectory of the repo is tracked
+commit-over-commit: metrics, the seed(s) the run used, the git revision, and
+the exact arguments. CI archives these files; diffing two of them answers
+"did this PR move the needle" without re-parsing stdout.
+
+Schema (stable; additions only):
+
+    {
+      "bench":     "<name>",
+      "git_rev":   "<short rev or 'unknown'>",
+      "timestamp": <unix seconds>,
+      "seed":      <int | null>,
+      "args":      {...},                      # run configuration
+      "metrics":   {"<metric>": {"value": <num>, "unit": "<unit>"}}
+    }
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import time
+from typing import Any, Sequence
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def git_rev() -> str:
+    """Short git revision of the repo this benchmark ran from."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, cwd=_REPO_ROOT, timeout=10,
+        )
+        rev = out.stdout.strip()
+        return rev if out.returncode == 0 and rev else "unknown"
+    except Exception:  # noqa: BLE001 — no git in the environment
+        return "unknown"
+
+
+def emit(
+    name: str,
+    rows: Sequence[tuple[str, float, str]],
+    *,
+    seed: int | None = None,
+    args: dict[str, Any] | None = None,
+    out_dir: str | os.PathLike | None = None,
+) -> str:
+    """Write ``BENCH_<name>.json`` and return its path.
+
+    ``rows`` is the same ``(metric, value, unit)`` list the benchmark prints
+    as CSV, so both outputs can never disagree.
+    """
+    doc = {
+        "bench": name,
+        "git_rev": git_rev(),
+        "timestamp": time.time(),
+        "seed": seed,
+        "args": dict(args or {}),
+        "metrics": {n: {"value": v, "unit": u} for n, v, u in rows},
+    }
+    path = os.path.join(str(out_dir) if out_dir else os.getcwd(), f"BENCH_{name}.json")
+    tmp = path + ".tmp"
+    with open(tmp, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    os.replace(tmp, path)
+    return path

@@ -22,8 +22,9 @@ and reports, per scenario aggregated over seeds:
   * ``goodput_retention``   — faulted vs fault-free throughput.
   * ``retry_amplification`` — chunk move attempts / chunks needed.
 
-Prints ``name,value,unit`` CSV like the other benchmarks and exits non-zero
-on any conformance violation, so CI can gate on it.
+Prints ``name,value,unit`` CSV like the other benchmarks, writes
+``BENCH_chaos.json`` (metrics + seeds + git rev) for trajectory tracking,
+and exits non-zero on any conformance violation, so CI can gate on it.
 
 Run: PYTHONPATH=src python -m benchmarks.chaos [--seeds N] [--quick]
 """
@@ -38,6 +39,7 @@ import time
 
 import numpy as np
 
+from benchmarks._results import emit
 from repro.core import (
     BufferSource,
     ChunkJournal,
@@ -393,6 +395,9 @@ def main(argv=None) -> int:
     print("name,value,unit")
     for name, val, unit in rows:
         print(f"{name},{val},{unit}")
+    path = emit("chaos", rows,
+                args={"quick": args.quick, "seeds": list(range(args.seeds))})
+    print(f"# wrote {path}")
     if violations:
         print("\nCONFORMANCE VIOLATIONS:", file=sys.stderr)
         for v in violations:

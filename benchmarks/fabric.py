@@ -1,0 +1,311 @@
+"""Fabric benchmark: fan-out replication campaigns vs naive per-destination.
+
+Three legs, mirroring the continental-scale replication case study:
+
+  1. VIRTUAL campaigns — star / shared-trunk (chain) / fat-tree topologies,
+     1->2 / 1->4 / 1->8 fan-out: build the distribution tree, execute it in
+     virtual time on the calibrated fabric model, and compare wire bytes and
+     makespan against N naive per-destination transfers contending for the
+     same links. Conformance gate: the 1->4 shared-trunk campaign must cut
+     wire bytes by >= 2x.
+
+  2. REAL relay chaos — the ``FABRIC_MATRIX`` scenarios (link outages,
+     degraded intermediate DTNs, silent corruption — alone and composed)
+     against the real store-and-forward relay engine, each with a full
+     faulted leg AND a crash + restart leg. Conformance gates: 0 integrity
+     escapes, 0 re-moved journaled chunks across any hop, and every corrupt
+     landing healed by exactly one hop-local re-fetch.
+
+  3. REAL fan-out campaign — a 1->4 shared-trunk campaign decomposed into
+     service tasks on local directories, replicas verified byte-for-byte
+     and by merge-law digest chain.
+
+Prints ``name,value,unit`` CSV, writes ``BENCH_fabric.json`` (metrics +
+seeds + git rev), and exits non-zero on any conformance violation so CI can
+gate on it.
+
+Run: PYTHONPATH=src python -m benchmarks.fabric [--seeds N] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from benchmarks._results import emit
+from repro.core import BufferSource, ChunkJournal, FileDest
+from repro.fabric import (
+    BUILTIN_TOPOLOGIES,
+    CampaignRunner,
+    RelayTransfer,
+    RoutePlanner,
+    build_distribution_tree,
+    naive_wire_hops,
+    shared_trunk_topology,
+    simulate_campaign,
+    simulate_naive,
+)
+from repro.fabric.relay import realize_hop_campaigns
+from repro.faults import FABRIC_MATRIX, parse_scenario
+from repro.service import BatchConfig, ServiceConfig, TransferService
+
+GB = 10**9
+
+
+# ---------------------------------------------------------------------------
+# leg 1: virtual campaigns over canonical topologies (the same factory map
+# the CLI resolves --topology names against)
+# ---------------------------------------------------------------------------
+def virtual_sweep(fanouts: tuple[int, ...], nbytes: int,
+                  rows: list, violations: list) -> None:
+    for topo_name, factory in BUILTIN_TOPOLOGIES.items():
+        for n in fanouts:
+            topo = factory(n)
+            planner = RoutePlanner(topo)
+            dests = [f"d{i}" for i in range(n)]
+            tree = build_distribution_tree(planner, "src", dests, nbytes)
+            camp = simulate_campaign(topo, tree, nbytes)
+            naive = simulate_naive(topo, "src", dests, nbytes)
+            n_hops = naive_wire_hops(RoutePlanner(topo), "src", dests, nbytes)
+            reduction = (n_hops * nbytes) / tree.wire_bytes(nbytes)
+            speedup = naive.makespan_s / camp.makespan_s if camp.makespan_s else 1.0
+            pre = f"fabric/virtual/{topo_name}/fanout{n}"
+            rows += [
+                (f"{pre}/tree_wire_GB", round(camp.wire_bytes / GB, 2), "GB"),
+                (f"{pre}/naive_wire_GB", round(naive.wire_bytes / GB, 2), "GB"),
+                (f"{pre}/wire_reduction", round(reduction, 2), "x"),
+                (f"{pre}/tree_makespan", round(camp.makespan_s, 1), "s"),
+                (f"{pre}/naive_makespan", round(naive.makespan_s, 1), "s"),
+                (f"{pre}/makespan_speedup", round(speedup, 2), "x"),
+            ]
+            if not camp.all_done or not naive.all_done:
+                violations.append(f"virtual/{topo_name}/fanout{n}: unfinished flows")
+            if topo_name == "chain" and n == 4 and reduction < 2.0:
+                violations.append(
+                    f"virtual/chain/fanout4: wire-byte reduction {reduction:.2f}x "
+                    f"< required 2x"
+                )
+
+
+# ---------------------------------------------------------------------------
+# leg 2: real relay chaos (full faulted run + crash/restart custody check)
+# ---------------------------------------------------------------------------
+class _HostCrash(Exception):
+    """Crash bomb: the relay host dies mid-transfer."""
+
+
+def _payload(seed: int, nbytes: int) -> bytes:
+    return np.random.default_rng(seed).integers(0, 256, nbytes, dtype=np.uint8).tobytes()
+
+
+def relay_campaign(expr: str, seed: int, *, nbytes: int, chunk: int,
+                   movers: int, tmpdir: str) -> dict:
+    scenario = parse_scenario(expr).scaled_to(nbytes, target_events=4.0)
+    payload = _payload(seed, nbytes)
+    topo = shared_trunk_topology(1, trunk_hops=2)
+    route = RoutePlanner(topo).best_route("src", "d0", nbytes)
+    tag = expr.replace("+", "_")
+    out = dict(escapes=0, re_moved_journaled=0, corrupt_writes=0, healed=0,
+               mover_deaths=0, outage_retries=0)
+
+    def run(wd: str, dst: str, camps, injector=None, **kw):
+        os.makedirs(wd, exist_ok=True)
+        rep = RelayTransfer(
+            route, BufferSource(payload), FileDest(dst, nbytes),
+            workdir=wd, chunk_bytes=chunk, movers=movers,
+            source_wrapper=lambda h, s: camps[h].wrap_source(s),
+            dest_wrapper=lambda h, d: camps[h].wrap_dest(d),
+            fault_injector=injector, **kw,
+        ).run()
+        with open(dst, "rb") as fh:
+            return rep, fh.read()
+
+    # ---- leg A: full faulted relay
+    wd = os.path.join(tmpdir, f"A-{tag}-{seed}")
+    camps, _victims = realize_hop_campaigns(
+        scenario, route, total_bytes=nbytes, seed=seed, movers=movers)
+    rep, final = run(wd, os.path.join(wd, "out.bin"), camps)
+    out["escapes"] += int(final != payload)
+    out["corrupt_writes"] += sum(c.stats.corrupt_writes for c in camps.values())
+    out["healed"] += rep.refetches
+    out["mover_deaths"] += rep.mover_deaths
+    out["outage_retries"] += sum(h.outage_retries for h in rep.hops)
+
+    # ---- leg B: crash mid-relay, restart, count re-moved journaled chunks
+    wd = os.path.join(tmpdir, f"B-{tag}-{seed}")
+    dst = os.path.join(wd, "out.bin")
+    camps1, _ = realize_hop_campaigns(
+        scenario, route, total_bytes=nbytes, seed=seed + 101, movers=movers)
+    lock = threading.Lock()
+    calls = [0]
+    n_chunks = max(1, -(-nbytes // chunk))
+    bomb_after = max(2, (n_chunks * route.n_hops) // 2)
+
+    def bomb(_hop, _chunk, _attempt):
+        with lock:
+            calls[0] += 1
+            if calls[0] > bomb_after:
+                raise _HostCrash("relay host died mid-transfer")
+
+    try:
+        run(wd, dst, camps1, injector=bomb, max_retries=0)
+    except (_HostCrash, RuntimeError):
+        pass                     # the crash (or a fault it raced) is the point
+    journaled: dict[int, set[int]] = {}
+    for h, p in enumerate(RelayTransfer.journal_paths(wd, route)):
+        if os.path.exists(p):
+            probe = ChunkJournal(p)
+            journaled[h] = set(probe.records)
+            probe.close()
+
+    camps2, _ = realize_hop_campaigns(
+        scenario, route, total_bytes=nbytes, seed=seed + 202, movers=movers)
+    moved: list[tuple[int, int]] = []
+
+    def record(hop, c, _attempt):
+        with lock:
+            moved.append((hop, c.index))
+
+    rep2, final2 = run(wd, dst, camps2, injector=record)
+    out["escapes"] += int(final2 != payload)
+    out["re_moved_journaled"] += sum(
+        1 for (h, i) in set(moved) if i in journaled.get(h, set()))
+    out["corrupt_writes"] += sum(c.stats.corrupt_writes for c in camps2.values())
+    out["healed"] += rep2.refetches
+    out["mover_deaths"] += rep2.mover_deaths
+    return out
+
+
+def relay_sweep(seeds: int, *, nbytes: int, chunk: int, movers: int,
+                rows: list, violations: list) -> None:
+    with tempfile.TemporaryDirectory(prefix="fabric-relay-") as tmpdir:
+        for expr in FABRIC_MATRIX:
+            agg: dict = {}
+            for seed in range(seeds):
+                one = relay_campaign(
+                    expr, seed, nbytes=nbytes, chunk=chunk, movers=movers,
+                    tmpdir=tmpdir)
+                for k, v in one.items():
+                    agg[k] = agg.get(k, 0) + v
+            pre = f"fabric/relay/{expr}"
+            rows += [
+                (f"{pre}/escapes", agg["escapes"], "replicas"),
+                (f"{pre}/re_moved_journaled", agg["re_moved_journaled"], "chunks"),
+                (f"{pre}/corrupt_writes", agg["corrupt_writes"], "events"),
+                (f"{pre}/healed_by_refetch", agg["healed"], "events"),
+                (f"{pre}/mover_deaths", agg["mover_deaths"], "movers"),
+                (f"{pre}/outage_retries", agg["outage_retries"], "ops"),
+            ]
+            if agg["escapes"]:
+                violations.append(f"relay/{expr}: {agg['escapes']} integrity escapes")
+            if agg["re_moved_journaled"]:
+                violations.append(
+                    f"relay/{expr}: {agg['re_moved_journaled']} journaled chunks "
+                    f"re-moved across a hop")
+            if agg["healed"] != agg["corrupt_writes"]:
+                violations.append(
+                    f"relay/{expr}: {agg['corrupt_writes']} corrupt writes but "
+                    f"{agg['healed']} healed by re-fetch")
+
+
+# ---------------------------------------------------------------------------
+# leg 3: real fan-out campaign through the service
+# ---------------------------------------------------------------------------
+def service_campaign(seed: int, *, nbytes: int, chunk: int,
+                     rows: list, violations: list) -> None:
+    topo = shared_trunk_topology(4, trunk_hops=3)
+    payload = _payload(seed, nbytes)
+    dests = [f"d{i}" for i in range(4)]
+    with tempfile.TemporaryDirectory(prefix="fabric-svc-") as td:
+        dirs = {}
+        for name in topo.endpoints:
+            dirs[name] = os.path.join(td, name)
+            os.makedirs(dirs[name])
+        with open(os.path.join(dirs["src"], "replica.bin"), "wb") as fh:
+            fh.write(payload)
+        svc = TransferService(os.path.join(td, "svc"), ServiceConfig(
+            mover_budget=4, max_concurrent_tasks=4, chunk_bytes=chunk,
+            tick_s=0.002, batch=BatchConfig(direct_bytes=1 << 30, batch_files=64),
+        ))
+        try:
+            t0 = time.perf_counter()
+            rep = CampaignRunner(svc, topo, dirs).replicate(
+                "replica.bin", "src", dests, tenant="climate", timeout=120)
+            secs = time.perf_counter() - t0
+        finally:
+            svc.close()
+        byte_identical = sum(
+            1 for d in dests
+            if open(os.path.join(dirs[d], "replica.bin"), "rb").read() == payload
+        )
+    rows += [
+        ("fabric/service_campaign/replicas_verified", rep.replicas_verified, "replicas"),
+        ("fabric/service_campaign/byte_identical", byte_identical, "replicas"),
+        ("fabric/service_campaign/escapes", rep.integrity_escapes, "replicas"),
+        ("fabric/service_campaign/wire_MB", round(rep.wire_bytes / 1e6, 2), "MB"),
+        ("fabric/service_campaign/naive_wire_MB",
+         round(rep.naive_wire_bytes / 1e6, 2), "MB"),
+        ("fabric/service_campaign/wire_reduction", round(rep.wire_reduction, 2), "x"),
+        ("fabric/service_campaign/edge_tasks", len(rep.edge_tasks), "tasks"),
+        ("fabric/service_campaign/seconds", round(secs, 2), "s"),
+    ]
+    if rep.state != "SUCCEEDED":
+        violations.append(f"service_campaign: state {rep.state}: {rep.error}")
+    if rep.integrity_escapes or byte_identical != len(dests):
+        violations.append(
+            f"service_campaign: {rep.integrity_escapes} digest-chain escapes, "
+            f"{byte_identical}/{len(dests)} replicas byte-identical")
+    if rep.wire_reduction < 2.0:
+        violations.append(
+            f"service_campaign: wire reduction {rep.wire_reduction:.2f}x < 2x")
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out-dir", default=None, help="where BENCH_fabric.json lands")
+    args = ap.parse_args(argv)
+
+    fanouts = (2, 4) if args.quick else (2, 4, 8)
+    v_bytes = 100 * GB
+    r_bytes = (1 * 1024 * 1024 + 4093) if args.quick else (2 * 1024 * 1024 + 4093)
+    s_bytes = (192 * 1024 + 17) if args.quick else (512 * 1024 + 17)
+    chunk, movers = 96 * 1024, 4
+    seeds = max(1, args.seeds if not args.quick else min(args.seeds, 2))
+
+    rows: list[tuple[str, float, str]] = []
+    violations: list[str] = []
+    virtual_sweep(fanouts, v_bytes, rows, violations)
+    relay_sweep(seeds, nbytes=r_bytes, chunk=chunk, movers=movers,
+                rows=rows, violations=violations)
+    service_campaign(0, nbytes=s_bytes, chunk=chunk,
+                     rows=rows, violations=violations)
+    rows.append(("fabric/seeds", seeds, "seeds"))
+
+    print("name,value,unit")
+    for name, val, unit in rows:
+        print(f"{name},{val},{unit}")
+    path = emit("fabric", rows,
+                args={"quick": args.quick, "fanouts": list(fanouts),
+                      "seeds": list(range(seeds))},
+                out_dir=args.out_dir)
+    print(f"# wrote {path}")
+    if violations:
+        print("\nCONFORMANCE VIOLATIONS:", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,7 +8,8 @@ policy beats the pre-chunking "file_bound" baseline on aggregate throughput
 because terabyte single-file tasks can now absorb a real share of the mover
 budget instead of being pinned to one mover each.
 
-Prints ``name,value,unit`` CSV like benchmarks.run.
+Prints ``name,value,unit`` CSV like benchmarks.run and writes
+``BENCH_service_load.json`` (metrics + git rev) for trajectory tracking.
 
 Run: PYTHONPATH=src python -m benchmarks.service_load [--quick]
 """
@@ -16,6 +17,7 @@ from __future__ import annotations
 
 import sys
 
+from benchmarks._results import emit
 from repro.service import BatchConfig, mixed_workload, run_load
 
 MB = 1000 * 1000
@@ -58,10 +60,13 @@ def sweep(*, quick: bool = False) -> list[tuple[str, float, str]]:
 
 
 def main() -> None:
-    rows = sweep(quick="--quick" in sys.argv)
+    quick = "--quick" in sys.argv
+    rows = sweep(quick=quick)
     print("name,value,unit")
     for name, val, unit in rows:
         print(f"{name},{val},{unit}")
+    path = emit("service_load", rows, args={"quick": quick})
+    print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

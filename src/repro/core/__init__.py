@@ -7,6 +7,8 @@ Submodules:
   journal    — chunk-completion journal (partial restart)
   simulator  — calibrated model of the paper's ALCF/NERSC/OLCF testbed
   scheduler  — load-aware mover allocation across transfers
+  vclock     — shared virtual clock + outage-window arithmetic for every
+               event-stepped backend (simulator, testbed, fabric.virtual)
 """
 from repro.core.chunker import Chunk, ChunkPlan, plan_auto, plan_chunks, plan_for_array
 from repro.core.integrity import (
@@ -35,6 +37,7 @@ from repro.core.transfer import (
     TransferReport,
     transfer_verified,
 )
+from repro.core.vclock import ConvergenceError, VirtualClock, Window
 
 __all__ = [
     "Chunk", "ChunkPlan", "plan_auto", "plan_chunks", "plan_for_array",
@@ -45,4 +48,5 @@ __all__ = [
     "BufferDest", "BufferSource", "ChunkedTransfer", "EndpointOutage",
     "FileDest", "FileSource", "IntegrityError", "MoverCrash",
     "QuarantineRecord", "TransferReport", "transfer_verified",
+    "ConvergenceError", "VirtualClock", "Window",
 ]

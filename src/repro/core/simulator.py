@@ -30,6 +30,7 @@ import math
 from typing import Iterable
 
 from repro.core.chunker import MiB, GiB, plan_chunks
+from repro.core.vclock import VirtualClock
 
 Gb = 1e9 / 8.0  # bytes per Gigabit
 
@@ -199,17 +200,13 @@ def simulate_transfer(
     for m in range(movers):
         pull(m)
 
-    t = 0.0
+    clock = VirtualClock(guard=20 * len(items) + 1000, label="simulator")
     transfer_done = 0.0
     eps = 1e-12
-    guard = 0
     while True:
         stages = [s for s in net_busy if s] + [s for s in hash_busy if s]
         if not stages:
             break
-        guard += 1
-        if guard > 20 * len(items) + 1000:
-            raise RuntimeError("simulator failed to converge (event-loop guard)")
 
         # ---- build resource graph over *flowing* stages (setup done)
         idx = {id(s): i for i, s in enumerate(stages)}
@@ -240,17 +237,14 @@ def simulate_transfer(
         if flowing:
             _maxmin_rates(stages, res)
 
-        # ---- next event
-        dt = math.inf
+        # ---- next event (clock enforces the guard + deadlock detection)
+        cands = []
         for s in stages:
             if s.setup_left > eps:
-                dt = min(dt, s.setup_left)
+                cands.append(s.setup_left)
             elif s.rate > eps:
-                dt = min(dt, s.bytes_left / s.rate)
-        if not math.isfinite(dt):
-            raise RuntimeError("simulator deadlock: no progressing stage")
-        dt = max(dt, eps)
-        t += dt
+                cands.append(s.bytes_left / s.rate)
+        dt = clock.tick(*cands, floor=eps)
 
         # ---- advance
         for s in stages:
@@ -264,7 +258,7 @@ def simulate_transfer(
             s = net_busy[m]
             if s and s.setup_left <= eps and s.bytes_left <= eps * max(1.0, s.rate):
                 net_busy[m] = None
-                transfer_done = t
+                transfer_done = clock.now
                 if spec.integrity:
                     # dest re-reads + checksums the full item (paper §3.2)
                     hash_q[m].append(_Stage("hash", s.file, s.nbytes, 0.0, m))
@@ -275,12 +269,13 @@ def simulate_transfer(
             if hash_busy[m] is None and hash_q[m]:
                 hash_busy[m] = hash_q[m].pop(0)
 
+    t_end = clock.now
     return SimResult(
-        seconds=t,
-        gbps=total_bytes / Gb / t if t > 0 else 0.0,
+        seconds=t_end,
+        gbps=total_bytes / Gb / t_end if t_end > 0 else 0.0,
         n_items=len(items),
         transfer_done_s=transfer_done,
-        checksum_tail_s=max(0.0, t - transfer_done),
+        checksum_tail_s=max(0.0, t_end - transfer_done),
     )
 
 

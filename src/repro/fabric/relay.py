@@ -1,0 +1,479 @@
+"""Multi-hop store-and-forward relay transfers with per-hop chunk custody.
+
+A relay moves one payload along a fabric ``Route`` (origin -> intermediate
+DTNs -> destination). The chunk plan is computed ONCE and shared by every
+hop, so a chunk is the unit of *custody*: hop ``h`` journals chunk ``c`` the
+moment it has landed (and been read-back verified) at stage ``h+1``, in a
+per-hop ``core.journal.ChunkJournal``. That gives the fabric the paper's
+partial-restart guarantee at every hop:
+
+  * a chunk that reached an intermediate DTN is NEVER re-pulled from the
+    origin after a crash — the restarted relay replays each hop's journal
+    and resumes exactly the chunks still missing at that hop;
+  * hops are pipelined chunk-wise: chunk ``c`` starts crossing hop ``h+1``
+    as soon as hop ``h`` lands it, so relay makespan approaches the slowest
+    hop, not the sum of hops;
+  * integrity composes along the chain: each hop fingerprints what it read,
+    verifies it against the upstream hop's journaled custody digest (staging
+    bit-rot detection), write-verifies by destination read-back (in-flight
+    corruption detection + re-fetch healing), and the final replica's
+    merge-law digest must equal the origin digest.
+
+Chaos hooks mirror the service: per-hop source/dest wrappers let
+``repro.faults`` campaigns corrupt, outage, stall, or kill each hop's data
+path independently; ``realize_hop_campaigns`` maps the scenario DSL's fabric
+faults (``link_outage_at_50pct``, ``degrade_hop``) onto seeded victim hops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import random
+import threading
+import time
+from typing import Callable
+
+from repro.core.chunker import Chunk, ChunkPlan, plan_chunks
+from repro.core.integrity import (
+    Digest,
+    combine_at_offsets,
+    fingerprint_bytes,
+    verify,
+)
+from repro.core.journal import ChunkJournal, JournalRecord
+from repro.core.transfer import (
+    ByteDest,
+    ByteSource,
+    EndpointOutage,
+    FileDest,
+    FileSource,
+    IntegrityError,
+    MoverCrash,
+)
+from repro.faults.injectors import FaultCampaign, _seed_int
+from repro.faults.scenarios import Scenario
+from repro.fabric.topology import Route
+
+
+# ---------------------------------------------------------------------------
+# reports
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class HopReport:
+    """Per-hop outcome of one relay incarnation."""
+
+    hop: int
+    src: str
+    dst: str
+    moved_chunks: int = 0        # chunks this incarnation landed at this hop
+    resumed_chunks: int = 0      # custody restored from the hop journal
+    moved_bytes: int = 0         # custody bytes moved by this incarnation
+    retries: int = 0
+    refetches: int = 0           # corrupt landings healed by hop-local re-read
+    outage_retries: int = 0
+    mover_deaths: int = 0
+
+
+@dataclasses.dataclass
+class RelayReport:
+    route: Route
+    total_bytes: int
+    n_chunks: int
+    hops: list[HopReport]
+    seconds: float
+    file_digest: Digest          # merge-law combine of the final hop's custody
+
+    @property
+    def wire_bytes(self) -> int:
+        """Custody bytes moved across all hops by THIS incarnation."""
+        return sum(h.moved_bytes for h in self.hops)
+
+    @property
+    def resumed_chunks(self) -> int:
+        return sum(h.resumed_chunks for h in self.hops)
+
+    @property
+    def mover_deaths(self) -> int:
+        return sum(h.mover_deaths for h in self.hops)
+
+    @property
+    def refetches(self) -> int:
+        return sum(h.refetches for h in self.hops)
+
+
+# ---------------------------------------------------------------------------
+# relay engine
+# ---------------------------------------------------------------------------
+class _Hop:
+    """Mutable per-hop execution state."""
+
+    __slots__ = ("idx", "u", "v", "source", "dest", "journal", "ready",
+                 "done", "digests", "report", "workers")
+
+    def __init__(self, idx: int, u: str, v: str, source: ByteSource,
+                 dest: ByteDest, journal: ChunkJournal):
+        self.idx, self.u, self.v = idx, u, v
+        self.source, self.dest, self.journal = source, dest, journal
+        self.ready: "queue.Queue[Chunk]" = queue.Queue()
+        self.done: set[int] = set(journal.records)
+        self.digests: dict[int, Digest] = {
+            i: rec.digest() for i, rec in journal.records.items()
+        }
+        self.report = HopReport(idx, u, v, resumed_chunks=len(self.done))
+        self.workers = 0
+
+
+class RelayTransfer:
+    """Executes one route-pipelined, custody-journaled relay transfer.
+
+    ``workdir`` holds the per-hop journals and intermediate staging files;
+    re-running with the same workdir resumes: every hop skips its journaled
+    chunks, so a crash costs only the chunks in flight at crash time — at
+    the hop they were crossing, never upstream.
+    """
+
+    def __init__(
+        self,
+        route: Route,
+        source: ByteSource,
+        dest: ByteDest,
+        *,
+        workdir: str | os.PathLike,
+        chunk_bytes: int | None = None,
+        plan: ChunkPlan | None = None,
+        movers: int = 4,
+        integrity: bool = True,
+        max_retries: int = 3,
+        max_refetches: int = 3,
+        outage_retries: int = 64,
+        outage_backoff_s: float = 0.002,
+        max_mover_deaths: int = 16,
+        retry_backoff_s: float = 0.002,
+        source_wrapper: Callable[[int, ByteSource], ByteSource] | None = None,
+        dest_wrapper: Callable[[int, ByteDest], ByteDest] | None = None,
+        fault_injector: Callable[[int, Chunk, int], None] | None = None,
+    ):
+        if movers < 1:
+            raise ValueError("movers must be >= 1")
+        self.route = route
+        self.workdir = str(workdir)
+        os.makedirs(self.workdir, exist_ok=True)
+        self.total_bytes = source.nbytes
+        self.plan = plan or plan_chunks(
+            self.total_bytes, movers, chunk_bytes=chunk_bytes,
+            min_chunk=1, max_chunk=1 << 62, alignment=1,
+        )
+        if self.plan.total_bytes != self.total_bytes:
+            raise ValueError("chunk plan does not cover the source")
+        self.movers = movers
+        self.integrity = integrity
+        self.max_retries = max_retries
+        self.max_refetches = max_refetches
+        self.outage_retries = outage_retries
+        self.outage_backoff_s = outage_backoff_s
+        self.max_mover_deaths = max_mover_deaths
+        self.retry_backoff_s = retry_backoff_s
+        self._fault_injector = fault_injector
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._errors: list[BaseException] = []
+        self._mover_deaths = 0
+
+        # ---- per-hop endpoints: origin -> staging files -> final dest
+        wrap_s = source_wrapper or (lambda _h, s: s)
+        wrap_d = dest_wrapper or (lambda _h, d: d)
+        self.hops: list[_Hop] = []
+        n_hops = route.n_hops
+        for h, (u, v) in enumerate(route.hops):
+            hop_src: ByteSource = source if h == 0 else FileSource(self._stage(u))
+            hop_dst: ByteDest = dest if h == n_hops - 1 else FileDest(
+                self._stage(v), self.total_bytes)
+            journal = ChunkJournal(self._journal_path(h, u, v))
+            self.hops.append(_Hop(
+                h, u, v, wrap_s(h, hop_src), wrap_d(h, hop_dst), journal))
+
+    # -- paths ---------------------------------------------------------------
+    def _stage(self, node: str) -> str:
+        path = os.path.join(self.workdir, f"stage-{node}.bin")
+        if not os.path.exists(path):
+            # staging area preallocation (FileDest keeps a partial file, so a
+            # crashed relay's journaled chunks stay on the intermediate DTN)
+            with open(path, "wb") as fh:
+                if self.total_bytes:
+                    fh.truncate(self.total_bytes)
+        return path
+
+    def _journal_path(self, h: int, u: str, v: str) -> str:
+        return os.path.join(self.workdir, f"hop{h:02d}-{u}--{v}.journal")
+
+    @staticmethod
+    def journal_paths(workdir: str | os.PathLike, route: Route) -> list[str]:
+        """The custody journal path of every hop (for probes/tests)."""
+        return [
+            os.path.join(str(workdir), f"hop{h:02d}-{u}--{v}.journal")
+            for h, (u, v) in enumerate(route.hops)
+        ]
+
+    # -- execution -----------------------------------------------------------
+    def run(self) -> RelayReport:
+        t0 = time.perf_counter()
+        n = self.plan.n_chunks
+        try:
+            # seed each hop's ready queue: upstream custody present, own absent
+            for hop in self.hops:
+                upstream = (
+                    set(range(n)) if hop.idx == 0 else self.hops[hop.idx - 1].done
+                )
+                for c in self.plan.chunks:
+                    if c.index in upstream and c.index not in hop.done:
+                        hop.ready.put(c)
+
+            threads: list[threading.Thread] = []
+            for hop in self.hops:
+                for m in range(self.movers):
+                    th = threading.Thread(
+                        target=self._worker, args=(hop,),
+                        name=f"relay-h{hop.idx}-m{m}", daemon=True,
+                    )
+                    hop.workers += 1
+                    th.start()
+                    threads.append(th)
+            with self._cond:
+                while not self._finished_locked() and not self._errors:
+                    self._cond.wait(0.05)
+            for th in threads:
+                th.join()
+            if self._errors:
+                raise self._errors[0]
+            last = self.hops[-1]
+            parts = [(self.plan.chunks[i].offset, d) for i, d in last.digests.items()]
+            file_digest = combine_at_offsets(parts, self.total_bytes)
+            origin = self.hops[0]
+            origin_digest = combine_at_offsets(
+                [(self.plan.chunks[i].offset, d) for i, d in origin.digests.items()],
+                self.total_bytes,
+            )
+            if not verify(origin_digest, file_digest):
+                raise IntegrityError(
+                    f"relay end-to-end digest mismatch along {self.route.nodes}: "
+                    f"origin {origin_digest.hexdigest()} != replica "
+                    f"{file_digest.hexdigest()}"
+                )
+            return RelayReport(
+                route=self.route, total_bytes=self.total_bytes, n_chunks=n,
+                hops=[h.report for h in self.hops],
+                seconds=time.perf_counter() - t0, file_digest=file_digest,
+            )
+        finally:
+            for hop in self.hops:
+                hop.journal.close()
+
+    def _finished_locked(self) -> bool:
+        n = self.plan.n_chunks
+        return all(len(h.done) >= n for h in self.hops)
+
+    def _worker(self, hop: _Hop) -> None:
+        try:
+            while True:
+                with self._lock:
+                    if self._errors or len(hop.done) >= self.plan.n_chunks:
+                        return
+                try:
+                    chunk = hop.ready.get(timeout=0.02)
+                except queue.Empty:
+                    continue             # upstream custody may still arrive
+                with self._lock:
+                    if chunk.index in hop.done:
+                        continue
+                try:
+                    digest = self._move_chunk(hop, chunk)
+                except MoverCrash:
+                    # the mover dies mid-write; the chunk survives it. The
+                    # pool respawns in place (this thread carries on as the
+                    # replacement) unless the relay-wide death budget is out.
+                    with self._lock:
+                        self._mover_deaths += 1
+                        hop.report.mover_deaths += 1
+                        if self._mover_deaths > self.max_mover_deaths:
+                            self._errors.append(RuntimeError(
+                                f"relay mover-death budget exhausted "
+                                f"({self._mover_deaths} > {self.max_mover_deaths})"
+                            ))
+                            self._cond.notify_all()
+                            return
+                    hop.ready.put(chunk)
+                    continue
+                except BaseException as e:  # noqa: BLE001 — fatal for the relay
+                    with self._lock:
+                        self._errors.append(e)
+                        self._cond.notify_all()
+                    return
+                try:
+                    hop.journal.append(JournalRecord(
+                        chunk.index, chunk.offset, chunk.length, digest.hexdigest()
+                    ))
+                except Exception as e:  # noqa: BLE001 — dead journal: fail fast
+                    with self._lock:
+                        self._errors.append(RuntimeError(
+                            f"hop {hop.idx} journal append failed for chunk "
+                            f"{chunk.index}: {e}"
+                        ))
+                        self._cond.notify_all()
+                    return
+                with self._lock:
+                    hop.done.add(chunk.index)
+                    hop.digests[chunk.index] = digest
+                    hop.report.moved_chunks += 1
+                    hop.report.moved_bytes += chunk.length
+                    finished = self._finished_locked()
+                    if finished:
+                        self._cond.notify_all()
+                # hand custody downstream (store-and-forward pipelining)
+                if hop.idx + 1 < len(self.hops):
+                    nxt = self.hops[hop.idx + 1]
+                    with self._lock:
+                        fresh = chunk.index not in nxt.done
+                    if fresh:
+                        nxt.ready.put(chunk)
+        finally:
+            with self._cond:
+                hop.workers -= 1
+                self._cond.notify_all()
+
+    def _move_chunk(self, hop: _Hop, chunk: Chunk) -> Digest:
+        """One chunk across one hop, with per-failure-class recovery budgets
+        (the same taxonomy as the engine/service):
+
+        * digest mismatch -> hop-local re-fetch (the staged upstream copy is
+          intact, vouched for by the upstream custody digest), up to
+          ``max_refetches``;
+        * endpoint outage -> wait out the window on its own larger budget;
+        * mover crash -> propagates; the worker re-queues the chunk;
+        * anything else -> bounded in-place retries with backoff.
+        """
+        attempts = generic = refetches = outages = 0
+        while True:
+            attempts += 1
+            try:
+                if self._fault_injector is not None:
+                    self._fault_injector(hop.idx, chunk, attempts)
+                data = hop.source.read(chunk.offset, chunk.length)
+                if len(data) != chunk.length:
+                    raise IOError(
+                        f"short read at {chunk.offset}: {len(data)}/{chunk.length}")
+                digest = fingerprint_bytes(data)
+                if hop.idx > 0:
+                    upstream = self.hops[hop.idx - 1].digests.get(chunk.index)
+                    if upstream is not None and not verify(upstream, digest):
+                        raise IntegrityError(
+                            f"hop {hop.idx} staging read of chunk {chunk.index} "
+                            f"does not match upstream custody digest"
+                        )
+                hop.dest.write(chunk.offset, data)
+                if self.integrity:
+                    back = hop.dest.read_back(chunk.offset, chunk.length)
+                    if not verify(digest, fingerprint_bytes(back)):
+                        raise IntegrityError(
+                            f"hop {hop.idx} read-back digest mismatch "
+                            f"({hop.u}->{hop.v} @ {chunk.offset})"
+                        )
+                return digest
+            except MoverCrash:
+                raise
+            except IntegrityError:
+                refetches += 1
+                with self._lock:
+                    hop.report.retries += 1
+                    hop.report.refetches += 1
+                if refetches > self.max_refetches:
+                    raise
+            except EndpointOutage:
+                outages += 1
+                with self._lock:
+                    hop.report.outage_retries += 1
+                if outages > self.outage_retries:
+                    raise
+                time.sleep(self.outage_backoff_s * min(outages, 8))
+            except Exception:
+                generic += 1
+                if generic > self.max_retries:
+                    raise
+                with self._lock:
+                    hop.report.retries += 1
+                time.sleep(self.retry_backoff_s * (2 ** (generic - 1)))
+
+
+def run_relay(
+    route: Route,
+    source: ByteSource,
+    dest: ByteDest,
+    *,
+    workdir: str | os.PathLike,
+    **kw,
+) -> RelayReport:
+    """One-shot helper mirroring ``core.transfer.transfer_verified``."""
+    return RelayTransfer(route, source, dest, workdir=workdir, **kw).run()
+
+
+# ---------------------------------------------------------------------------
+# scenario DSL -> per-hop fault campaigns
+# ---------------------------------------------------------------------------
+def realize_hop_campaigns(
+    scenario: Scenario,
+    route: Route,
+    *,
+    total_bytes: int,
+    seed: int = 0,
+    movers: int = 4,
+) -> tuple[dict[int, FaultCampaign], dict[str, int]]:
+    """Bind a (possibly fabric-flavoured) Scenario to a relay route.
+
+    Returns ``(campaigns, victims)``: one ``FaultCampaign`` per hop index,
+    plus the seeded victim assignment. Mapping of the scenario DSL onto the
+    multi-hop shape:
+
+    * base faults (``bytes_per_error`` corruption) strike EVERY hop's write
+      path — any WAN link can flip bits; base endpoint outages and mover
+      kills strike hop 0 (the origin pull, matching single-pipe semantics);
+    * ``link_outage_at_*`` picks one seeded victim hop whose endpoints
+      reject the next ``link_outage_ops`` operations once that hop has moved
+      ``link_outage_at_frac`` of its bytes;
+    * ``degrade_hop`` picks ``degrade_hops`` seeded victim *intermediate*
+      hops (the last hop when the route has no intermediates) whose writes
+      all stall — persistently slow DTNs rather than dead ones.
+    """
+    rng = random.Random(_seed_int(seed, "fabric", route.nodes, scenario.name))
+    n_hops = route.n_hops
+    victims: dict = {}
+    if scenario.link_outage_at_frac is not None:
+        victims["link_outage"] = rng.randrange(n_hops)
+    if scenario.degrade_hops > 0:
+        inner = list(range(1, n_hops)) or [n_hops - 1]
+        count = min(scenario.degrade_hops, len(inner))
+        victims["degrade"] = tuple(sorted(rng.sample(inner, count)))
+
+    campaigns: dict[int, FaultCampaign] = {}
+    for h in range(n_hops):
+        per_hop = Scenario(
+            name=f"{scenario.name}@hop{h}",
+            bytes_per_error=scenario.bytes_per_error,
+            kill_movers=scenario.kill_movers if h == 0 else 0,
+            kill_at_frac=scenario.kill_at_frac,
+            outage_at_frac=scenario.outage_at_frac if h == 0 else None,
+            outage_ops=scenario.outage_ops,
+            stall_movers=scenario.stall_movers if h == 0 else 0,
+            stall_s=scenario.stall_s,
+        )
+        if victims.get("link_outage") == h:
+            per_hop = per_hop.replace(
+                outage_at_frac=scenario.link_outage_at_frac,
+                outage_ops=scenario.link_outage_ops,
+            )
+        if h in victims.get("degrade", ()):
+            # a degraded DTN stalls every write (bounded by the chunk count)
+            per_hop = per_hop.replace(stall_movers=1 << 16, stall_s=0.001)
+        campaigns[h] = FaultCampaign(
+            per_hop, total_bytes=total_bytes, seed=_seed_int(seed, h), movers=movers,
+        )
+    return campaigns, victims

@@ -26,6 +26,7 @@ from repro.faults.injectors import (
 )
 from repro.faults.scenarios import (
     CLEAN,
+    FABRIC_MATRIX,
     FULL_MATRIX,
     PAPER_BYTES_PER_ERROR,
     SCENARIOS,
@@ -34,7 +35,7 @@ from repro.faults.scenarios import (
 )
 
 __all__ = [
-    "CLEAN", "FULL_MATRIX", "FaultCampaign", "FaultStats", "FaultyDest",
-    "FaultySource", "PAPER_BYTES_PER_ERROR", "SCENARIOS", "Scenario",
-    "parse_scenario", "tear_journal_tail",
+    "CLEAN", "FABRIC_MATRIX", "FULL_MATRIX", "FaultCampaign", "FaultStats",
+    "FaultyDest", "FaultySource", "PAPER_BYTES_PER_ERROR", "SCENARIOS",
+    "Scenario", "parse_scenario", "tear_journal_tail",
 ]

@@ -53,6 +53,19 @@ class Scenario:
     # torn journal: after a crash, truncate the journal mid-way through its
     # final record before restarting (exercised by chaos restart legs).
     torn_journal: bool = False
+    # --- fabric faults (multi-hop relays / replication campaigns) ----------
+    # link outage: at ``link_outage_at_frac`` campaign progress, one link on
+    # the route/tree (seeded victim) goes dark — its endpoints reject the
+    # next ``link_outage_ops`` operations (real relay) / carry zero bandwidth
+    # for ``link_outage_s`` virtual seconds (fabric.virtual).
+    link_outage_at_frac: float | None = None
+    link_outage_ops: int = 24
+    link_outage_s: float = 30.0
+    # degraded intermediate endpoint: a seeded victim DTN on the route slows
+    # down — every write stalls (real relay) / endpoint rates are multiplied
+    # by ``degrade_factor`` (fabric.virtual).
+    degrade_hops: int = 0
+    degrade_factor: float = 0.25
 
     def __post_init__(self):
         if self.bytes_per_error is not None and self.bytes_per_error <= 0:
@@ -61,6 +74,10 @@ class Scenario:
             raise ValueError("kill_at_frac must be in [0, 1]")
         if self.outage_at_frac is not None and not (0.0 <= self.outage_at_frac <= 1.0):
             raise ValueError("outage_at_frac must be in [0, 1]")
+        if self.link_outage_at_frac is not None and not (0.0 <= self.link_outage_at_frac <= 1.0):
+            raise ValueError("link_outage_at_frac must be in [0, 1]")
+        if not (0.0 < self.degrade_factor <= 1.0):
+            raise ValueError("degrade_factor must be in (0, 1]")
 
     # -- composition --------------------------------------------------------
     def __add__(self, other: "Scenario") -> "Scenario":
@@ -98,6 +115,7 @@ class Scenario:
             self.bytes_per_error is None and self.kill_movers == 0
             and self.outage_at_frac is None and self.stall_movers == 0
             and not self.torn_journal
+            and self.link_outage_at_frac is None and self.degrade_hops == 0
         )
 
 
@@ -117,6 +135,10 @@ SCENARIOS: dict[str, Scenario] = {
     "outage_at_50pct": Scenario(name="outage_at_50pct", outage_at_frac=0.5),
     "stall_1_mover": Scenario(name="stall_1_mover", stall_movers=1),
     "torn_journal_tail": Scenario(name="torn_journal_tail", torn_journal=True),
+    # fabric faults: one link dies mid-campaign / one intermediate DTN slows
+    "link_outage_at_50pct": Scenario(name="link_outage_at_50pct",
+                                     link_outage_at_frac=0.5),
+    "degrade_hop": Scenario(name="degrade_hop", degrade_hops=1),
 }
 
 
@@ -145,4 +167,15 @@ FULL_MATRIX: tuple[str, ...] = (
     "corrupt_1_per_TiB+kill_2_movers+outage_at_50pct",
     "torn_journal_tail",
     "corrupt_1_per_TiB+torn_journal_tail",
+)
+
+
+# The fabric conformance matrix benchmarks/fabric.py sweeps over multi-hop
+# relays and fan-out campaigns: link outages and degraded intermediate DTNs,
+# alone and composed with the paper's silent-corruption rate.
+FABRIC_MATRIX: tuple[str, ...] = (
+    "link_outage_at_50pct",
+    "degrade_hop",
+    "link_outage_at_50pct+degrade_hop",
+    "corrupt_1_per_TiB+link_outage_at_50pct+degrade_hop",
 )

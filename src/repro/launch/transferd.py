@@ -1,6 +1,6 @@
 """transferd — drive the transfer-task service from the command line.
 
-Two modes:
+Service modes:
 
   * testbed (default): run a mixed multi-tenant workload through the
     service scheduling stack in virtual time against the calibrated
@@ -16,11 +16,33 @@ Two modes:
     task's lifecycle — a smoke test of the wall-clock path:
 
         PYTHONPATH=src python -m repro.launch.transferd --real /tmp/transferd
+
+Fabric modes (``transferd fabric <cmd>``, the multi-endpoint WAN layer):
+
+  * ``fabric plan``      — k-shortest routes between two endpoints:
+
+        ... transferd fabric plan --topology chain --src src --dst d0 -k 3
+
+  * ``fabric campaign``  — virtual-time 1->N replication campaign vs naive
+    per-destination transfers (wire bytes + makespan), optionally under a
+    chaos scenario:
+
+        ... transferd fabric campaign --topology chain --fanout 4 --gb 100 \\
+                --chaos link_outage_at_50pct+degrade_hop
+
+  * ``fabric replicate`` — REAL fan-out campaign on local directories,
+    decomposed into service tasks (one per distribution-tree edge):
+
+        ... transferd fabric replicate --root /tmp/fabric --fanout 4 --kb 512
+
+``--topology`` is a built-in shape (``chain`` / ``star`` / ``fat_tree``) or
+a JSON topology file (see ``repro.fabric.topology.Topology.save``).
 """
 from __future__ import annotations
 
 import argparse
 import os
+import sys
 import time
 
 from repro.core.chunker import MiB
@@ -134,7 +156,151 @@ def run_real(args) -> None:
     svc.close()
 
 
+# ---------------------------------------------------------------------------
+# fabric subcommands
+# ---------------------------------------------------------------------------
+def _load_topology(spec: str, fanout: int):
+    from repro.fabric import BUILTIN_TOPOLOGIES, Topology
+
+    if spec in BUILTIN_TOPOLOGIES:
+        return BUILTIN_TOPOLOGIES[spec](fanout)
+    if os.path.exists(spec):
+        return Topology.load(spec)
+    raise SystemExit(
+        f"unknown topology {spec!r}: not a builtin "
+        f"({sorted(BUILTIN_TOPOLOGIES)}) and no such file")
+
+
+def fabric_plan(args) -> None:
+    from repro.fabric import RoutePlanner
+
+    topo = _load_topology(args.topology, args.fanout)
+    planner = RoutePlanner(topo)
+    nbytes = int(args.gb * 1e9)
+    routes = planner.k_shortest(args.src, args.dst, nbytes, args.k)
+    print(f"# {args.src} -> {args.dst}, {args.gb} GB, k={args.k}")
+    for i, r in enumerate(routes):
+        print(f"{i}: {' -> '.join(r.nodes)}   ({r.seconds:.2f}s est, "
+              f"{r.n_hops} hops)")
+
+
+def fabric_campaign(args) -> None:
+    from repro.fabric import (
+        RoutePlanner,
+        build_distribution_tree,
+        naive_wire_hops,
+        simulate_campaign,
+        simulate_naive,
+    )
+    from repro.faults import parse_scenario
+
+    topo = _load_topology(args.topology, args.fanout)
+    planner = RoutePlanner(topo)
+    nbytes = int(args.gb * 1e9)
+    dests = args.dests or [f"d{i}" for i in range(args.fanout)]
+    tree = build_distribution_tree(planner, args.src, dests, nbytes)
+    scenario = parse_scenario(args.chaos) if args.chaos else None
+    camp = simulate_campaign(topo, tree, nbytes, scenario=scenario, seed=args.seed)
+    naive = simulate_naive(topo, args.src, dests, nbytes,
+                           scenario=scenario, seed=args.seed)
+    hops = naive_wire_hops(RoutePlanner(topo), args.src, dests, nbytes)
+    print(f"# campaign {args.src} -> {dests} ({args.gb} GB each, "
+          f"scenario={camp.scenario})")
+    print("tree:")
+    for u, v in tree.edges:
+        print(f"  {u} -> {v}")
+    print(f"{'':14s}{'wire GB':>10s}{'makespan s':>12s}{'agg Gb/s':>10s}")
+    for name, rep in (("campaign", camp), ("naive", naive)):
+        print(f"{name:14s}{rep.wire_bytes / 1e9:10.1f}{rep.makespan_s:12.1f}"
+              f"{rep.aggregate_gbps:10.1f}")
+    print(f"# wire reduction: {hops * nbytes / tree.wire_bytes(nbytes):.2f}x, "
+          f"makespan speedup: "
+          f"{naive.makespan_s / camp.makespan_s if camp.makespan_s else 1.0:.2f}x")
+    if camp.victims:
+        print(f"# fault victims: {camp.victims}")
+
+
+def fabric_replicate(args) -> None:
+    import numpy as np
+
+    from repro.fabric import CampaignRunner
+
+    topo = _load_topology(args.topology, args.fanout)
+    root = os.path.abspath(args.root)
+    dirs = {}
+    for name in topo.endpoints:
+        dirs[name] = os.path.join(root, name)
+        os.makedirs(dirs[name], exist_ok=True)
+    nbytes = args.kb * 1024
+    src_file = os.path.join(dirs[args.src], "replica.bin")
+    with open(src_file, "wb") as fh:
+        fh.write(np.random.default_rng(args.seed)
+                 .integers(0, 256, nbytes, dtype=np.uint8).tobytes())
+    dests = args.dests or [f"d{i}" for i in range(args.fanout)]
+    svc = TransferService(os.path.join(root, "svc"), ServiceConfig(
+        mover_budget=4, max_concurrent_tasks=4, chunk_bytes=64 * 1024,
+        tick_s=0.002, batch=BatchConfig(direct_bytes=1 << 30, batch_files=64),
+    ))
+    try:
+        rep = CampaignRunner(svc, topo, dirs).replicate(
+            "replica.bin", args.src, dests, tenant=args.tenant, timeout=300)
+    finally:
+        svc.close()
+    print(f"campaign {rep.state}: {rep.replicas_verified}/{len(dests)} replicas "
+          f"verified, {rep.integrity_escapes} escapes")
+    for (u, v), tid in rep.edge_tasks.items():
+        print(f"  {u} -> {v}: {tid} {rep.edge_states.get((u, v), '?')}")
+    print(f"wire bytes {rep.wire_bytes} vs naive {rep.naive_wire_bytes} "
+          f"({rep.wire_reduction:.2f}x), {rep.seconds:.2f}s")
+    if rep.state != "SUCCEEDED":
+        raise SystemExit(1)
+
+
+def fabric_main(argv) -> None:
+    ap = argparse.ArgumentParser(prog="transferd fabric",
+                                 description="multi-endpoint WAN fabric tools")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def common(p, *, real=False):
+        p.add_argument("--topology", default="chain",
+                       help="chain | star | fat_tree | topology JSON file")
+        p.add_argument("--fanout", type=int, default=4)
+        p.add_argument("--src", default="src")
+        p.add_argument("--dests", nargs="*", default=None)
+        p.add_argument("--seed", type=int, default=0)
+        if not real:
+            p.add_argument("--gb", type=float, default=100.0,
+                           help="payload size per replica (GB)")
+
+    p = sub.add_parser("plan", help="k-shortest routes between two endpoints")
+    common(p)
+    p.add_argument("--dst", default="d0")
+    p.add_argument("-k", type=int, default=3)
+    p.set_defaults(fn=fabric_plan)
+
+    p = sub.add_parser("campaign", help="virtual 1->N campaign vs naive")
+    common(p)
+    p.add_argument("--chaos", default=None,
+                   help="scenario DSL, e.g. link_outage_at_50pct+degrade_hop")
+    p.set_defaults(fn=fabric_campaign)
+
+    p = sub.add_parser("replicate", help="real fan-out campaign on local dirs")
+    common(p, real=True)
+    p.add_argument("--root", required=True, help="working directory")
+    p.add_argument("--kb", type=int, default=512, help="payload size (KiB)")
+    p.add_argument("--tenant", default="default")
+    p.set_defaults(fn=fabric_replicate)
+
+    args = ap.parse_args(argv)
+    args.fn(args)
+
+
 def main(argv=None):
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and argv[0] == "fabric":
+        fabric_main(argv[1:])
+        return None
     ap = argparse.ArgumentParser(prog="transferd", description=__doc__)
     ap.add_argument("--policy", default="all", choices=POLICIES + ("all",))
     ap.add_argument("--movers", type=int, default=64)

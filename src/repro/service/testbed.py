@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core.scheduler import TransferRequest
 from repro.core.simulator import ALCF, DEFAULT_LINK, NERSC, LinkConfig, SiteConfig
+from repro.core.vclock import VirtualClock, Window
 from repro.faults.scenarios import Scenario
 from repro.service.batcher import BatchConfig, Batcher
 from repro.service.scheduler import (
@@ -205,7 +206,7 @@ def run_load(
         kill_at = scenario.kill_at_frac * grand_total
     if scenario is not None and scenario.outage_at_frac is not None:
         outage_at = scenario.outage_at_frac * grand_total
-    outage_until: float | None = None
+    outage_win: Window | None = None
     moved_bytes = 0.0
 
     pending: list[SimTask] = []
@@ -214,8 +215,7 @@ def run_load(
     served: dict[str, int] = {}
     arrivals = sorted(tasks, key=lambda t: (t.submit_s, t.seq))
     ai = 0
-    t_now = 0.0
-    guard = 0
+    clock = VirtualClock(guard=20 * len(tasks) + 1000, label="testbed")
 
     def request_of(task: SimTask) -> TransferRequest:
         return TransferRequest(
@@ -241,7 +241,7 @@ def run_load(
             for tid in chosen:
                 task = lut[tid]
                 pending.remove(task)
-                task.start_s = t_now
+                task.start_s = clock.now
                 served[task.tenant] = served.get(task.tenant, 0) + 1
                 active.append(task)
         if not active:
@@ -263,41 +263,33 @@ def run_load(
             n_left -= 1
 
     while ai < len(arrivals) or pending or active:
-        guard += 1
-        if guard > 20 * len(tasks) + 1000:
-            raise RuntimeError("testbed failed to converge (event-loop guard)")
         # admit all submissions at the current time
         moved = False
-        while ai < len(arrivals) and arrivals[ai].submit_s <= t_now + 1e-12:
+        while ai < len(arrivals) and arrivals[ai].submit_s <= clock.now + 1e-12:
             pending.append(arrivals[ai])
             ai += 1
             moved = True
         if moved or active or pending:
             reschedule()
         # endpoint outage window: every active task's rate is zero
-        in_outage = outage_until is not None and t_now < outage_until - 1e-12
+        in_outage = outage_win is not None and outage_win.contains(clock.now)
         if in_outage:
             for a in active:
                 a.rate_gbps = 0.0
         agg_Bps = sum(a.rate_gbps for a in active) * 1e9 / 8
         # next event: earliest completion vs next arrival vs fault events
-        dt_done = math.inf
-        for a in active:
-            if a.rate_gbps > 0:
-                dt_done = min(dt_done, a.remaining_bytes * 8 / 1e9 / a.rate_gbps)
-        dt_arrive = (
-            arrivals[ai].submit_s - t_now if ai < len(arrivals) else math.inf
-        )
-        dt = min(dt_done, dt_arrive)
+        cands = [
+            a.remaining_bytes * 8 / 1e9 / a.rate_gbps
+            for a in active if a.rate_gbps > 0
+        ]
+        if ai < len(arrivals):
+            cands.append(arrivals[ai].submit_s - clock.now)
         if in_outage:
-            dt = min(dt, outage_until - t_now)
+            cands.append(outage_win.until_end(clock.now))
         for trigger in (kill_at, outage_at):
             if trigger is not None and agg_Bps > 0 and moved_bytes < trigger:
-                dt = min(dt, (trigger - moved_bytes) / agg_Bps)
-        if not math.isfinite(dt):
-            raise RuntimeError("testbed deadlock: nothing progresses")
-        dt = max(dt, 0.0)
-        t_now += dt
+                cands.append((trigger - moved_bytes) / agg_Bps)
+        dt = clock.tick(*cands)
         for a in active:
             a.remaining_bytes -= a.rate_gbps * 1e9 / 8 * dt
         moved_bytes += agg_Bps * dt
@@ -307,14 +299,14 @@ def run_load(
             flog.mover_kills = scenario.kill_movers
             kill_at = None
         if outage_at is not None and moved_bytes >= outage_at - 1e-6:
-            outage_until = t_now + scenario.outage_s
+            outage_win = Window(clock.now, scenario.outage_s)
             flog.outage_s = scenario.outage_s
             outage_at = None
-        if outage_until is not None and t_now >= outage_until - 1e-12:
-            outage_until = None
+        if outage_win is not None and clock.now >= outage_win.end - 1e-12:
+            outage_win = None
         done_now = [a for a in active if a.remaining_bytes <= 1e-6]
         for a in done_now:
-            a.done_s = t_now
+            a.done_s = clock.now
             a.remaining_bytes = 0.0
             active.remove(a)
             finished.append(a)

@@ -1,0 +1,102 @@
+"""The shared virtual clock (core.vclock) every event-stepped backend rides:
+step selection, deadlock detection, the convergence guard, and the outage
+Window arithmetic used by the testbed and the fabric."""
+import math
+
+import pytest
+
+from repro.core.vclock import ConvergenceError, VirtualClock, Window
+
+
+# ---------------------------------------------------------------------------
+# Window
+# ---------------------------------------------------------------------------
+def test_window_contains_half_open():
+    w = Window(10.0, 5.0)
+    assert not w.contains(9.999999)
+    assert w.contains(10.0)
+    assert w.contains(14.9)
+    assert not w.contains(15.0)          # half-open: end excluded
+    assert not w.contains(20.0)
+
+
+def test_window_boundaries():
+    w = Window(10.0, 5.0)
+    assert w.until_start(4.0) == pytest.approx(6.0)
+    assert math.isinf(w.until_start(12.0))
+    assert w.until_end(12.0) == pytest.approx(3.0)
+    assert math.isinf(w.until_end(15.0))
+    assert w.next_boundary(4.0) == pytest.approx(6.0)
+    assert w.next_boundary(12.0) == pytest.approx(3.0)
+    assert math.isinf(w.next_boundary(16.0))
+
+
+def test_window_zero_duration_and_validation():
+    w = Window(3.0, 0.0)
+    assert not w.contains(3.0)
+    with pytest.raises(ValueError):
+        Window(0.0, -1.0)
+
+
+# ---------------------------------------------------------------------------
+# VirtualClock
+# ---------------------------------------------------------------------------
+def test_tick_advances_to_earliest_finite():
+    clock = VirtualClock(guard=10)
+    dt = clock.tick(5.0, math.inf, 2.0, 7.0)
+    assert dt == pytest.approx(2.0)
+    assert clock.now == pytest.approx(2.0)
+    dt = clock.tick(1.5)
+    assert clock.now == pytest.approx(3.5)
+    assert clock.steps == 2
+
+
+def test_tick_floor_clamps_tiny_steps():
+    clock = VirtualClock(guard=10)
+    clock.tick(1e-18, floor=1e-9)
+    assert clock.now == pytest.approx(1e-9)
+
+
+def test_deadlock_raises():
+    clock = VirtualClock(guard=10)
+    with pytest.raises(ConvergenceError, match="deadlock"):
+        clock.tick(math.inf, math.nan)
+    with pytest.raises(ConvergenceError, match="deadlock"):
+        clock.tick()                      # no candidates at all
+
+
+def test_guard_exhaustion_raises_and_is_runtimeerror():
+    clock = VirtualClock(guard=3, label="unit")
+    for _ in range(3):
+        clock.tick(1.0)
+    with pytest.raises(ConvergenceError, match="unit failed to converge"):
+        clock.tick(1.0)
+    assert issubclass(ConvergenceError, RuntimeError)  # legacy catch paths
+
+
+def test_guard_validation():
+    with pytest.raises(ValueError):
+        VirtualClock(guard=0)
+
+
+# ---------------------------------------------------------------------------
+# the ported backends still ride it
+# ---------------------------------------------------------------------------
+def test_simulator_uses_shared_clock():
+    from repro.core.simulator import ALCF, NERSC, TransferSpec, simulate_transfer
+
+    res = simulate_transfer(
+        ALCF, NERSC,
+        TransferSpec(file_bytes=(10**9,), chunk_bytes=10**8, integrity=True),
+    )
+    assert res.seconds > 0
+
+
+def test_testbed_uses_shared_clock():
+    from repro.service import Submission, run_load
+
+    rep = run_load(
+        [Submission(0.0, "t0", (10**9,))],
+        policy="fair", mover_budget=8, max_concurrent=4,
+    )
+    assert rep.makespan_s > 0 and len(rep.tasks) == 1
