@@ -130,6 +130,89 @@ def _round_up(x: int, align: int) -> int:
     return ((x + align - 1) // align) * align
 
 
+# ---------------------------------------------------------------------------
+# byte-region algebra — the substrate of mid-flight tail re-planning
+# ---------------------------------------------------------------------------
+# A "region" is an (offset, length) byte range. The autotuner re-partitions
+# the UNTRANSFERRED tail of a transfer by (1) subtracting journaled custody
+# regions from the file, then (2) carving fresh chunks out of the gaps — so a
+# re-plan can only ever cut at un-journaled boundaries, and the merge-law
+# digest chain over the final chunk set still tiles the file exactly.
+
+def merge_regions(regions: Sequence[tuple[int, int]]) -> list[tuple[int, int]]:
+    """Sort and coalesce disjoint (offset, length) regions; adjacency merges,
+    overlap is a caller bug and raises."""
+    out: list[list[int]] = []
+    for off, ln in sorted((int(o), int(n)) for o, n in regions):
+        if ln < 0:
+            raise ValueError(f"negative region length {ln} at offset {off}")
+        if ln == 0:
+            continue
+        if out and off < out[-1][0] + out[-1][1]:
+            raise ValueError(
+                f"overlapping regions at byte {off} (previous ends at "
+                f"{out[-1][0] + out[-1][1]})"
+            )
+        if out and off == out[-1][0] + out[-1][1]:
+            out[-1][1] += ln
+        else:
+            out.append([off, ln])
+    return [(o, n) for o, n in out]
+
+
+def subtract_regions(
+    total_bytes: int, covered: Sequence[tuple[int, int]]
+) -> list[tuple[int, int]]:
+    """The gaps of [0, total_bytes) not covered by ``covered`` regions."""
+    gaps: list[tuple[int, int]] = []
+    pos = 0
+    for off, ln in merge_regions(covered):
+        if off + ln > total_bytes:
+            raise ValueError(f"region ({off}, {ln}) exceeds total {total_bytes}")
+        if off > pos:
+            gaps.append((pos, off - pos))
+        pos = off + ln
+    if pos < total_bytes:
+        gaps.append((pos, total_bytes - pos))
+    return gaps
+
+
+def partition_regions(
+    regions: Sequence[tuple[int, int]],
+    chunk_bytes: int,
+    *,
+    start_index: int = 0,
+    movers: int = 1,
+    alignment: int = 1,
+) -> list[Chunk]:
+    """Carve ~``chunk_bytes`` chunks out of disjoint byte regions.
+
+    This is the tail re-plan primitive: indices run sequentially from
+    ``start_index`` (the caller allocates a band that cannot collide with
+    journaled ids), interior cut points land on ``alignment`` multiples
+    relative to each region's start, and region boundaries themselves are
+    never moved — a journaled chunk's bytes are untouchable by construction
+    because they are simply not in ``regions``.
+    """
+    if chunk_bytes < 1:
+        raise ValueError("chunk_bytes must be >= 1")
+    if alignment < 1:
+        raise ValueError("alignment must be >= 1")
+    chunk_bytes = max(alignment, _round_up(chunk_bytes, alignment))
+    chunks: list[Chunk] = []
+    i = start_index
+    for off, ln in merge_regions(regions):
+        pos = off
+        end = off + ln
+        while pos < end:
+            take = min(chunk_bytes, end - pos)
+            chunks.append(Chunk(index=i, offset=pos, length=take,
+                                mover=(i - start_index) % max(1, movers)))
+            pos += take
+            i += 1
+    return chunks
+
+
 def plan_auto(
     total_bytes: int,
     movers: int,

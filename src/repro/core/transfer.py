@@ -23,7 +23,7 @@ from typing import Callable, Protocol
 
 import numpy as np
 
-from repro.core.chunker import Chunk, ChunkPlan
+from repro.core.chunker import Chunk, ChunkPlan, merge_regions, partition_regions, subtract_regions
 from repro.core.integrity import (
     Digest,
     combine_at_offsets,
@@ -175,7 +175,10 @@ class ChunkOutcome:
     digest: Digest
     attempts: int
     mover: int
-    seconds: float
+    seconds: float                 # total time on the chunk, retries included
+    attempt_seconds: float = 0.0   # fault-excluded work time (tuner signal)
+    cksum_seconds: float = 0.0     # fingerprint + read-back verify time
+    refetches: int = 0             # corruption-healing re-reads of this chunk
 
 
 @dataclasses.dataclass
@@ -191,6 +194,8 @@ class TransferReport:
     mover_deaths: int = 0          # worker threads lost mid-chunk, survived
     outage_retries: int = 0        # ops rejected by an endpoint outage window
     quarantined: tuple[QuarantineRecord, ...] = ()
+    replans: int = 0               # mid-flight tail re-partitions (autotuner)
+    chunk_bytes_final: int = 0     # nominal tail chunk size at completion
 
     @property
     def gbps(self) -> float:
@@ -215,9 +220,17 @@ class ChunkedTransfer:
         max_mover_deaths: int | None = None,   # None -> 4*movers + 4
         fault_injector: Callable[[Chunk, int], None] | None = None,
         speculative_factor: float = 0.0,   # >0 enables straggler duplication
+        tuner=None,                        # ChunkController-like: observe(sample)
+        alignment: int = 1,                # re-plan cut-point alignment
     ):
         if source.nbytes != plan.total_bytes:
             raise ValueError(f"source has {source.nbytes} bytes, plan expects {plan.total_bytes}")
+        if tuner is not None and speculative_factor > 0:
+            raise ValueError(
+                "speculative duplication and mid-flight re-planning are "
+                "mutually exclusive: a speculated twin of a re-partitioned "
+                "chunk would overlap the fresh tail chunks"
+            )
         self.source, self.dest, self.plan = source, dest, plan
         self.integrity = integrity
         self.journal = journal
@@ -228,6 +241,8 @@ class ChunkedTransfer:
         self.max_mover_deaths = max_mover_deaths
         self.fault_injector = fault_injector
         self.speculative_factor = speculative_factor
+        self.tuner = tuner
+        self.alignment = max(1, alignment)
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)   # completion/error/death
         self._outcomes: dict[int, ChunkOutcome] = {}
@@ -241,6 +256,15 @@ class ChunkedTransfer:
         self._target = 0           # chunks this run() must land
         self._live_workers = 0
         self._death_budget = 0
+        # mid-flight re-plan state: the nominal tail size, a fresh-index
+        # allocator that can never collide with journaled ids, and counters.
+        # The controller is not thread-safe; movers serialize observe +
+        # re-plan under a dedicated lock (separate from self._lock, which
+        # _replan_queued itself acquires).
+        self._tune_lock = threading.Lock()
+        self._chunk_bytes_now = plan.chunk_bytes or plan.total_bytes
+        self._next_index = plan.n_chunks
+        self._replans = 0
 
     # -- single chunk (one ERET/ESTO pair) --------------------------------
     def _move_chunk(self, chunk: Chunk, mover: int) -> ChunkOutcome:
@@ -256,8 +280,13 @@ class ChunkedTransfer:
         """
         attempts = generic = refetches = outages = 0
         t0 = time.perf_counter()
+        signal_s = 0.0    # fault-excluded work time, the autotuner's rate base:
+        # generic I/O retries (loss, congestion) COUNT — they are the path
+        # slowing down; corruption re-fetches and outage waits do NOT — they
+        # are fault recovery and must not masquerade as congestion
         while True:
             attempts += 1
+            t_att = time.perf_counter()
             try:
                 if self.fault_injector is not None:
                     self.fault_injector(chunk, attempts)
@@ -266,14 +295,24 @@ class ChunkedTransfer:
                     raise IOError(f"short read at {chunk.offset}: {len(data)}/{chunk.length}")
                 # Source-side fingerprint while the data is in hand (the
                 # paper's "modest cost incurred when first reading the file").
+                t_ck = time.perf_counter()
                 src_digest = fingerprint_bytes(data)
+                cksum_s = time.perf_counter() - t_ck
                 self.dest.write(chunk.offset, data)
                 if self.integrity:
+                    t_ck = time.perf_counter()
                     back = self.dest.read_back(chunk.offset, chunk.length)
                     dst_digest = fingerprint_bytes(back)
+                    cksum_s += time.perf_counter() - t_ck
                     if not verify(src_digest, dst_digest):
                         raise _ChunkCorruption(src_digest, dst_digest)
-                return ChunkOutcome(chunk, src_digest, attempts, mover, time.perf_counter() - t0)
+                now = time.perf_counter()
+                return ChunkOutcome(
+                    chunk, src_digest, attempts, mover, now - t0,
+                    attempt_seconds=signal_s + (now - t_att),
+                    cksum_seconds=cksum_s,
+                    refetches=refetches,
+                )
             except MoverCrash:
                 raise
             except _ChunkCorruption as c:
@@ -300,6 +339,7 @@ class ChunkedTransfer:
                 time.sleep(self.outage_backoff_s * min(outages, 8))
             except Exception:
                 generic += 1
+                signal_s += time.perf_counter() - t_att   # congestion-like
                 if generic > self.max_retries:
                     raise
                 with self._lock:
@@ -346,6 +386,7 @@ class ChunkedTransfer:
                         if len(self._outcomes) >= self._target:
                             self._cond.notify_all()
                 if first and self.journal is not None:
+                    t_j = time.perf_counter()
                     try:
                         self.journal.append(
                             JournalRecord(chunk.index, chunk.offset, chunk.length,
@@ -357,25 +398,105 @@ class ChunkedTransfer:
                                 f"journal append failed for chunk {chunk.index}: {e}"
                             ))
                         return
+                    # the journal fsync is a real per-chunk control-plane
+                    # cost: the tuner must see it, or it will shrink chunks
+                    # into a journal-bound regime on slow filesystems
+                    j_secs = time.perf_counter() - t_j
+                    out.seconds += j_secs
+                    out.attempt_seconds += j_secs
+                if first and self.tuner is not None:
+                    try:
+                        with self._tune_lock:
+                            new = self.tuner.observe_outcome(out)
+                            if new is not None and new != self._chunk_bytes_now:
+                                self._replan_queued(q, new)
+                    except Exception as e:  # noqa: BLE001 — controller bug
+                        with self._lock:    # must fail the transfer, not hang it
+                            self._errors.append(RuntimeError(
+                                f"autotuner failed after chunk {chunk.index}: {e}"
+                            ))
+                        return
         finally:
             with self._cond:
                 self._live_workers -= 1
                 self._cond.notify_all()    # wake the supervisor on death/error
 
+    # -- mid-flight tail re-planning (the autotuner's actuator) ------------
+    def _replan_queued(self, q: "queue.Queue[Chunk]", new_bytes: int) -> int:
+        """Re-partition the un-started tail at ``new_bytes`` nominal size.
+
+        Only chunks still sitting in the queue — never started, never
+        journaled — are re-cut. Journaled custody and in-flight chunks keep
+        their exact boundaries, so partition refinement keeps the merge-law
+        digest chain composable: the final (offset, digest) parts still tile
+        the file exactly. Returns the number of chunks re-planned away.
+        """
+        drained: list[Chunk] = []
+        while True:
+            try:
+                drained.append(q.get_nowait())
+            except queue.Empty:
+                break
+        if not drained:
+            return 0
+        regions = merge_regions([(c.offset, c.length) for c in drained])
+        with self._lock:
+            fresh = partition_regions(
+                regions, new_bytes, start_index=self._next_index,
+                movers=self.plan.movers, alignment=self.alignment,
+            )
+            self._next_index += len(fresh)
+            self._target += len(fresh) - len(drained)
+            self._replans += 1
+            self._chunk_bytes_now = max(self.alignment, int(new_bytes))
+        for c in fresh:
+            q.put(c)
+        return len(drained)
+
     def run(self) -> TransferReport:
         t0 = time.perf_counter()
-        done_before: dict[int, Digest] = {}
-        if self.journal is not None:
-            for idx, rec in self.journal.records.items():
-                done_before[idx] = rec.digest()
-
-        pending = [c for c in self.plan.chunks if c.index not in done_before]
+        recs: dict[int, JournalRecord] = (
+            dict(self.journal.records) if self.journal is not None else {}
+        )
+        resumed_parts = [(r.offset, r.digest()) for r in recs.values()]
+        # Static resume: every journaled record matches its plan chunk
+        # byte-for-byte (the untuned engine's invariant — preserved exactly).
+        # A journal written by a re-planned incarnation has records at other
+        # boundaries; then resume is region-based: journaled custody regions
+        # are subtracted from the file and fresh chunks (fresh indices, no id
+        # collisions) are carved out of the gaps — a journaled chunk can
+        # never be re-moved because its bytes are not in any gap.
+        static_resume = all(
+            idx < self.plan.n_chunks
+            and self.plan.chunks[idx].offset == r.offset
+            and self.plan.chunks[idx].length == r.length
+            for idx, r in recs.items()
+        )
+        if static_resume:
+            pending = [c for c in self.plan.chunks if c.index not in recs]
+        else:
+            gaps = subtract_regions(
+                self.plan.total_bytes, [(r.offset, r.length) for r in recs.values()]
+            )
+            self._next_index = max(max(recs, default=-1) + 1, self.plan.n_chunks)
+            pending = partition_regions(
+                gaps, self._chunk_bytes_now, start_index=self._next_index,
+                movers=self.plan.movers, alignment=self.alignment,
+            )
+            self._next_index += len(pending)
         q: "queue.Queue[Chunk]" = queue.Queue()
         for c in pending:
             q.put(c)
         self._target = len(pending)
+        # warm start: a SimTuner-seeded controller may already disagree with
+        # the static plan — re-cut the whole tail before the first byte moves
+        if self.tuner is not None and pending:
+            tgt = int(self.tuner.target())
+            if tgt > 0 and tgt != self._chunk_bytes_now:
+                self._replan_queued(q, tgt)
+        n_pending = self._target
 
-        movers = max(1, min(self.plan.movers, len(pending))) if pending else 0
+        movers = max(1, min(self.plan.movers, n_pending)) if n_pending else 0
         if self.max_mover_deaths is not None:
             self._death_budget = self.max_mover_deaths
         else:
@@ -393,10 +514,12 @@ class ChunkedTransfer:
             spawn(m)
         # Straggler mitigation: when the queue drains, re-enqueue the oldest
         # in-flight chunks so idle movers can duplicate them (first write wins
-        # — writes are idempotent on disjoint ranges).
-        if self.speculative_factor > 0 and pending:
+        # — writes are idempotent on disjoint ranges). Only meaningful for
+        # static plans: a region-resumed tail has fresh indices the static
+        # plan does not know about (and tuner+speculation is rejected above).
+        if self.speculative_factor > 0 and pending and static_resume:
             watcher = threading.Thread(
-                target=self._speculate, args=(q, movers, set(done_before)), daemon=True
+                target=self._speculate, args=(q, movers, set(recs)), daemon=True
             )
             watcher.start()
         # Supervise: the transfer outlives its movers. If every worker died
@@ -404,7 +527,7 @@ class ChunkedTransfer:
         # the condition workers signal at completion, error, and death — no
         # busy-polling in the fault-free path.
         next_mover = movers
-        while pending:
+        while n_pending:
             with self._cond:
                 if self._errors or len(self._outcomes) >= self._target:
                     break
@@ -418,9 +541,11 @@ class ChunkedTransfer:
         if self._errors:
             raise self._errors[0]
 
-        parts = [(c.offset, self._outcomes[c.index].digest) for c in self.plan.chunks
-                 if c.index in self._outcomes]
-        parts += [(self.plan.chunks[i].offset, d) for i, d in done_before.items()]
+        # merge-law combine over whatever boundaries actually landed: chunk
+        # sets from re-planned incarnations tile the file just as well as the
+        # original plan (partition refinement keeps digests composable)
+        parts = [(out.chunk.offset, out.digest) for out in self._outcomes.values()]
+        parts += resumed_parts
         file_digest = combine_at_offsets(parts, self.plan.total_bytes)
         return TransferReport(
             total_bytes=self.plan.total_bytes,
@@ -428,12 +553,14 @@ class ChunkedTransfer:
             outcomes=self._outcomes,
             seconds=time.perf_counter() - t0,
             retries=self._retries,
-            skipped_chunks=len(done_before),
+            skipped_chunks=len(recs),
             speculated=self._speculated,
             refetches=self._refetches,
             mover_deaths=self._mover_deaths,
             outage_retries=self._outage_retries_seen,
             quarantined=tuple(self._quarantined),
+            replans=self._replans,
+            chunk_bytes_final=self._chunk_bytes_now,
         )
 
     def _speculate(self, q: "queue.Queue[Chunk]", movers: int, skip: set[int]) -> None:

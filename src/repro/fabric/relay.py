@@ -39,6 +39,7 @@ from repro.core.integrity import (
     Digest,
     combine_at_offsets,
     fingerprint_bytes,
+    merge_all,
     verify,
 )
 from repro.core.journal import ChunkJournal, JournalRecord
@@ -54,6 +55,8 @@ from repro.core.transfer import (
 from repro.faults.injectors import FaultCampaign, _seed_int
 from repro.faults.scenarios import Scenario
 from repro.fabric.topology import Route
+from repro.tune.controller import ChunkController
+from repro.tune.probe import ChunkSample
 
 
 # ---------------------------------------------------------------------------
@@ -73,6 +76,10 @@ class HopReport:
     refetches: int = 0           # corrupt landings healed by hop-local re-read
     outage_retries: int = 0
     mover_deaths: int = 0
+    # per-hop autotuning: the transfer granule this hop settled on (chunks
+    # stay the custody unit; a degraded hop only shrinks its own I/O units)
+    granule_bytes: int = 0
+    granule_replans: int = 0
 
 
 @dataclasses.dataclass
@@ -109,7 +116,7 @@ class _Hop:
     """Mutable per-hop execution state."""
 
     __slots__ = ("idx", "u", "v", "source", "dest", "journal", "ready",
-                 "done", "digests", "report", "workers")
+                 "done", "digests", "report", "workers", "granule", "controller")
 
     def __init__(self, idx: int, u: str, v: str, source: ByteSource,
                  dest: ByteDest, journal: ChunkJournal):
@@ -122,6 +129,8 @@ class _Hop:
         }
         self.report = HopReport(idx, u, v, resumed_chunks=len(self.done))
         self.workers = 0
+        self.granule = 0                  # 0 = whole-chunk moves (untuned)
+        self.controller: ChunkController | None = None
 
 
 class RelayTransfer:
@@ -153,6 +162,10 @@ class RelayTransfer:
         source_wrapper: Callable[[int, ByteSource], ByteSource] | None = None,
         dest_wrapper: Callable[[int, ByteDest], ByteDest] | None = None,
         fault_injector: Callable[[int, Chunk, int], None] | None = None,
+        tuning: bool = False,              # per-hop transfer-granule control
+        granule_min: int = 64 * 1024,
+        tune_epoch_chunks: int = 3,
+        tune_hops: "set[int] | frozenset[int] | None" = None,  # None = all hops
     ):
         if movers < 1:
             raise ValueError("movers must be >= 1")
@@ -192,6 +205,27 @@ class RelayTransfer:
             journal = ChunkJournal(self._journal_path(h, u, v))
             self.hops.append(_Hop(
                 h, u, v, wrap_s(h, hop_src), wrap_d(h, hop_dst), journal))
+        # per-hop granule controllers: each hop adapts its own I/O unit
+        # within [granule_min, chunk_bytes] — custody chunks are untouched,
+        # so a degraded middle hop shrinks its own granule without forcing
+        # the rest of the path (or the journals) to change
+        nominal = self.plan.chunk_bytes
+        if tuning and nominal > 0:
+            lo = min(granule_min, nominal)
+            for hop in self.hops:
+                if tune_hops is not None and hop.idx not in tune_hops:
+                    continue       # operator scoped tuning to specific hops
+                hop.granule = nominal
+                # noise-hardened thresholds: hop rates are wall-clock local
+                # measurements, so only a halving reads as degradation and
+                # probes need a 25% win to stick
+                hop.controller = ChunkController(
+                    chunk_bytes=nominal, min_chunk=lo, max_chunk=nominal,
+                    epoch_chunks=tune_epoch_chunks,
+                    degrade_threshold=0.5, hysteresis=0.25,
+                    fast_md_streak=3,
+                )
+                hop.report.granule_bytes = nominal
 
     # -- paths ---------------------------------------------------------------
     def _stage(self, node: str) -> str:
@@ -353,31 +387,93 @@ class RelayTransfer:
         * anything else -> bounded in-place retries with backoff.
         """
         attempts = generic = refetches = outages = 0
+        signal_s = 0.0   # fault-excluded work time: generic retries count
+        # (congestion), corruption re-fetches and outage waits do not
         while True:
             attempts += 1
+            t_att = time.perf_counter()
             try:
                 if self._fault_injector is not None:
                     self._fault_injector(hop.idx, chunk, attempts)
-                data = hop.source.read(chunk.offset, chunk.length)
-                if len(data) != chunk.length:
-                    raise IOError(
-                        f"short read at {chunk.offset}: {len(data)}/{chunk.length}")
-                digest = fingerprint_bytes(data)
-                if hop.idx > 0:
-                    upstream = self.hops[hop.idx - 1].digests.get(chunk.index)
-                    if upstream is not None and not verify(upstream, digest):
-                        raise IntegrityError(
-                            f"hop {hop.idx} staging read of chunk {chunk.index} "
-                            f"does not match upstream custody digest"
-                        )
-                hop.dest.write(chunk.offset, data)
-                if self.integrity:
-                    back = hop.dest.read_back(chunk.offset, chunk.length)
-                    if not verify(digest, fingerprint_bytes(back)):
-                        raise IntegrityError(
-                            f"hop {hop.idx} read-back digest mismatch "
-                            f"({hop.u}->{hop.v} @ {chunk.offset})"
-                        )
+                with self._lock:
+                    granule = hop.granule
+                if granule <= 0 or granule >= chunk.length:
+                    # whole-chunk move (the untuned path, byte-identical)
+                    data = hop.source.read(chunk.offset, chunk.length)
+                    if len(data) != chunk.length:
+                        raise IOError(
+                            f"short read at {chunk.offset}: {len(data)}/{chunk.length}")
+                    digest = fingerprint_bytes(data)
+                    if hop.idx > 0:
+                        upstream = self.hops[hop.idx - 1].digests.get(chunk.index)
+                        if upstream is not None and not verify(upstream, digest):
+                            raise IntegrityError(
+                                f"hop {hop.idx} staging read of chunk {chunk.index} "
+                                f"does not match upstream custody digest"
+                            )
+                    hop.dest.write(chunk.offset, data)
+                    if self.integrity:
+                        back = hop.dest.read_back(chunk.offset, chunk.length)
+                        if not verify(digest, fingerprint_bytes(back)):
+                            raise IntegrityError(
+                                f"hop {hop.idx} read-back digest mismatch "
+                                f"({hop.u}->{hop.v} @ {chunk.offset})"
+                            )
+                else:
+                    # granular move: the custody chunk crosses this hop in
+                    # sub-moves of the hop's tuned granule. Sub-digests fold
+                    # into the chunk digest by the merge law, so custody
+                    # verification is unchanged — the granule is purely this
+                    # hop's I/O unit, invisible to its neighbours. Generic
+                    # I/O failures retry the GRANULE in place (that is the
+                    # point of shrinking it on a lossy hop: a lost granule
+                    # costs one granule, not the whole chunk); corruption,
+                    # outages and mover crashes keep chunk-level semantics.
+                    parts: list[Digest] = []
+                    pos = chunk.offset
+                    while pos < chunk.end:
+                        take = min(granule, chunk.end - pos)
+                        sub_generic = 0
+                        while True:
+                            try:
+                                data = hop.source.read(pos, take)
+                                if len(data) != take:
+                                    raise IOError(
+                                        f"short read at {pos}: {len(data)}/{take}")
+                                break
+                            except (MoverCrash, EndpointOutage, IntegrityError):
+                                raise
+                            except Exception:
+                                sub_generic += 1
+                                if sub_generic > self.max_retries:
+                                    raise
+                                with self._lock:
+                                    hop.report.retries += 1
+                                time.sleep(self.retry_backoff_s
+                                           * (2 ** min(sub_generic - 1, 6)))
+                        d = fingerprint_bytes(data)
+                        hop.dest.write(pos, data)
+                        if self.integrity:
+                            back = hop.dest.read_back(pos, take)
+                            if not verify(d, fingerprint_bytes(back)):
+                                raise IntegrityError(
+                                    f"hop {hop.idx} read-back digest mismatch "
+                                    f"({hop.u}->{hop.v} @ {pos})"
+                                )
+                        parts.append(d)
+                        pos += take
+                    digest = merge_all(parts)
+                    if hop.idx > 0:
+                        upstream = self.hops[hop.idx - 1].digests.get(chunk.index)
+                        if upstream is not None and not verify(upstream, digest):
+                            raise IntegrityError(
+                                f"hop {hop.idx} staging read of chunk {chunk.index} "
+                                f"does not match upstream custody digest"
+                            )
+                if hop.controller is not None:
+                    self._observe_hop(
+                        hop, chunk, signal_s + (time.perf_counter() - t_att),
+                        attempts, refetches)
                 return digest
             except MoverCrash:
                 raise
@@ -397,11 +493,28 @@ class RelayTransfer:
                 time.sleep(self.outage_backoff_s * min(outages, 8))
             except Exception:
                 generic += 1
+                signal_s += time.perf_counter() - t_att   # congestion-like
                 if generic > self.max_retries:
                     raise
                 with self._lock:
                     hop.report.retries += 1
                 time.sleep(self.retry_backoff_s * (2 ** (generic - 1)))
+
+
+    def _observe_hop(self, hop: _Hop, chunk: Chunk, attempt_seconds: float,
+                     attempts: int, refetches: int) -> None:
+        """Feed one landed chunk's telemetry to the hop's granule controller
+        (the per-hop closed loop; other hops never see this decision)."""
+        with self._lock:
+            new = hop.controller.observe(ChunkSample(
+                offset=chunk.offset, length=chunk.length,
+                seconds=attempt_seconds, attempt_seconds=attempt_seconds,
+                attempts=attempts, refetches=refetches, mover=hop.idx,
+            ))
+            if new is not None and new != hop.granule:
+                hop.granule = new
+                hop.report.granule_replans += 1
+                hop.report.granule_bytes = new
 
 
 def run_relay(

@@ -74,11 +74,21 @@ def run_testbed(args) -> dict[str, object]:
         tenants=args.tenants,
     )
     total = sum(sum(s.file_bytes) for s in work)
+    chunk_bytes = args.chunk_mb * 1000 * 1000
+    if args.tune:
+        # SimTuner warm start: replace the static default with the
+        # calibrated simulator's predicted-optimal size for the large files
+        from repro.tune import SimTuner
+
+        tuner = SimTuner(SITES[args.src], SITES[args.dst])
+        chunk_bytes = tuner.seed_chunk(args.large_gb * 1000 * 1000 * 1000)
+        print(f"# sim-tuned chunk size: {chunk_bytes / 1e6:.0f} MB "
+              f"(static default was {args.chunk_mb} MB)")
     print(f"# workload: {args.small} x {args.small_mb} MB + "
           f"{args.large} x {args.large_gb} GB over {args.tenants} tenants "
           f"({total / 1e12:.2f} TB total)")
     print(f"# budget: {args.movers} movers, {args.concurrent} concurrent tasks, "
-          f"{args.src}->{args.dst}, chunk {args.chunk_mb} MB")
+          f"{args.src}->{args.dst}, chunk {chunk_bytes / 1e6:.0f} MB")
     print(f"{'policy':11s} {'agg Gb/s':>9s} {'makespan s':>11s} "
           f"{'p50 s':>9s} {'p99 s':>9s} {'tasks':>6s}")
     policies = POLICIES if args.policy == "all" else (args.policy,)
@@ -90,7 +100,7 @@ def run_testbed(args) -> dict[str, object]:
             policy=pol,
             mover_budget=args.movers,
             max_concurrent=args.concurrent,
-            chunk_bytes=args.chunk_mb * 1000 * 1000,
+            chunk_bytes=chunk_bytes,
             src=SITES[args.src],
             dst=SITES[args.dst],
             batch=BatchConfig(
@@ -124,6 +134,10 @@ def run_real(args) -> None:
             max_concurrent_tasks=max(1, min(4, args.concurrent, budget)),
             chunk_bytes=256 * 1024,
             batch=BatchConfig(direct_bytes=4 * MiB, batch_files=8),
+            # --tune: close the chunk-size loop over every submitted task
+            tuning="auto" if args.tune else "static",
+            tune_min_chunk=32 * 1024,
+            tune_max_chunk=4 * MiB,
         ),
     )
     events = []
@@ -146,9 +160,11 @@ def run_real(args) -> None:
 
     print(f"submitted {len(all_ids)} tasks")
     for st in svc.wait_all(all_ids, timeout=120):
+        tuned = (f" replans={st.replans} chunk={st.chunk_bytes_current}"
+                 if st.tuning == "auto" else "")
         print(f"  {st.task_id:24s} {st.state:9s} files={st.n_files:2d} "
               f"chunks={st.chunks_done}/{st.chunks_total} "
-              f"retries={st.retries} latency={st.latency_s:.2f}s")
+              f"retries={st.retries} latency={st.latency_s:.2f}s{tuned}")
     kinds = {}
     for e in events:
         kinds[e.kind] = kinds.get(e.kind, 0) + 1
@@ -317,6 +333,9 @@ def main(argv=None):
     ap.add_argument("--dst", default="NERSC", choices=sorted(SITES))
     ap.add_argument("--real", default=None, metavar="DIR",
                     help="run a real local service smoke test in DIR instead")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune chunk sizes: SimTuner-seeded chunks in "
+                         "testbed mode, closed-loop tuning in --real mode")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.concurrent > args.movers:

@@ -22,6 +22,9 @@ RETRY = "RETRY"
 # "outage" | "mover_death", the (item, chunk, attempt) coordinates, and
 # fatal=True when the fault exhausted its retry budget and failed the task.
 FAULT = "FAULT"
+# autotuner re-plan: the task's untransferred tail was re-partitioned.
+# Payload: old_chunk_bytes, chunk_bytes (new), drained, requeued, rate_Bps.
+TUNE = "TUNE"
 REALLOC = "REALLOC"
 PAUSED = "PAUSED"
 RESUMED = "RESUMED"

@@ -34,7 +34,14 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
-from repro.core.chunker import ChunkPlan, MiB, plan_chunks
+from repro.core.chunker import (
+    ChunkPlan,
+    MiB,
+    merge_regions,
+    partition_regions,
+    plan_chunks,
+    subtract_regions,
+)
 from repro.core.integrity import (
     EMPTY_DIGEST,
     combine_at_offsets,
@@ -74,6 +81,15 @@ from repro.service.task import (
     TransitionError,
     classify_fault,
 )
+from repro.tune.controller import ChunkController
+from repro.tune.probe import ChunkSample
+from repro.tune.simtune import SimTuner
+
+# Journal ids for re-planned (tuned) chunks live in a reserved band far above
+# any static plan's ids, partitioned per item, so a record always names its
+# item and can never collide with a static chunk id across restarts.
+TUNE_GID_BASE = 1 << 40
+TUNE_ITEM_STRIDE = 1 << 28
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +112,12 @@ class ServiceConfig:
     dst_site: SiteConfig = NERSC
     link: LinkConfig = DEFAULT_LINK
     alloc_step: int = 2              # water-filling granularity
+    # ---- autotuning (closed-loop chunk sizing) ---------------------------
+    tuning: str = "static"           # default per-task policy: static | auto
+    tune_min_chunk: int = 64 * 1024  # controller lower bound for tuned tasks
+    tune_max_chunk: int = 64 * MiB   # controller upper bound for tuned tasks
+    tune_epoch_chunks: int = 4       # chunks per controller decision epoch
+    tune_seed: str = "none"          # "sim" warm-starts from the simulator
 
     def __post_init__(self):
         if self.max_concurrent_tasks > self.mover_budget:
@@ -104,14 +126,25 @@ class ServiceConfig:
                 f"<= mover_budget ({self.mover_budget}): every active task "
                 "needs at least one mover"
             )
+        if self.tuning not in ("static", "auto"):
+            raise ValueError(f"tuning must be 'static' or 'auto', got {self.tuning!r}")
+        if self.tune_seed not in ("none", "sim"):
+            raise ValueError(f"tune_seed must be 'none' or 'sim', got {self.tune_seed!r}")
 
 
 class _Task:
     """Service-internal mutable task state (specs stay frozen)."""
 
-    def __init__(self, spec: TaskSpec, seq: int, chunk_bytes: int):
+    def __init__(self, spec: TaskSpec, seq: int, chunk_bytes: int,
+                 tuning: str = "static"):
         self.spec = spec
         self.seq = seq
+        self.tuning = tuning                     # effective policy (spec or default)
+        self.controller: ChunkController | None = None
+        self.replans = 0
+        self.chunk_bytes_now = spec.chunk_bytes or chunk_bytes
+        # per-item sequence allocator for tuned-band journal ids
+        self.next_tune_seq = [0] * len(spec.items)
         self.state = tk.PENDING
         self.error: str | None = None
         self.lock = threading.Lock()
@@ -155,6 +188,31 @@ class _Task:
         # lazily-opened per-item endpoints (shared by this task's movers)
         self._sources: dict[int, ByteSource] = {}
         self._dests: dict[int, ByteDest] = {}
+
+    # -- journal-id bands ---------------------------------------------------
+    def item_of_gidx(self, gidx: int) -> int:
+        """Which item a journaled chunk id belongs to (either band)."""
+        if gidx >= TUNE_GID_BASE:
+            return (gidx - TUNE_GID_BASE) // TUNE_ITEM_STRIDE
+        for i in reversed(range(len(self.chunk_base))):
+            if gidx >= self.chunk_base[i]:
+                return i
+        return 0
+
+    def tune_gidx(self, item_idx: int, seq: int) -> int:
+        return TUNE_GID_BASE + item_idx * TUNE_ITEM_STRIDE + seq
+
+    def static_record_ok(self, gidx: int, rec) -> bool:
+        """Does this journal record match the static plan byte-for-byte?"""
+        if gidx >= TUNE_GID_BASE:
+            return False
+        i = self.item_of_gidx(gidx)
+        local = gidx - self.chunk_base[i]
+        if not (0 <= local < self.plans[i].n_chunks):
+            return False
+        c = self.plans[i].chunks[local]
+        return c.offset == rec.offset and c.length == rec.length
+
 
 class TransferService:
     """Multi-tenant async task manager over the chunked-transfer engine."""
@@ -211,7 +269,8 @@ class TransferService:
     def _recover(self) -> None:
         """Rebuild tasks from the log; re-queue durable non-terminal tasks."""
         for task_id, rec in sorted(self.store.records.items(), key=lambda kv: kv[1].seq):
-            t = _Task(rec.spec, rec.seq, self.config.chunk_bytes)
+            t = _Task(rec.spec, rec.seq, self.config.chunk_bytes,
+                      tuning=rec.spec.tuning or self.config.tuning)
             t.state = rec.state
             t.error = rec.error
             if rec.state in tk.TERMINAL:
@@ -250,19 +309,25 @@ class TransferService:
         label: str = "",
         chunk_bytes: int | None = None,
         batch: bool = True,
+        tuning: str | None = None,
     ) -> list[str]:
         """Submit a transfer request; returns the task ids it was split into.
 
         Items are (src_path, dst_path[, nbytes]) or TransferItem. With
         ``batch=True`` the Batcher coalesces small files into shared tasks and
         routes large files to dedicated chunked tasks; ``batch=False`` forces
-        a single task for the whole request.
+        a single task for the whole request. ``tuning="auto"`` closes the
+        chunk-size loop over these tasks ("static" pins the plan; None defers
+        to ``ServiceConfig.tuning``).
         """
         norm = [self._norm_item(it) for it in items]
         if not norm:
             raise ValueError("empty submission")
+        if tuning not in (None, "static", "auto"):
+            raise ValueError(f"tuning must be 'static', 'auto' or None, got {tuning!r}")
         groups = self.batcher.split(norm) if batch else [list(norm)]
-        return [self._submit_group(g, tenant, label, chunk_bytes) for g in groups]
+        return [self._submit_group(g, tenant, label, chunk_bytes, tuning)
+                for g in groups]
 
     def submit_buffers(
         self,
@@ -271,6 +336,7 @@ class TransferService:
         tenant: str = "default",
         label: str = "",
         chunk_bytes: int | None = None,
+        tuning: str | None = None,
     ) -> str:
         """Submit in-memory payloads (e.g. checkpoint arrays) as ONE task.
 
@@ -284,7 +350,7 @@ class TransferService:
             src = payload if hasattr(payload, "read") else BufferSource(payload)
             items.append(TransferItem(f"mem:{i}", str(dst), src.nbytes, mem=True))
             sources.append(src)
-        task_id = self._submit_group(items, tenant, label, chunk_bytes)
+        task_id = self._submit_group(items, tenant, label, chunk_bytes, tuning)
         with self._lock:
             for i, src in enumerate(sources):
                 self._mem_sources[(task_id, i)] = src
@@ -301,23 +367,25 @@ class TransferService:
 
     def _submit_group(
         self, items: Sequence[TransferItem], tenant: str, label: str,
-        chunk_bytes: int | None,
+        chunk_bytes: int | None, tuning: str | None = None,
     ) -> str:
         with self._cond:
             if self._stop_evt.is_set():
                 raise RuntimeError("service is shut down")
             task_id = self.store.next_task_id(tenant)
-            # pin the EFFECTIVE chunk size into the persisted spec: chunk
-            # plans (and so the journal's global chunk ids) must mean the
-            # same byte ranges even if the service restarts with a
-            # different configured default
+            # pin the EFFECTIVE chunk size (and tuning policy) into the
+            # persisted spec: chunk plans (and so the journal's global chunk
+            # ids) must mean the same byte ranges even if the service
+            # restarts with a different configured default
             spec = TaskSpec(
                 task_id=task_id, tenant=tenant, label=label,
                 items=tuple(items),
                 chunk_bytes=chunk_bytes or self.config.chunk_bytes,
+                tuning=tuning or self.config.tuning,
             )
             rec = self.store.append_submit(spec)
-            self._tasks[task_id] = _Task(spec, rec.seq, self.config.chunk_bytes)
+            self._tasks[task_id] = _Task(spec, rec.seq, self.config.chunk_bytes,
+                                         tuning=spec.tuning or self.config.tuning)
             self._cond.notify_all()
         self.events.emit(
             ev.SUBMITTED, task_id, tenant,
@@ -530,22 +598,61 @@ class TransferService:
             return
         jlock = threading.Lock()
         try:
-            done = set(journal.records)
+            recs = dict(journal.records)
             with t.lock:
-                t.resumed_chunks = len(done)
-                t.chunks_done = len(done)
-                t.bytes_done = sum(r.length for r in journal.records.values())
+                t.resumed_chunks = len(recs)
+                t.chunks_done = len(recs)
+                t.bytes_done = sum(r.length for r in recs.values())
             work: "queue.Queue[tuple[int, int, Any]]" = queue.Queue()
             n_work = 0
-            for i, plan in enumerate(t.plans):
-                if plan.n_chunks == 0:
-                    self._dest(t, i)        # zero-byte item: materialize the file
-                    continue
-                base = t.chunk_base[i]
-                for c in plan.chunks:
-                    if base + c.index not in done:
-                        work.put((base + c.index, i, c))
+            # Static seeding works whenever every journaled record matches
+            # the deterministic static plans byte-for-byte (all untuned
+            # tasks, and tuned tasks that never re-planned). A journal left
+            # by a re-planned incarnation has records at other boundaries:
+            # then the pending tail is region-based — journaled custody is
+            # subtracted per item and fresh tuned-band chunks are carved
+            # from the gaps, so a journaled chunk is never re-moved.
+            if all(t.static_record_ok(g, r) for g, r in recs.items()):
+                for i, plan in enumerate(t.plans):
+                    if plan.n_chunks == 0:
+                        self._dest(t, i)    # zero-byte item: materialize the file
+                        continue
+                    base = t.chunk_base[i]
+                    for c in plan.chunks:
+                        if base + c.index not in recs:
+                            work.put((base + c.index, i, c))
+                            n_work += 1
+            else:
+                per_item: dict[int, list] = {i: [] for i in range(len(t.spec.items))}
+                for g, r in recs.items():
+                    per_item[t.item_of_gidx(g)].append(r)
+                for i, item in enumerate(t.spec.items):
+                    if t.plans[i].n_chunks == 0:
+                        self._dest(t, i)
+                        continue
+                    with t.lock:
+                        t.next_tune_seq[i] = max(
+                            ((g - TUNE_GID_BASE) % TUNE_ITEM_STRIDE
+                             for g in recs if g >= TUNE_GID_BASE
+                             and t.item_of_gidx(g) == i),
+                            default=-1,
+                        ) + 1
+                        gaps = subtract_regions(
+                            item.nbytes,
+                            [(r.offset, r.length) for r in per_item[i]],
+                        )
+                        fresh = partition_regions(
+                            gaps, t.chunk_bytes_now,
+                            start_index=t.next_tune_seq[i],
+                        )
+                        t.next_tune_seq[i] += len(fresh)
+                    for c in fresh:
+                        work.put((t.tune_gidx(i, c.index), i, c))
                         n_work += 1
+                with t.lock:
+                    t.chunks_total = len(recs) + n_work
+            if t.tuning == "auto":
+                self._arm_tuner(t, work)
 
             reason = self._drive_workers(t, work, journal, jlock, n_work)
             if reason is None:          # killed: vanish without a trace
@@ -615,6 +722,80 @@ class TransferService:
                 return None
             time.sleep(self.config.tick_s / 2)
 
+    # ------------------------------------------------------------------
+    # autotuning (closed-loop chunk sizing per task)
+    # ------------------------------------------------------------------
+    def _arm_tuner(self, t: _Task, work) -> None:
+        """Create the task's ChunkController (optionally SimTuner-seeded)
+        and apply the warm-start re-plan before any byte moves."""
+        chunk0 = t.chunk_bytes_now
+        lo = min(self.config.tune_min_chunk, chunk0)
+        hi = max(self.config.tune_max_chunk, chunk0)
+        target0 = chunk0
+        if self.config.tune_seed == "sim" and t.bytes_total > 0:
+            sim = SimTuner(self.config.src_site, self.config.dst_site,
+                           self.config.link)
+            target0 = max(lo, min(hi, sim.seed_chunk(t.bytes_total)))
+        t.controller = ChunkController(
+            chunk_bytes=target0, min_chunk=lo, max_chunk=hi,
+            epoch_chunks=self.config.tune_epoch_chunks,
+        )
+        if target0 != chunk0:
+            self._replan_task(t, work, target0, rate_Bps=0.0)
+
+    def _replan_task(self, t: _Task, work, new_bytes: int, *,
+                     rate_Bps: float = 0.0) -> int:
+        """Re-partition the task's un-started tail at ``new_bytes``.
+
+        Drains the work queue (chunks never handed to a mover — journaled
+        custody and in-flight chunks are untouchable by construction),
+        re-cuts each item's drained regions, and re-enqueues under fresh
+        tuned-band journal ids. Emits a TUNE event.
+        """
+        drained: list[tuple[int, int, Any]] = []
+        while True:
+            try:
+                drained.append(work.get_nowait())
+            except queue.Empty:
+                break
+        if not drained:
+            return 0
+        by_item: dict[int, list[tuple[int, int]]] = {}
+        for _g, i, c in drained:
+            by_item.setdefault(i, []).append((c.offset, c.length))
+        entries: list[tuple[int, int, Any]] = []
+        with t.lock:
+            for i in sorted(by_item):
+                fresh = partition_regions(
+                    merge_regions(by_item[i]), new_bytes,
+                    start_index=t.next_tune_seq[i],
+                )
+                t.next_tune_seq[i] += len(fresh)
+                entries.extend((t.tune_gidx(i, c.index), i, c) for c in fresh)
+            t.chunks_total += len(entries) - len(drained)
+            t.replans += 1
+            old = t.chunk_bytes_now
+            t.chunk_bytes_now = int(new_bytes)
+        for e in entries:
+            work.put(e)
+        self.events.emit(
+            ev.TUNE, t.spec.task_id, t.spec.tenant,
+            old_chunk_bytes=old, chunk_bytes=int(new_bytes),
+            drained=len(drained), requeued=len(entries),
+            rate_Bps=round(rate_Bps, 3),
+        )
+        return len(drained)
+
+    def _feed_tuner(self, t: _Task, work, chunk, sample: ChunkSample) -> None:
+        with t.lock:
+            ctrl = t.controller
+            if ctrl is None:
+                return
+            new = ctrl.observe(sample)
+            cur = t.chunk_bytes_now
+        if new is not None and new != cur:
+            self._replan_task(t, work, new, rate_Bps=sample.rate_Bps)
+
     def _worker(self, t: _Task, work, journal, jlock) -> None:
         try:
             while True:
@@ -634,7 +815,7 @@ class TransferService:
                 except queue.Empty:
                     return
                 try:
-                    digest = self._move_chunk(t, item_idx, chunk)
+                    digest, sample = self._move_chunk(t, item_idx, chunk)
                 except MoverCrash as e:
                     # the mover thread dies; the chunk survives it. Re-queue
                     # the chunk for the remaining movers (the driver tops the
@@ -664,6 +845,7 @@ class TransferService:
                         )
                         t.fault = self._fault_report(t, classify_fault(e), item_idx, chunk, e)
                     return
+                t_j = time.perf_counter()
                 try:
                     with jlock:
                         journal.append(JournalRecord(
@@ -692,6 +874,15 @@ class TransferService:
                     ev.PROGRESS, t.spec.task_id, t.spec.tenant,
                     chunks_done=done, chunks_total=total,
                 )
+                if t.controller is not None:
+                    # fold the journal fsync into the sample: it is a real
+                    # per-chunk control-plane cost the tuner must weigh
+                    j_secs = time.perf_counter() - t_j
+                    sample = dataclasses.replace(
+                        sample, seconds=sample.seconds + j_secs,
+                        attempt_seconds=sample.attempt_seconds + j_secs,
+                    )
+                    self._feed_tuner(t, work, chunk, sample)
                 if done >= total:
                     with self._cond:
                         self._cond.notify_all()
@@ -727,8 +918,12 @@ class TransferService:
         src = self._source(t, item_idx)
         dst = self._dest(t, item_idx)
         attempts = generic = refetches = outages = 0
+        t0 = time.perf_counter()
+        signal_s = 0.0   # fault-excluded work time: generic retries count
+        # (congestion), corruption re-fetches and outage waits do not
         while True:
             attempts += 1
+            t_att = time.perf_counter()
             try:
                 if self._fault_injector is not None:
                     self._fault_injector(t.spec.task_id, item_idx, chunk, attempts)
@@ -737,15 +932,27 @@ class TransferService:
                     raise IOError(
                         f"short read at {chunk.offset}: {len(data)}/{chunk.length}"
                     )
+                t_ck = time.perf_counter()
                 digest = fingerprint_bytes(data)
+                cksum_s = time.perf_counter() - t_ck
                 dst.write(chunk.offset, data)
                 if self.config.integrity:
+                    t_ck = time.perf_counter()
                     back = dst.read_back(chunk.offset, chunk.length)
-                    if not verify(digest, fingerprint_bytes(back)):
+                    ok = verify(digest, fingerprint_bytes(back))
+                    cksum_s += time.perf_counter() - t_ck
+                    if not ok:
                         raise IntegrityError(
                             f"read-back digest mismatch ({item.dst} @ {chunk.offset})"
                         )
-                return digest
+                now = time.perf_counter()
+                return digest, ChunkSample(
+                    offset=chunk.offset, length=chunk.length,
+                    seconds=now - t0,
+                    attempt_seconds=signal_s + (now - t_att),
+                    cksum_seconds=cksum_s, attempts=attempts,
+                    refetches=refetches,
+                )
             except MoverCrash:
                 raise                      # the mover is gone; no in-place retry
             except IntegrityError:
@@ -774,6 +981,7 @@ class TransferService:
                 time.sleep(self.config.retry_backoff_s * min(outages, 8))
             except Exception:
                 generic += 1
+                signal_s += time.perf_counter() - t_att   # congestion-like
                 if generic > self.config.max_retries:
                     raise
                 with t.lock:
@@ -813,6 +1021,8 @@ class TransferService:
             return dst
 
     def _build_reports(self, t: _Task, journal: ChunkJournal) -> tuple[ItemReport, ...]:
+        if any(g >= TUNE_GID_BASE for g in journal.records):
+            return self._build_reports_regions(t, journal)
         reports = []
         for i, (item, plan) in enumerate(zip(t.spec.items, t.plans)):
             base = t.chunk_base[i]
@@ -829,6 +1039,30 @@ class TransferService:
                 src=item.src, dst=item.dst, nbytes=item.nbytes,
                 digest_hex=digest.hexdigest(),
                 chunk_bytes=plan.chunk_bytes, chunks=tuple(chunks),
+            ))
+        return tuple(reports)
+
+    def _build_reports_regions(self, t: _Task, journal: ChunkJournal) -> tuple[ItemReport, ...]:
+        """Item reports for a re-planned (tuned) task: the journal's byte
+        regions are authoritative — the merge-law combine works over any
+        boundary set that tiles each item exactly."""
+        per_item: dict[int, list] = {i: [] for i in range(len(t.spec.items))}
+        for g, rec in journal.records.items():
+            per_item[t.item_of_gidx(g)].append(rec)
+        reports = []
+        for i, item in enumerate(t.spec.items):
+            rl = sorted(per_item[i], key=lambda r: r.offset)
+            parts = [(r.offset, r.digest()) for r in rl]
+            digest = combine_at_offsets(parts, item.nbytes) if parts else EMPTY_DIGEST
+            chunks = tuple(
+                {"index": r.chunk_index, "offset": r.offset,
+                 "length": r.length, "digest": r.digest_hex}
+                for r in rl
+            )
+            reports.append(ItemReport(
+                src=item.src, dst=item.dst, nbytes=item.nbytes,
+                digest_hex=digest.hexdigest(),
+                chunk_bytes=t.chunk_bytes_now, chunks=chunks,
             ))
         return tuple(reports)
 
@@ -896,4 +1130,7 @@ class TransferService:
                 outages=t.outages,
                 mover_deaths=t.mover_deaths,
                 fault=t.fault,
+                tuning=t.tuning,
+                replans=t.replans,
+                chunk_bytes_current=t.chunk_bytes_now,
             )

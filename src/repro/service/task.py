@@ -90,6 +90,9 @@ class TaskSpec:
     label: str
     items: tuple[TransferItem, ...]
     chunk_bytes: int | None = None
+    # per-task tuning policy: "auto" closes the chunk-size loop over this
+    # task's tail, "static" pins the plan; None defers to the service default
+    tuning: str | None = None
     submitted_s: float = dataclasses.field(default_factory=time.time)
 
     @property
@@ -111,6 +114,7 @@ class TaskSpec:
             "label": self.label,
             "items": [it.to_json() for it in self.items],
             "chunk_bytes": self.chunk_bytes,
+            "tuning": self.tuning,
             "submitted_s": self.submitted_s,
         }
 
@@ -122,6 +126,7 @@ class TaskSpec:
             label=obj.get("label", ""),
             items=tuple(TransferItem.from_json(o) for o in obj["items"]),
             chunk_bytes=obj.get("chunk_bytes"),
+            tuning=obj.get("tuning"),
             submitted_s=float(obj.get("submitted_s", 0.0)),
         )
 
@@ -206,6 +211,10 @@ class TaskStatus:
     outages: int = 0          # ops rejected by endpoint outage windows
     mover_deaths: int = 0     # movers lost mid-chunk (chunks re-queued)
     fault: FaultReport | None = None    # set when state == FAILED
+    # autotuner accounting (tuned-vs-static visibility):
+    tuning: str = "static"    # effective policy this task ran under
+    replans: int = 0          # mid-flight tail re-partitions
+    chunk_bytes_current: int | None = None   # nominal tail chunk size now
 
     @property
     def done(self) -> bool:

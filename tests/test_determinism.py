@@ -1,0 +1,127 @@
+"""Determinism guards: same seed => byte-identical results, twice in-process.
+
+The virtual-time backends (core.vclock / service.testbed / fabric.virtual)
+and the machine-readable benchmark metrics are the repo's reproducibility
+contract: any hidden wall-clock read, dict-order dependence, or global RNG
+use would silently break seed-replay of fault campaigns and make
+``BENCH_*.json`` diffs meaningless. Every test here runs the same
+computation twice in one process and requires bit-identical serialised
+output.
+"""
+import dataclasses
+import json
+
+from repro.faults import parse_scenario
+from repro.service import BatchConfig, Submission, run_load
+from repro.tune import ChunkController, ChunkSample
+
+
+def _canon(obj) -> str:
+    """Canonical JSON of a (nested-dataclass) result object."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        obj = dataclasses.asdict(obj)
+    return json.dumps(obj, sort_keys=True, default=repr)
+
+
+# ---------------------------------------------------------------------------
+# service testbed (fluid model on the virtual clock)
+# ---------------------------------------------------------------------------
+def _one_load(seed: int):
+    GB = 10**9
+    work = [Submission(0.0, f"t{k % 3}", (8 * GB,)) for k in range(6)]
+    work.append(Submission(5.0, "t3", tuple([2 * GB] * 4)))
+    scenario = parse_scenario(
+        "corrupt_1_per_TiB+kill_2_movers+outage_at_50pct"
+    ).scaled_to(int(sum(sum(s.file_bytes) for s in work)), target_events=6.0)
+    return run_load(
+        work, policy="marginal", mover_budget=16, max_concurrent=4,
+        chunk_bytes=500 * 10**6,
+        batch=BatchConfig(direct_bytes=10**9, batch_files=8),
+        scenario=scenario, seed=seed,
+    )
+
+
+def test_run_load_is_bit_deterministic():
+    a, b = _one_load(seed=3), _one_load(seed=3)
+    assert _canon(a) == _canon(b)
+
+
+def test_run_load_seed_actually_matters():
+    a, b = _one_load(seed=3), _one_load(seed=4)
+    assert _canon(a.faults) != _canon(b.faults)
+
+
+# ---------------------------------------------------------------------------
+# fabric virtual executor (campaign + naive sweeps)
+# ---------------------------------------------------------------------------
+def _one_campaign(seed: int):
+    from repro.fabric import (
+        RoutePlanner,
+        build_distribution_tree,
+        shared_trunk_topology,
+        simulate_campaign,
+        simulate_naive,
+    )
+
+    topo = shared_trunk_topology(4)
+    dests = [f"d{i}" for i in range(4)]
+    nbytes = 50 * 10**9
+    tree = build_distribution_tree(RoutePlanner(topo), "src", dests, nbytes)
+    scenario = parse_scenario("corrupt_1_per_TiB+link_outage_at_50pct+degrade_hop")
+    camp = simulate_campaign(topo, tree, nbytes, scenario=scenario, seed=seed)
+    naive = simulate_naive(topo, "src", dests, nbytes, scenario=scenario, seed=seed)
+    return camp, naive
+
+
+def test_fabric_virtual_sweep_is_bit_deterministic():
+    (c1, n1), (c2, n2) = _one_campaign(7), _one_campaign(7)
+    assert _canon(c1) == _canon(c2)
+    assert _canon(n1) == _canon(n2)
+
+
+# ---------------------------------------------------------------------------
+# benchmark metrics dicts (what BENCH_*.json carries)
+# ---------------------------------------------------------------------------
+def _metrics(rows):
+    return {n: {"value": v, "unit": u} for n, v, u in rows}
+
+
+def test_autotune_virtual_metrics_identical_across_runs():
+    from benchmarks.autotune import virtual_rows
+
+    m1, m2 = _metrics(virtual_rows()), _metrics(virtual_rows())
+    assert json.dumps(m1, sort_keys=True) == json.dumps(m2, sort_keys=True)
+
+
+def test_testbed_metrics_identical_across_runs():
+    """The exact numbers a testbed benchmark would emit, twice."""
+    def rows():
+        rep = _one_load(seed=11)
+        return [
+            ("agg_gbps", round(rep.aggregate_gbps, 6), "Gb/s"),
+            ("makespan_s", round(rep.makespan_s, 6), "s"),
+            ("p50_s", round(rep.p50_s, 6), "s"),
+            ("p99_s", round(rep.p99_s, 6), "s"),
+            ("amplification", round(rep.retry_amplification, 9), "x"),
+            ("corruptions", rep.faults.corruptions, "events"),
+        ]
+
+    assert _metrics(rows()) == _metrics(rows())
+
+
+# ---------------------------------------------------------------------------
+# controller decision stream (no wall clock, no RNG)
+# ---------------------------------------------------------------------------
+def test_controller_decisions_are_deterministic():
+    def run():
+        ctrl = ChunkController(chunk_bytes=256 * 1024, min_chunk=32 * 1024,
+                               max_chunk=2 * 1024 * 1024, epoch_chunks=2)
+        rates = [1e8, 1.1e8, 9e7, 1e8, 3e7, 2.8e7, 5e7, 5.2e7] * 6
+        for i, r in enumerate(rates):
+            c = ctrl.target()
+            ctrl.observe(ChunkSample(offset=i, length=c, seconds=c / r,
+                                     attempt_seconds=c / r))
+        return [(d.epoch, d.action, d.chunk_bytes, round(d.rate_Bps, 6))
+                for d in ctrl.decisions]
+
+    assert run() == run()

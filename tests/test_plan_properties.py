@@ -1,0 +1,175 @@
+"""Property-based tests for chunk planning and tail re-planning.
+
+Edge cases the paper's workloads hit in production: zero-byte files, files
+smaller than the minimum chunk, sizes straddling the 1 TiB scale of the
+climate-replication case study, and the idempotence/refinement laws the
+autotuner's re-plan machinery depends on (re-cutting at the same size is a
+no-op; journaled regions are never touched).
+
+Runs under real `hypothesis` when installed, else the deterministic
+`_hypofallback` replay.
+"""
+import math
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypofallback import given, settings, strategies as st
+
+from repro.core.chunker import (
+    GiB,
+    MiB,
+    merge_regions,
+    partition_regions,
+    plan_auto,
+    plan_chunks,
+    subtract_regions,
+)
+
+TiB = 1024 * GiB
+
+
+# ---------------------------------------------------------------------------
+# plan_chunks invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(
+    total=st.integers(0, 1 << 28),
+    movers=st.integers(1, 128),
+    depth=st.integers(1, 8),
+)
+def test_plan_chunks_covers_exactly(total, movers, depth):
+    plan = plan_chunks(total, movers, pipeline_depth=depth)
+    plan.validate()                 # disjoint, in-order, exact coverage
+    if total == 0:
+        assert plan.n_chunks == 0
+    else:
+        assert plan.n_chunks >= 1
+        assert sum(c.length for c in plan.chunks) == total
+
+
+@settings(max_examples=25, deadline=None)
+@given(total=st.integers(1, 32 * MiB - 1))
+def test_small_file_is_not_chunked(total):
+    # below 2x min_chunk the paper's guidance is: do not chunk at all
+    plan = plan_chunks(total, 64, min_chunk=16 * MiB)
+    if total < 2 * 16 * MiB:
+        assert plan.n_chunks == 1
+        assert plan.chunks[0].length == total
+
+
+def test_zero_byte_plans():
+    assert plan_chunks(0, 8).n_chunks == 0
+    assert plan_auto(0, 8, lambda s: 1.0).n_chunks == 0
+    assert partition_regions([], 1024) == []
+    assert subtract_regions(0, []) == []
+
+
+@settings(max_examples=12, deadline=None)
+@given(delta=st.integers(-4096, 4096), movers=st.integers(1, 64))
+def test_one_tebibyte_edge(delta, movers):
+    """Sizes straddling the paper's 1 TiB case study: the plan must stay
+    exact, bounded in chunk count, and clamp to the configured maximum."""
+    total = TiB + delta
+    plan = plan_chunks(total, movers)
+    plan.validate()
+    assert plan.chunk_bytes <= 512 * MiB + 4     # default max_chunk (+align)
+    assert plan.n_chunks <= 1 << 20              # control-plane ceiling
+
+
+def test_max_chunks_ceiling_enforced():
+    plan = plan_chunks(1 << 30, 4, chunk_bytes=64, max_chunks=1024,
+                       alignment=1)
+    assert plan.n_chunks <= 1024
+    plan.validate()
+
+
+# ---------------------------------------------------------------------------
+# plan_auto
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(total=st.integers(1, 1 << 32), movers=st.integers(1, 64))
+def test_plan_auto_picks_a_candidate_and_covers(total, movers):
+    calls = []
+
+    def cost(s):
+        calls.append(s)
+        return abs(math.log(s / (100 * MiB)))    # optimum near 100 MiB
+
+    plan = plan_auto(total, movers, cost)
+    plan.validate()
+    if calls:                      # at least one candidate fit the file
+        seen = list(calls)         # snapshot: cost() appends on every call
+        assert plan.chunk_bytes <= max(seen) + 4
+        best = min(seen, key=lambda s: abs(math.log(s / (100 * MiB))))
+        # the chosen nominal size is the argmin (modulo alignment rounding)
+        assert abs(plan.chunk_bytes - min(best, total)) <= 4
+
+
+# ---------------------------------------------------------------------------
+# re-plan laws (the autotuner's actuator)
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(
+    total=st.integers(1, 1 << 20),
+    cb=st.integers(256, 1 << 20),
+    align=st.integers(1, 4096),
+)
+def test_partition_matches_plan_chunks_on_whole_file(total, cb, align):
+    """Re-planning the whole file at size S == planning it at size S."""
+    plan = plan_chunks(total, 1, chunk_bytes=cb, min_chunk=1,
+                       max_chunk=1 << 62, alignment=align)
+    carved = partition_regions([(0, total)], cb, alignment=align)
+    assert [(c.offset, c.length) for c in plan.chunks] == \
+        [(c.offset, c.length) for c in carved]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    total=st.integers(1, 1 << 20),
+    cb=st.integers(512, 1 << 18),
+    pct=st.integers(0, 100),
+)
+def test_replan_is_idempotent_and_respects_done_regions(total, cb, pct):
+    plan = plan_chunks(total, 4, chunk_bytes=cb, min_chunk=1,
+                       max_chunk=1 << 62)
+    # journal a pseudo-random subset of chunks (Knuth-hash selection keeps
+    # the draw count constant regardless of chunk count)
+    done_idx = [i for i in range(plan.n_chunks)
+                if (i * 2654435761 + pct) % 100 < pct]
+    done = [(plan.chunks[i].offset, plan.chunks[i].length) for i in done_idx]
+    gaps = subtract_regions(total, done)
+    # (1) carved chunks never touch a journaled byte
+    carved = partition_regions(gaps, cb, start_index=plan.n_chunks)
+    for c in carved:
+        for off, ln in done:
+            assert not (c.offset < off + ln and off < c.end)
+    # (2) carved chunks + journaled regions tile the file exactly
+    every = [(c.offset, c.length) for c in carved] + done
+    assert merge_regions(every) == ([(0, total)] if total else [])
+    # (3) idempotence: re-cutting the carved regions at the same size is a
+    # fixpoint (same boundaries, so re-plans compose without drift)
+    again = partition_regions([(c.offset, c.length) for c in carved], cb,
+                              start_index=plan.n_chunks)
+    assert [(c.offset, c.length) for c in again] == \
+        [(c.offset, c.length) for c in carved]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    total=st.integers(0, 1 << 24),
+    cuts=st.lists(st.integers(0, (1 << 24) - 1), min_size=0, max_size=16),
+)
+def test_subtract_merge_roundtrip(total, cuts):
+    # build disjoint sorted regions inside [0, total) from sorted cut points
+    pts = sorted({c % (total + 1) for c in cuts})
+    regions = []
+    for a, b in zip(pts[::2], pts[1::2]):
+        if b > a:
+            regions.append((a, b - a))
+    gaps = subtract_regions(total, regions)
+    assert merge_regions(gaps + regions) == ([(0, total)] if total else [])
+    # gaps and regions are disjoint
+    for goff, gln in gaps:
+        for off, ln in regions:
+            assert not (goff < off + ln and off < goff + gln)

@@ -1,0 +1,593 @@
+"""Conformance suite for the closed-loop chunk autotuner.
+
+The invariants every future PR must keep:
+
+  * a mid-flight re-plan only ever re-cuts the un-started tail — it NEVER
+    splits (or re-moves) a journaled chunk, and the merge-law digest chain
+    over a re-planned transfer still equals the whole-file digest;
+  * kill + restart mid-re-plan resumes by byte region: 0 journaled chunks
+    are moved again, even though the journal's boundaries no longer match
+    any static plan;
+  * the AIMD controller converges on the calibrated simulator under a step
+    change, and hysteresis keeps a noisy-but-stationary path from
+    oscillating;
+  * fault recovery (corruption re-fetches) is excluded from the goodput
+    signal, so a `corrupt_1_per_TiB` campaign cannot masquerade as
+    congestion and drive the chunk size to the floor;
+  * the service's tuned tasks and the relay's per-hop granule controllers
+    keep every integrity/custody guarantee of their static counterparts.
+"""
+import os
+import pathlib
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.chunker import (
+    merge_regions,
+    partition_regions,
+    plan_chunks,
+    subtract_regions,
+)
+from repro.core.integrity import fingerprint_bytes, verify
+from repro.core.journal import ChunkJournal
+from repro.core.transfer import (
+    BufferDest,
+    BufferSource,
+    ChunkedTransfer,
+    FileDest,
+)
+from repro.core.simulator import ALCF, NERSC, LinkConfig
+from repro.faults import FaultCampaign, parse_scenario
+from repro.tune import ChunkController, ChunkSample, SimTuner, TransferProbe
+from repro.tune.controller import MD
+from repro.tune.harness import Phase, StepPath, StepScenario
+
+KiB, MiB = 1024, 1024 * 1024
+
+
+def _payload(seed: int, n: int) -> bytes:
+    return np.random.default_rng(seed).integers(0, 256, n, dtype=np.uint8).tobytes()
+
+
+class ScriptedTuner:
+    """Deterministic stand-in controller: re-plans at scripted chunk counts."""
+
+    def __init__(self, initial: int, script: dict[int, int]):
+        self._initial = initial
+        self._script = dict(script)
+        self._n = 0
+
+    def target(self) -> int:
+        return self._initial
+
+    def observe_outcome(self, _out):
+        self._n += 1
+        return self._script.pop(self._n, None)
+
+
+class _Crash(Exception):
+    pass
+
+
+@pytest.fixture
+def fast_tmp():
+    """tmpfs-backed scratch dir for timing-sensitive legs: on slow network
+    filesystems (9p CI mounts) file I/O jitter would swamp the paced rates
+    the controller tests assert on."""
+    base = "/dev/shm" if os.path.isdir("/dev/shm") else None
+    with tempfile.TemporaryDirectory(prefix="tune-", dir=base) as d:
+        yield pathlib.Path(d)
+
+
+# ---------------------------------------------------------------------------
+# region algebra
+# ---------------------------------------------------------------------------
+def test_merge_subtract_partition_roundtrip():
+    total = 1000
+    covered = [(100, 50), (150, 50), (400, 100)]      # adjacent pair merges
+    assert merge_regions(covered) == [(100, 100), (400, 100)]
+    gaps = subtract_regions(total, covered)
+    assert gaps == [(0, 100), (200, 200), (500, 500)]
+    # gaps + covered tile the whole range
+    assert merge_regions(gaps + covered) == [(0, total)]
+    chunks = partition_regions(gaps, 128, start_index=7)
+    # chunks tile exactly the gaps, never touch covered bytes
+    assert merge_regions([(c.offset, c.length) for c in chunks]) == gaps
+    assert [c.index for c in chunks] == list(range(7, 7 + len(chunks)))
+
+
+def test_merge_regions_rejects_overlap():
+    with pytest.raises(ValueError):
+        merge_regions([(0, 10), (5, 10)])
+
+
+def test_partition_alignment():
+    chunks = partition_regions([(0, 1000)], 100, alignment=64)
+    assert all(c.length % 64 == 0 or c.end == 1000 for c in chunks)
+
+
+# ---------------------------------------------------------------------------
+# engine re-planning: digests + journal custody
+# ---------------------------------------------------------------------------
+def test_replanned_transfer_digest_equals_whole_file(tmp_path):
+    payload = _payload(1, MiB + 4093)
+    plan = plan_chunks(len(payload), 2, chunk_bytes=128 * KiB,
+                       min_chunk=1, max_chunk=1 << 50)
+    tuner = ScriptedTuner(128 * KiB, {2: 48 * KiB, 5: 200 * KiB})
+    dst = BufferDest(len(payload))
+    journal = ChunkJournal(tmp_path / "j")
+    rep = ChunkedTransfer(BufferSource(payload), dst, plan,
+                          journal=journal, tuner=tuner).run()
+    journal.close()
+    assert rep.replans >= 1
+    assert bytes(dst.buf) == payload
+    # merge-law digest chain over the re-planned boundary set == whole file
+    assert verify(rep.file_digest, fingerprint_bytes(payload))
+    # journal records tile the file exactly (no split/overlap/gap)
+    probe = ChunkJournal(tmp_path / "j")
+    regions = [(r.offset, r.length) for r in probe.records.values()]
+    probe.close()
+    assert merge_regions(regions) == [(0, len(payload))]
+
+
+def test_replan_never_splits_journaled_chunk(tmp_path):
+    """Crash mid-transfer, then resume with a DIFFERENT chunk size: every
+    journaled byte region must stay byte-identical and un-moved."""
+    payload = _payload(2, MiB + 17)
+    plan = plan_chunks(len(payload), 2, chunk_bytes=128 * KiB,
+                       min_chunk=1, max_chunk=1 << 50)
+    jpath = str(tmp_path / "j")
+    lock = threading.Lock()
+    calls = [0]
+
+    def bomb(_chunk, _attempt):
+        with lock:
+            calls[0] += 1
+            if calls[0] > 4:
+                raise _Crash("host died")
+
+    journal = ChunkJournal(jpath)
+    with pytest.raises((_Crash, RuntimeError)):
+        ChunkedTransfer(
+            BufferSource(payload), FileDest(tmp_path / "out", len(payload)),
+            plan, journal=journal, fault_injector=bomb, max_retries=0,
+        ).run()
+    journal.close()
+
+    probe = ChunkJournal(jpath)
+    journaled = [(r.offset, r.length) for r in probe.records.values()]
+    probe.close()
+    assert journaled, "crash leg should have journaled some chunks"
+
+    moved: list[tuple[int, int]] = []
+
+    def record(chunk, _attempt):
+        with lock:
+            moved.append((chunk.offset, chunk.length))
+
+    # resume with a tuner whose warm-start size differs from the plan —
+    # the tail is re-planned before the first byte moves
+    tuner = ScriptedTuner(40 * KiB, {3: 96 * KiB})
+    journal = ChunkJournal(jpath)
+    rep = ChunkedTransfer(
+        BufferSource(payload), FileDest(tmp_path / "out", len(payload)),
+        plan, journal=journal, tuner=tuner, fault_injector=record,
+    ).run()
+    journal.close()
+    assert rep.skipped_chunks == len(journaled)
+    # no moved region may overlap any journaled region — not even partially
+    for off, ln in moved:
+        for joff, jln in journaled:
+            assert not (off < joff + jln and joff < off + ln), (
+                f"re-plan moved journaled bytes: ({off},{ln}) vs ({joff},{jln})")
+    with open(tmp_path / "out", "rb") as fh:
+        assert fh.read() == payload
+    assert verify(rep.file_digest, fingerprint_bytes(payload))
+
+
+def test_kill_restart_mid_replan_zero_re_moved(tmp_path):
+    """The crash lands right AFTER a re-plan: the journal holds a mix of
+    original-plan and re-planned boundaries; the restart must still re-move
+    nothing that was journaled."""
+    payload = _payload(3, 2 * MiB + 911)
+    plan = plan_chunks(len(payload), 2, chunk_bytes=256 * KiB,
+                       min_chunk=1, max_chunk=1 << 50)
+    jpath = str(tmp_path / "j")
+    lock = threading.Lock()
+    calls = [0]
+
+    def bomb(_chunk, _attempt):
+        with lock:
+            calls[0] += 1
+            if calls[0] > 5:
+                raise _Crash("host died mid-re-plan")
+
+    journal = ChunkJournal(jpath)
+    with pytest.raises((_Crash, RuntimeError)):
+        ChunkedTransfer(
+            BufferSource(payload), FileDest(tmp_path / "out", len(payload)),
+            plan, journal=journal, fault_injector=bomb, max_retries=0,
+            tuner=ScriptedTuner(256 * KiB, {2: 64 * KiB}),
+        ).run()
+    journal.close()
+
+    probe = ChunkJournal(jpath)
+    journaled = [(r.offset, r.length) for r in probe.records.values()]
+    probe.close()
+    assert journaled
+
+    moved: list[tuple[int, int]] = []
+
+    def record(chunk, _attempt):
+        with lock:
+            moved.append((chunk.offset, chunk.length))
+
+    journal = ChunkJournal(jpath)
+    rep = ChunkedTransfer(
+        BufferSource(payload), FileDest(tmp_path / "out", len(payload)),
+        plan, journal=journal, tuner=ScriptedTuner(96 * KiB, {}),
+        fault_injector=record,
+    ).run()
+    journal.close()
+    re_moved = sum(
+        1 for off, ln in moved for joff, jln in journaled
+        if off < joff + jln and joff < off + ln
+    )
+    assert re_moved == 0
+    with open(tmp_path / "out", "rb") as fh:
+        assert fh.read() == payload
+    assert verify(rep.file_digest, fingerprint_bytes(payload))
+    # the restart's journal still tiles the file exactly
+    probe = ChunkJournal(jpath)
+    regions = [(r.offset, r.length) for r in probe.records.values()]
+    probe.close()
+    assert merge_regions(regions) == [(0, len(payload))]
+
+
+def test_tuner_and_speculation_are_exclusive():
+    payload = _payload(4, 256 * KiB)
+    plan = plan_chunks(len(payload), 2, chunk_bytes=64 * KiB,
+                       min_chunk=1, max_chunk=1 << 50)
+    with pytest.raises(ValueError):
+        ChunkedTransfer(BufferSource(payload), BufferDest(len(payload)), plan,
+                        tuner=ScriptedTuner(64 * KiB, {}),
+                        speculative_factor=1.0)
+
+
+# ---------------------------------------------------------------------------
+# controller dynamics (deterministic synthetic telemetry — no wall clock)
+# ---------------------------------------------------------------------------
+def _feed(ctrl: ChunkController, rate_fn, n_samples: int) -> list[int]:
+    """Feed synthetic per-chunk samples; rate_fn(chunk_bytes) -> bytes/s."""
+    replans = []
+    for _ in range(n_samples):
+        c = ctrl.target()
+        r = rate_fn(c)
+        s = ChunkSample(offset=0, length=c, seconds=c / r, attempt_seconds=c / r)
+        new = ctrl.observe(s)
+        if new is not None:
+            replans.append(new)
+    return replans
+
+
+def test_aimd_converges_on_simulator_step_change():
+    """Seed at the calibrated simulator's optimum for a low-latency link,
+    then step the world to a high-latency link (predictions from the SAME
+    simulator). The controller must walk to within a climb-step of the
+    post-change optimum and hold there."""
+    total = 10 * 10**9
+    tuner_a = SimTuner(ALCF, NERSC, LinkConfig(chunk_latency_s=0.1))
+    tuner_b = SimTuner(ALCF, NERSC, LinkConfig(chunk_latency_s=5.0))
+
+    def rate(tuner):
+        def f(chunk):
+            return total / tuner.predict_seconds(total, min(chunk, total))
+        return f
+
+    ctrl = tuner_a.make_controller(total, epoch_chunks=2, hold_patience=1,
+                                   long_hold_epochs=2)
+    seed = ctrl.target()
+    _feed(ctrl, rate(tuner_a), 20)
+    # phase change: the same candidates now predict very different times
+    _feed(ctrl, rate(tuner_b), 160)
+    final = ctrl.target()
+    # post-change optimum among the controller's own bounds
+    candidates = [c for c in tuner_b.candidates
+                  if ctrl.min_chunk <= c <= ctrl.max_chunk]
+    best = max(candidates, key=rate(tuner_b))
+    assert rate(tuner_b)(final) >= 0.5 * rate(tuner_b)(best), (
+        f"converged to {final} ({rate(tuner_b)(final):.3g} B/s) vs optimum "
+        f"{best} ({rate(tuner_b)(best):.3g} B/s); seed was {seed}")
+    # and it stabilised: the last stretch holds a single target
+    tail = {d.chunk_bytes for d in ctrl.decisions[-6:]}
+    assert len(tail) <= 2, f"still hunting at the end: {sorted(tail)}"
+
+
+def test_hysteresis_prevents_oscillation_on_noisy_stationary():
+    ctrl = ChunkController(chunk_bytes=256 * KiB, min_chunk=16 * KiB,
+                           max_chunk=4 * MiB, epoch_chunks=2)
+    k = [0]
+
+    def noisy(chunk):
+        # flat response with deterministic +-5% wobble (< hysteresis)
+        k[0] += 1
+        return 1e8 * (1.0 + 0.05 * ((-1) ** k[0]))
+
+    replans = _feed(ctrl, noisy, 200)
+    # probes happen, but every one is rolled back: no drift, no MD storm
+    assert ctrl.target() == 256 * KiB
+    assert not [d for d in ctrl.decisions if d.action == MD]
+    visited = {d.chunk_bytes for d in ctrl.decisions}
+    assert len(visited) <= 3, f"oscillating across {sorted(visited)}"
+    assert len(replans) <= 30
+
+
+def test_controller_respects_bounds_and_alignment():
+    ctrl = ChunkController(chunk_bytes=100 * KiB, min_chunk=32 * KiB,
+                           max_chunk=200 * KiB, alignment=4096,
+                           epoch_chunks=1, hold_patience=1)
+    assert ctrl.target() % 4096 == 0
+    # collapse hard repeatedly: target must never go below min_chunk
+    _feed(ctrl, lambda c: 1e8 if c >= 100 * KiB else 1e2, 50)
+    assert 32 * KiB <= ctrl.target() <= 200 * KiB
+    assert all(d.chunk_bytes % 4096 == 0 for d in ctrl.decisions)
+
+
+def test_probe_rate_excludes_fault_time():
+    p = TransferProbe()
+    # 10 chunks, each 1 MB moved in 0.01s of work but 1s of total recovery
+    for i in range(10):
+        p.add(ChunkSample(offset=i * MiB, length=MiB, seconds=1.0,
+                          attempt_seconds=0.01, attempts=4, refetches=3))
+    assert p.goodput_Bps == pytest.approx(MiB / 0.01, rel=1e-6)
+    assert p.retry_amplification == pytest.approx(4.0)
+    assert p.fault_refetches == 30
+
+
+# ---------------------------------------------------------------------------
+# satellite fix: fault campaigns must not masquerade as congestion
+# ---------------------------------------------------------------------------
+def test_controller_ignores_fault_recovery_time():
+    """Deterministic form of the regression: chunks whose total time blew up
+    10x on corruption re-fetches — but whose fault-excluded work time is
+    steady — must not trigger a multiplicative decrease."""
+    ctrl = ChunkController(chunk_bytes=128 * KiB, min_chunk=16 * KiB,
+                           max_chunk=512 * KiB, epoch_chunks=2)
+    clean = ChunkSample(offset=0, length=128 * KiB, seconds=0.01,
+                        attempt_seconds=0.01)
+    for _ in range(4):
+        ctrl.observe(clean)
+    corrupted = ChunkSample(offset=0, length=128 * KiB, seconds=0.1,
+                            attempt_seconds=0.01, attempts=2, refetches=1)
+    for _ in range(8):
+        ctrl.observe(corrupted)
+    assert not [d for d in ctrl.decisions if d.action == MD]
+    assert ctrl.target() >= 128 * KiB // 2
+
+
+def test_corruption_refetches_do_not_drive_chunk_size_down(fast_tmp):
+    tmp_path = fast_tmp
+    """corrupt_1_per_TiB (scaled) injects read-back failures that each cost
+    a re-fetch. The controller's rate signal excludes that recovery time,
+    so the chunk size must stay put — no MD, no collapse to the floor."""
+    payload = _payload(7, 2 * MiB)
+    scenario = parse_scenario("corrupt_1_per_TiB").scaled_to(
+        len(payload), target_events=6.0)
+    camp = FaultCampaign(scenario, total_bytes=len(payload), seed=11)
+    plan = plan_chunks(len(payload), 2, chunk_bytes=128 * KiB,
+                       min_chunk=1, max_chunk=1 << 50)
+    # steady paced path so the (noise-hardened) controller sees a flat rate
+    # (10 ms/op: CPU scheduling noise is a small fraction of every sample)
+    pace = StepPath(StepScenario("steady", (Phase(0.0, per_op_s=1e-2),)),
+                    len(payload))
+    ctrl = ChunkController(chunk_bytes=128 * KiB, min_chunk=16 * KiB,
+                           max_chunk=512 * KiB, epoch_chunks=4,
+                           degrade_threshold=0.5, hysteresis=0.25)
+    dst = FileDest(tmp_path / "out", len(payload))
+    journal = ChunkJournal(tmp_path / "j")
+    rep = ChunkedTransfer(
+        pace.wrap_source(camp.wrap_source(BufferSource(payload))),
+        camp.wrap_dest(pace.wrap_dest(dst)),
+        plan, journal=journal, tuner=ctrl,
+    ).run()
+    journal.close()
+    assert camp.stats.corrupt_writes > 0, "campaign injected nothing"
+    assert rep.refetches == camp.stats.corrupt_writes   # every hit healed
+    with open(tmp_path / "out", "rb") as fh:
+        assert fh.read() == payload                     # 0 escapes
+    # the regression: corruption must NOT register as congestion. Wall-clock
+    # noise on a busy CI box may fake at most an isolated wobble — but a
+    # fault-driven collapse (the bug this guards) would MD repeatedly and
+    # pin the size at the floor.
+    mds = [d for d in ctrl.decisions if d.action == MD]
+    assert len(mds) <= 1, (
+        f"corruption drove MDs: {[(d.action, d.chunk_bytes) for d in ctrl.decisions]}")
+    assert ctrl.target() > ctrl.min_chunk, "chunk size driven to the floor"
+    # the probe saw the faults (reporting) without feeding them to control
+    assert ctrl.probe.fault_refetches == rep.refetches
+
+
+# ---------------------------------------------------------------------------
+# SimTuner
+# ---------------------------------------------------------------------------
+def test_simtuner_seed_and_bounds():
+    tuner = SimTuner(ALCF, NERSC)
+    total = 500 * 10**9
+    seed = tuner.seed_chunk(total)
+    lo, hi = tuner.bounds(total)
+    assert seed in tuner.candidates
+    assert lo <= seed <= hi
+    # the seed really is the predicted argmin over the candidate ladder
+    sweep = tuner.sweep(total)
+    assert sweep[seed] == min(sweep.values())
+    ctrl = tuner.make_controller(total)
+    assert ctrl.target() == seed
+    assert (ctrl.min_chunk, ctrl.max_chunk) == (lo, hi)
+
+
+def test_simtuner_small_file_falls_back_unchunked():
+    tuner = SimTuner(ALCF, NERSC)
+    small = 4 * MiB
+    assert tuner.seed_chunk(small) == small
+
+
+# ---------------------------------------------------------------------------
+# service: tuned tasks (TUNE events, tuned status, kill+restart custody)
+# ---------------------------------------------------------------------------
+def _service(root, **cfg_kw):
+    from repro.service import BatchConfig, ServiceConfig, TransferService
+
+    cfg = ServiceConfig(
+        mover_budget=4, max_concurrent_tasks=2, chunk_bytes=32 * KiB,
+        tick_s=0.002, retry_backoff_s=0.001,
+        batch=BatchConfig(direct_bytes=1 << 30, batch_files=64),
+        tune_min_chunk=8 * KiB, tune_max_chunk=128 * KiB, tune_seed="sim",
+        **cfg_kw,
+    )
+    return TransferService(root, cfg)
+
+
+def test_service_tuned_task_succeeds_with_tune_events(tmp_path):
+    rng = np.random.default_rng(5)
+    items = []
+    for i in range(2):
+        p = str(tmp_path / f"f{i}.bin")
+        with open(p, "wb") as fh:
+            fh.write(rng.integers(0, 256, 300_000 + i, dtype=np.uint8).tobytes())
+        items.append((p, p + ".out"))
+    svc = _service(str(tmp_path / "svc"))
+    events = []
+    svc.subscribe(lambda e: events.append(e))
+    try:
+        [tid] = svc.submit(items, batch=False, tuning="auto")
+        st = svc.wait(tid, timeout=60)
+        assert st.state == "SUCCEEDED"
+        assert st.tuning == "auto"
+        # sim seed (clamped to tune_max_chunk) differs from chunk_bytes:
+        # the warm-start re-plan is guaranteed
+        assert st.replans >= 1
+        assert st.chunk_bytes_current is not None
+        assert [e for e in events if e.kind == "TUNE"]
+        for src, dst in items:
+            with open(src, "rb") as a, open(dst, "rb") as b:
+                data, out = a.read(), b.read()
+            assert data == out
+        # item reports carry the merge-law digest of the re-planned chunks
+        for (src, _dst), rep in zip(items, st.item_reports):
+            with open(src, "rb") as fh:
+                assert rep.digest_hex == fingerprint_bytes(fh.read()).hexdigest()
+    finally:
+        svc.close()
+
+
+def test_service_tuned_kill_restart_zero_re_moved(tmp_path):
+    import time as _time
+
+    rng = np.random.default_rng(6)
+    p = str(tmp_path / "big.bin")
+    with open(p, "wb") as fh:
+        fh.write(rng.integers(0, 256, 600_000, dtype=np.uint8).tobytes())
+    items = [(p, p + ".out")]
+    root = str(tmp_path / "svc")
+
+    from repro.service import BatchConfig, ServiceConfig, TransferService
+
+    cfg = ServiceConfig(
+        mover_budget=2, max_concurrent_tasks=1, chunk_bytes=32 * KiB,
+        tick_s=0.002, batch=BatchConfig(direct_bytes=1 << 30, batch_files=64),
+        tuning="auto", tune_min_chunk=8 * KiB, tune_max_chunk=128 * KiB,
+        tune_seed="sim",
+    )
+    pace = lambda *_a: _time.sleep(0.004)          # noqa: E731
+    svc1 = TransferService(root, cfg, fault_injector=pace)
+    [tid] = svc1.submit(items, batch=False)
+    deadline = _time.monotonic() + 30
+    while svc1.status(tid).chunks_done < 3 and _time.monotonic() < deadline:
+        _time.sleep(0.002)
+    svc1.kill()
+
+    probe = ChunkJournal(svc1.store.journal_path(tid))
+    journaled = [(r.offset, r.length) for r in probe.records.values()]
+    probe.close()
+    assert journaled, "kill leg should have journaled chunks"
+
+    moved = []
+    lock = threading.Lock()
+
+    def record(_tid, _item, chunk, _attempt):
+        with lock:
+            moved.append((chunk.offset, chunk.length))
+
+    svc2 = TransferService(root, cfg, fault_injector=record)
+    try:
+        st = svc2.wait(tid, timeout=60)
+        assert st.state == "SUCCEEDED"
+        re_moved = sum(
+            1 for off, ln in moved for joff, jln in journaled
+            if off < joff + jln and joff < off + ln
+        )
+        assert re_moved == 0, f"{re_moved} journaled regions re-moved"
+        with open(p, "rb") as a, open(p + ".out", "rb") as b:
+            assert a.read() == b.read()
+    finally:
+        svc2.close()
+
+
+# ---------------------------------------------------------------------------
+# fabric relay: per-hop granule controllers
+# ---------------------------------------------------------------------------
+def test_relay_degraded_hop_shrinks_its_own_granule(fast_tmp):
+    tmp_path = fast_tmp
+    from repro.fabric import Route
+    from repro.fabric.relay import RelayTransfer
+
+    payload = _payload(9, 3 * MiB)
+    route = Route(nodes=("a", "b", "c"), seconds=1.0)
+    # hop 1 (b->c) is lossy + slow; hop 0 is clean and steadily paced.
+    # Plain time.sleep (no deadline spin): the lossy hop's pacing must not
+    # steal the GIL from the clean hop, or the clean hop's measured rate
+    # genuinely halves and its controller correctly (but unhelpfully for
+    # this assertion) adapts to the contention.
+    import time as _time
+
+    lossy = StepPath(StepScenario("hop1", (
+        Phase(0.0, per_op_s=5e-3, per_byte_s=1e-8, error_per_byte=2.5e-5),
+    )), len(payload), sleep=_time.sleep)
+    steady = StepPath(StepScenario("hop0", (Phase(0.0, per_op_s=1e-2),)),
+                      len(payload), sleep=_time.sleep)
+
+    def wrap_s(h, s):
+        return lossy.wrap_source(s) if h == 1 else steady.wrap_source(s)
+
+    dst = BufferDest(len(payload))
+    # one mover per hop: probe epochs are not diluted by chunks still in
+    # flight at the pre-probe granule, so decisions are reproducible.
+    # Tuning is scoped to the degraded hop (tune_hops) — the operational
+    # pattern for a known-bad DTN, and it makes "the clean hop is never
+    # touched" a structural guarantee this test can assert exactly.
+    rt = RelayTransfer(
+        route, BufferSource(payload), dst,
+        workdir=str(tmp_path / "relay"), chunk_bytes=128 * KiB, movers=1,
+        tuning=True, granule_min=8 * KiB, max_retries=200,
+        retry_backoff_s=0.0, source_wrapper=wrap_s, tune_hops={1},
+    )
+    assert rt.hops[0].controller is None
+    assert rt.hops[1].controller is not None
+    rep = rt.run()
+    assert bytes(dst.buf) == payload
+    assert verify(rep.file_digest, fingerprint_bytes(payload))
+    h0, h1 = rep.hops
+    # the degraded hop adapted its own I/O granule...
+    assert h1.granule_replans >= 1
+    assert h1.granule_bytes < 128 * KiB
+    # ...and the un-tuned clean hop was never touched
+    assert h0.granule_replans == 0
+    assert h0.granule_bytes == 0           # whole-chunk moves throughout
+    # custody journals are still chunk-complete at every hop
+    for h, jp in enumerate(RelayTransfer.journal_paths(tmp_path / "relay", route)):
+        probe = ChunkJournal(jp)
+        assert len(probe.records) == rep.n_chunks, f"hop {h} custody incomplete"
+        probe.close()
