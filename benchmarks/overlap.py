@@ -1,26 +1,401 @@
-"""Real (wall-clock, CPU) measurements of chunked transfer + checksum overlap.
+"""Serial vs single-pass vs pipelined data plane — measured overlap gates.
 
-This is the measured counterpart to the simulator figures: the actual
-``core.transfer`` engine moving real bytes through real files with real
-fingerprints, demonstrating on hardware-at-hand what the paper demonstrates
-on DTNs — chunking + movers parallelizes both movement and integrity
-checking, and the visible checksum cost collapses.
+The paper's central overlap claim (§3.2, Fig. 4) is that per-chunk integrity
+checking must run concurrently with data movement. This benchmark measures
+the three data-plane modes of ``core.transfer`` on the REAL threaded engine
+moving real bytes:
+
+  * ``serial``      — read -> digest -> write -> read-back -> digest, all on
+                      the mover (two full checksum passes on the critical path);
+  * ``single_pass`` — the source digest accumulates while the chunk streams
+                      into the destination (one data pass saved; verify inline);
+  * ``pipelined``   — single-pass streaming + verification deferred to the
+                      decoupled integrity engine's checksum workers.
+
+The wire is a sleep-throttled destination (network time is I/O wait, not
+CPU — the same modelling the autotune harness uses), rated against the host
+checksum rate ``c`` measured immediately before each leg. One mover + one
+checksum worker (the per-mover pipeline of the paper's DTN shape). Two mixes
+bound the regimes (per measured file size — 64 MB always, 1 GB in full mode,
+1 TB as deterministic fluid-model arithmetic):
+
+  * ``cksum_bound`` — wire at the checksum rate (checksum rate <~ wire
+                      rate): the paper's modern-NIC regime where the
+                      checksum pass IS the tax. Serial pays 1/w + 2/c wall
+                      per byte; pipelined hides one checksum pass behind the
+                      wire wait: max(2/c, 1/w + 1/c) — 1.5x in theory.
+                      GATED: pipelined >= 1.4x serial goodput;
+  * ``wire_bound``  — wire at half the checksum rate: serial 4/c vs
+                      pipelined 3/c, 1.33x in theory.
+                      GATED: pipelined >= 1.15x serial.
+
+Also gated: 0 integrity escapes on every leg, a pipelined kill+restart leg
+with a lagging verifier must re-move 0 journaled-and-verified chunks, and
+the digest-algebra microbench must show >= 5x fewer bigint pow() calls per
+merge chain than the uncached 4-per-merge cost.
+
+Prints ``name,value,unit`` CSV, writes ``BENCH_overlap.json`` via
+``benchmarks._results``, exits non-zero on any gate violation.
+
+Run: PYTHONPATH=src python -m benchmarks.overlap [--quick] [--seed N]
 """
 from __future__ import annotations
 
+import argparse
 import os
+import sys
 import tempfile
+import threading
 import time
+
+# one BLAS thread per digest: each mover/checksum worker is one stream of
+# compute (the DTN mover model). A multi-threaded BLAS would let a single
+# serial mover silently soak every core during its checksum pass and turn
+# the overlap measurement into a BLAS-scheduling benchmark.
+os.environ.setdefault("OPENBLAS_NUM_THREADS", "1")
+os.environ.setdefault("OMP_NUM_THREADS", "1")
+os.environ.setdefault("MKL_NUM_THREADS", "1")
 
 import numpy as np
 
+from benchmarks._results import emit
 from repro.core import (
-    BufferDest, BufferSource, ChunkedTransfer, fingerprint_bytes, plan_chunks,
+    BufferDest,
+    BufferSource,
+    ChunkJournal,
+    ChunkedTransfer,
+    fingerprint_bytes,
+    plan_chunks,
 )
+from repro.core import integrity as integrity_mod
+from repro.core.simulator import ALCF, NERSC
 
 MiB = 1024 * 1024
+MODES = ("serial", "single_pass", "pipelined")
+
+# one mover + two checksum workers: the per-mover pipeline being measured
+# (the comparison is mode-vs-mode at a FIXED mover count; the integrity
+# engine is the offload under test, not extra movers). Two verifiers keep
+# the digest queue draining while one worker sits in a long read-back.
+MOVERS = 1
+VERIFIERS = 2
 
 
+class ThrottledDest:
+    """BufferDest behind a sleep-rated wire.
+
+    Network transmission is I/O wait, not CPU — sleeping ``len/rate`` per
+    write models the wire the way the autotune harness does, and is exactly
+    the window the pipelined mode's checksum workers overlap into. The
+    dest-local read-back (verification) runs at memory speed, as on a DTN.
+    """
+
+    def __init__(self, total_bytes: int, rate_Bps: float):
+        self._inner = BufferDest(total_bytes)
+        self.rate_Bps = rate_Bps
+        self._lock = threading.Lock()
+        self._debt_s = 0.0
+
+    @property
+    def buf(self):
+        return self._inner.buf
+
+    def write(self, offset, data):
+        # token-bucket pacing: accumulate wire debt and sleep it off in
+        # >=20 ms quanta, crediting oversleep back — per-write sleeps would
+        # add a scheduler-tick of overshoot to every granule and turn the
+        # wire model into a timer-resolution benchmark
+        with self._lock:
+            self._debt_s += len(data) / self.rate_Bps
+            owe = self._debt_s if self._debt_s >= 0.02 else 0.0
+        if owe:
+            t0 = time.perf_counter()
+            time.sleep(owe)
+            with self._lock:
+                self._debt_s -= time.perf_counter() - t0
+        self._inner.write(offset, data)
+
+    def read_back(self, offset, length):          # dest-local re-read: full speed
+        return self._inner.read_back(offset, length)
+
+    def read_back_into(self, offset, view):
+        return self._inner.read_back_into(offset, view)
+
+    def read_back_view(self, offset, length):
+        return self._inner.read_back_view(offset, length)
+
+
+class SlowVerifyDest(BufferDest):
+    """Slow read-back: deferred verification lags chunks behind movement."""
+
+    def __init__(self, total_bytes, delay_s=0.005):
+        super().__init__(total_bytes)
+        self.delay_s = delay_s
+
+    def read_back(self, offset, length):
+        time.sleep(self.delay_s)
+        return super().read_back(offset, length)
+
+    read_back_into = None   # force the read_back path (not the zero-copy
+    read_back_view = None   # variants, which would bypass the delay)
+
+
+class _HostCrash(Exception):
+    """Crash bomb for the kill+restart leg."""
+
+
+def _payload(seed: int, nbytes: int) -> bytes:
+    return np.random.default_rng(seed).integers(
+        0, 256, nbytes, dtype=np.uint8).tobytes()
+
+
+def host_cksum_rate_Bps(seed: int = 0) -> float:
+    """Measured single-thread host fingerprint rate (sets the wire rating).
+
+    Median of five warm samples: shared-CPU boxes show sub-second steal
+    dips, and a dip caught by a one-shot calibration would mis-rate the
+    wire and shift the whole mix out of its intended regime.
+    """
+    data = _payload(seed, 8 * MiB)
+    fingerprint_bytes(data)                       # warm tables + conv scratch
+    samples = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        fingerprint_bytes(data)
+        samples.append(len(data) / (time.perf_counter() - t0))
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def _run_once(payload: bytes, mode: str, dest_factory, chunk: int):
+    """One transfer in one mode; returns (Bps, escape, report)."""
+    plan = plan_chunks(len(payload), MOVERS, chunk_bytes=chunk,
+                       min_chunk=1, max_chunk=1 << 40)
+    dst = dest_factory()
+    eng = ChunkedTransfer(BufferSource(payload), dst, plan,
+                          pipeline=mode, integrity_workers=VERIFIERS)
+    t0 = time.perf_counter()
+    rep = eng.run()
+    dt = time.perf_counter() - t0
+    return len(payload) / dt, int(bytes(dst.buf) != payload), rep
+
+
+def mix_rows(tag: str, payload: bytes, wire_frac: float, gate: float,
+             violations: list[str], *, seed: int = 0, reps: int = 6,
+             chunk: int = 8 * MiB, attempts: int = 2):
+    """One mix: modes alternate across ``reps`` rounds against the SAME
+    wire rating, and the gate judges best-of-reps per mode. On a quiet
+    machine every round gives the same answer; on a shared-CPU box, steal
+    dips only ever slow a round down, so per-mode maxima converge to the
+    clean-window rates the regime actually defines. A failing attempt is
+    re-measured once end-to-end (fresh wire rating) before it counts as a
+    violation — a genuine regression fails both attempts."""
+    rows: list[tuple[str, float, str]] = []
+    for attempt in range(attempts):
+        cksum_Bps = host_cksum_rate_Bps(seed)
+        rates: dict[str, list[float]] = {m: [] for m in MODES}
+        total_escapes = 0
+        lag = 0.0
+        for _ in range(reps):
+            for mode in MODES:
+                bps, escape, rep = _run_once(
+                    payload, mode,
+                    lambda n=len(payload), w=wire_frac * cksum_Bps:
+                        ThrottledDest(n, w),
+                    chunk)
+                rates[mode].append(bps)
+                total_escapes += escape
+                if mode == "pipelined":
+                    lag = max(lag, rep.cksum_lag_s / max(1, len(rep.outcomes)))
+        best = {m: max(rates[m]) for m in MODES}
+        speedup = best["pipelined"] / best["serial"]
+        rows = [
+            (f"overlap/{tag}/host_cksum_MBps", round(cksum_Bps / 1e6, 1), "MB/s")
+        ] + [
+            (f"overlap/{tag}/{mode}_MBps", round(best[mode] / 1e6, 2), "MB/s")
+            for mode in MODES
+        ]
+        for mode in ("single_pass", "pipelined"):
+            rows.append((f"overlap/{tag}/{mode}_speedup",
+                         round(best[mode] / best["serial"], 3), "x"))
+        rows.append((f"overlap/{tag}/pipelined_mean_lag_ms",
+                     round(lag * 1e3, 3), "ms"))
+        rows.append((f"overlap/{tag}/escapes", total_escapes, "transfers"))
+        if total_escapes:
+            violations.append(f"{tag}: {total_escapes} integrity escapes")
+            break                       # escapes are never an environment flake
+        if gate <= 0 or speedup >= gate:
+            break
+        if attempt == attempts - 1:
+            violations.append(
+                f"{tag}: pipelined/serial {speedup:.2f}x < {gate}x gate")
+        else:
+            print(f"# {tag}: {speedup:.2f}x < {gate}x — "
+                  "re-measuring once (shared-CPU steal window?)")
+    return rows
+
+
+def restart_rows(seed: int, nbytes: int, tmpdir: str,
+                 violations: list[str]):
+    """Pipelined kill+restart with a lagging verifier: the journal may hold
+    ONLY verified chunks, and the restart must re-move none of them."""
+    payload = _payload(seed + 77, nbytes)
+    plan = plan_chunks(len(payload), 4, chunk_bytes=256 * 1024,
+                       min_chunk=1, max_chunk=1 << 40)
+    jpath = os.path.join(tmpdir, "overlap-restart.journal")
+    lock = threading.Lock()
+    calls = [0]
+    bomb_after = plan.n_chunks // 2
+
+    def bomb(_chunk, _attempt):
+        with lock:
+            calls[0] += 1
+            if calls[0] > bomb_after:
+                raise _HostCrash("host died mid-transfer")
+
+    dst = SlowVerifyDest(len(payload))
+    j = ChunkJournal(jpath)
+    try:
+        ChunkedTransfer(BufferSource(payload), dst, plan, journal=j,
+                        fault_injector=bomb, max_retries=0,
+                        pipeline="pipelined", integrity_workers=1).run()
+        raise RuntimeError("crash bomb never fired")
+    except _HostCrash:
+        pass
+    finally:
+        j.close()
+
+    j2 = ChunkJournal(jpath)
+    journaled = [(r.offset, r.length) for r in j2.records.values()]
+    moved: list[tuple[int, int]] = []
+
+    def record(chunk, _attempt):
+        with lock:
+            moved.append((chunk.offset, chunk.length))
+
+    rep2 = ChunkedTransfer(BufferSource(payload), dst, plan, journal=j2,
+                           fault_injector=record, pipeline="pipelined").run()
+    j2.close()
+    escapes = int(bytes(dst.buf) != payload)
+    re_moved = sum(
+        1 for off, ln in set(moved)
+        for joff, jln in journaled
+        if off < joff + jln and joff < off + ln       # any byte overlap
+    )
+    if re_moved:
+        violations.append(
+            f"restart: {re_moved} journaled-and-verified chunks re-moved")
+    if escapes:
+        violations.append(f"restart: {escapes} integrity escapes")
+    return [
+        ("overlap/restart/verified_at_crash", len(journaled), "chunks"),
+        ("overlap/restart/resumed_chunks", rep2.skipped_chunks, "chunks"),
+        ("overlap/restart/re_moved_verified", re_moved, "chunks"),
+        ("overlap/restart/escapes", escapes, "transfers"),
+    ]
+
+
+def pow_microbench_rows(violations: list[str]):
+    """Digest-algebra hot path: bigint pow() calls per merge chain must be
+    >= 5x below the uncached 4-per-merge cost (the LRU'd r^len tables)."""
+    n = 256
+    digests = [fingerprint_bytes(bytes([i % 251]) * 4096) for i in range(n)]
+    integrity_mod.clear_pow_caches()
+    before = integrity_mod.pow_call_count()
+    out = digests[0]
+    for d in digests[1:]:
+        out = out.merge(d)
+    calls = integrity_mod.pow_call_count() - before
+    baseline = 4 * (n - 1)                       # NBASES pows per uncached merge
+    ratio = baseline / max(1, calls)
+    if ratio < 5.0:
+        violations.append(
+            f"pow microbench: only {ratio:.1f}x fewer pow() calls (< 5x gate)")
+    return [
+        ("overlap/pow/merge_chain_len", n - 1, "merges"),
+        ("overlap/pow/bigint_pow_calls", calls, "calls"),
+        ("overlap/pow/uncached_baseline", baseline, "calls"),
+        ("overlap/pow/reduction", round(ratio, 1), "x"),
+    ]
+
+
+def virtual_rows():
+    """Deterministic 1 TB fluid model on the calibrated site configs.
+
+    Per-mover rates: wire w = min(mover_gbps), checksum c = dst.cksum_gbps.
+    Per-byte cost: serial 1/w + 2/c; single-pass max(1/w,1/c) + 1/c (digest
+    overlaps the stream, verify inline); pipelined max(1/w,1/c) (verification
+    on dedicated checksum workers, one per mover). Pure arithmetic —
+    byte-identical across runs."""
+    Gb = 1e9 / 8
+    total = 1e12
+    movers = 64
+    rows = []
+    w = min(ALCF.mover_gbps, NERSC.mover_gbps) * Gb
+    for label, c in (("paper", NERSC.cksum_gbps * Gb),
+                     ("cksum_starved", 1.0 * Gb)):
+        serial = (1 / w + 2 / c)
+        single = (max(1 / w, 1 / c) + 1 / c)
+        pipe = max(1 / w, 1 / c)
+        pre = f"overlap/virtual_1TB/{label}"
+        rows += [
+            (f"{pre}/serial_s", round(total / movers * serial, 1), "s"),
+            (f"{pre}/single_pass_s", round(total / movers * single, 1), "s"),
+            (f"{pre}/pipelined_s", round(total / movers * pipe, 1), "s"),
+            (f"{pre}/pipelined_speedup", round(serial / pipe, 3), "x"),
+        ]
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    rows: list[tuple[str, float, str]] = []
+    violations: list[str] = []
+
+    sizes = [("64MB", 64 * MiB, 6)]
+    if not args.quick:
+        sizes.append(("1GB", 1024 * MiB, 2))
+    for label, nbytes, reps in sizes:
+        payload = _payload(args.seed, nbytes)
+        # the wire is rated against the checksum rate measured IMMEDIATELY
+        # before each mix attempt: the ratio w/c is what defines a regime,
+        # not the absolute speed of the box (which drifts under CPU jitter)
+        for mix, w_frac, gate in (("cksum_bound", 1.0, 1.4),
+                                  ("wire_bound", 0.7, 1.15)):
+            rows += mix_rows(f"{label}/{mix}", payload, w_frac, gate,
+                             violations, seed=args.seed, reps=reps)
+
+    tmp_base = "/dev/shm" if os.path.isdir("/dev/shm") else None
+    with tempfile.TemporaryDirectory(prefix="overlap-", dir=tmp_base) as tmpdir:
+        rows += restart_rows(args.seed, 8 * MiB, tmpdir, violations)
+    rows += pow_microbench_rows(violations)
+    rows += virtual_rows()
+
+    total_escapes = sum(v for n, v, _u in rows if n.endswith("/escapes"))
+    rows.append(("overlap/total_escapes", total_escapes, "transfers"))
+
+    print("name,value,unit")
+    for name, val, unit in rows:
+        print(f"{name},{val},{unit}")
+    path = emit("overlap", rows, seed=args.seed,
+                args={"quick": args.quick, "movers": MOVERS,
+                      "integrity_workers": VERIFIERS})
+    print(f"# wrote {path}")
+    if violations:
+        print("\nOVERLAP GATE VIOLATIONS:", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# legacy figure sections (imported by benchmarks/run.py)
+# ---------------------------------------------------------------------------
 def _measure(payload: bytes, movers: int, chunk: int, integrity: bool,
              reps: int = 2) -> float:
     best = float("inf")
@@ -96,3 +471,7 @@ def kernel_rates():
     rows.append(("host/checksum_rate", round(64 / (time.perf_counter() - t0), 1),
                  "MiB/s"))
     return rows
+
+
+if __name__ == "__main__":
+    sys.exit(main())

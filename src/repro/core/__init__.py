@@ -3,6 +3,9 @@
 Submodules:
   chunker    — chunk planning heuristics (paper §3.1) + automated sizing (§6)
   integrity  — mergeable fingerprints replacing MD5 (paper §3.2, TPU-adapted)
+  dataplane  — zero-copy buffer pool, single-pass streaming, and the
+               decoupled integrity engine (checksum workers off the mover
+               critical path — the paper's Fig. 4 overlap made structural)
   transfer   — host-side chunked transfer engine with chunk-level FT
   journal    — chunk-completion journal (partial restart)
   simulator  — calibrated model of the paper's ALCF/NERSC/OLCF testbed
@@ -11,14 +14,25 @@ Submodules:
                event-stepped backend (simulator, testbed, fabric.virtual)
 """
 from repro.core.chunker import Chunk, ChunkPlan, plan_auto, plan_chunks, plan_for_array
+from repro.core.dataplane import (
+    BufferPool,
+    ChunkBuffer,
+    IntegrityEngine,
+    VerifyJob,
+    read_back_into,
+    read_into,
+    stream_chunk,
+)
 from repro.core.integrity import (
     BASES,
     Digest,
     EMPTY_DIGEST,
     P,
+    RunningFingerprint,
     combine_at_offsets,
     describe_mismatch,
     fingerprint_bytes,
+    fingerprint_many,
     fingerprint_ndarray,
     merge_all,
     verify,
@@ -41,9 +55,12 @@ from repro.core.vclock import ConvergenceError, VirtualClock, Window
 
 __all__ = [
     "Chunk", "ChunkPlan", "plan_auto", "plan_chunks", "plan_for_array",
-    "BASES", "Digest", "EMPTY_DIGEST", "P", "combine_at_offsets",
-    "describe_mismatch", "fingerprint_bytes", "fingerprint_ndarray",
-    "merge_all", "verify",
+    "BASES", "Digest", "EMPTY_DIGEST", "P", "RunningFingerprint",
+    "combine_at_offsets",
+    "describe_mismatch", "fingerprint_bytes", "fingerprint_many",
+    "fingerprint_ndarray", "merge_all", "verify",
+    "BufferPool", "ChunkBuffer", "IntegrityEngine", "VerifyJob",
+    "read_into", "read_back_into", "stream_chunk",
     "ChunkJournal", "JournalRecord", "replay_checked_lines",
     "BufferDest", "BufferSource", "ChunkedTransfer", "EndpointOutage",
     "FileDest", "FileSource", "IntegrityError", "MoverCrash",

@@ -1,0 +1,468 @@
+"""Zero-copy pipelined data plane — buffers, streaming, and the integrity engine.
+
+The paper's central overlap claim (§3.2, Fig. 4) is that per-chunk integrity
+checking must run *concurrently* with data movement, not serialized behind
+it. This module is the host-side machinery that makes that true:
+
+  * **BufferPool / ChunkBuffer** — reusable chunk-sized buffers handed out as
+    exact-length ``memoryview`` handles, so source read, fingerprint, and
+    destination write all touch ONE allocation with zero intermediate
+    ``bytes()`` copies. Buffers cycle back to the pool the moment the write
+    lands; verification reads back into a *different* pooled buffer, so a
+    chunk never pins two buffers at once.
+  * **read_into / read_back_into** — zero-copy endpoint adapters: they use an
+    endpoint's native ``read_into``/``read_back_into`` (``os.preadv`` on
+    files, slice assignment on memory) when present and fall back to the
+    classic ``read()``/``read_back()`` + copy otherwise, so chaos wrappers
+    and third-party endpoints keep working unchanged.
+  * **stream_chunk** — the single-pass move: the chunk streams source->dest
+    in ``granule``-byte sub-reads and the source fingerprint accumulates via
+    the merge law *while each granule is cache-hot*, eliminating the separate
+    full digest pass the serial engine pays.
+  * **IntegrityEngine** — the decoupled checksum worker pool. Movers enqueue
+    a ``VerifyJob`` (coordinates + expected digest) the moment a chunk's
+    write lands and immediately pull the next chunk; integrity workers drain
+    the digest queue concurrently — read-back, fingerprint, verdict — and
+    fire the caller's callbacks. The custody rule lives in the callbacks: a
+    chunk's journal record commits only in ``on_verified``, so a crash with
+    verification lagging N chunks behind movement re-moves exactly those N
+    unverified chunks and nothing else.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue
+import threading
+import time
+from typing import Any, Callable
+
+from repro.core.integrity import (
+    Digest,
+    RunningFingerprint,
+    fingerprint_bytes,
+    verify,
+)
+
+MiB = 1024 * 1024
+DEFAULT_STREAM_GRANULE = 1 * MiB
+
+
+# ---------------------------------------------------------------------------
+# buffer pool
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PoolStats:
+    """Reuse accounting (surfaced by benchmarks/overlap.py)."""
+
+    acquires: int = 0
+    reuses: int = 0            # served from the free list (no allocation)
+    allocations: int = 0       # fresh pooled buffers created
+    oversize: int = 0          # requests larger than the pool's buffer size
+
+
+class ChunkBuffer:
+    """One pooled buffer lease: an exact-length writable ``memoryview``.
+
+    ``view`` is the only handle movers/verifiers should touch; ``release()``
+    returns the backing buffer to the pool (idempotent — double release is a
+    no-op, and the view must not be used afterwards).
+    """
+
+    __slots__ = ("view", "_pool", "_raw")
+
+    def __init__(self, pool: "BufferPool | None", raw: bytearray, length: int):
+        self._pool = pool
+        self._raw = raw
+        self.view = memoryview(raw)[:length]
+
+    def release(self) -> None:
+        raw, self._raw = self._raw, None
+        if raw is None:
+            return
+        self.view.release()
+        self.view = None  # type: ignore[assignment]
+        if self._pool is not None:
+            self._pool._put_back(raw)
+
+    def __enter__(self) -> "ChunkBuffer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class BufferPool:
+    """Thread-safe pool of ``buffer_bytes``-sized reusable buffers.
+
+    ``capacity`` bounds how many idle buffers are retained; extra releases
+    drop their buffer (GC'd) so a transient burst cannot pin memory forever.
+    Requests larger than ``buffer_bytes`` (re-planned jumbo tails) get an
+    exact-size one-shot allocation that is never pooled.
+    """
+
+    def __init__(self, buffer_bytes: int, *, capacity: int = 8):
+        if buffer_bytes < 1:
+            raise ValueError("buffer_bytes must be >= 1")
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.buffer_bytes = int(buffer_bytes)
+        self.capacity = int(capacity)
+        self._free: list[bytearray] = []
+        self._lock = threading.Lock()
+        self.stats = PoolStats()
+
+    def acquire(self, length: int) -> ChunkBuffer:
+        if length > self.buffer_bytes:
+            with self._lock:
+                self.stats.acquires += 1
+                self.stats.oversize += 1
+            return ChunkBuffer(None, bytearray(length), length)
+        with self._lock:
+            self.stats.acquires += 1
+            if self._free:
+                self.stats.reuses += 1
+                raw = self._free.pop()
+            else:
+                self.stats.allocations += 1
+                raw = bytearray(self.buffer_bytes)
+        return ChunkBuffer(self, raw, length)
+
+    def _put_back(self, raw: bytearray) -> None:
+        with self._lock:
+            if len(self._free) < self.capacity:
+                self._free.append(raw)
+
+
+# ---------------------------------------------------------------------------
+# zero-copy endpoint adapters
+# ---------------------------------------------------------------------------
+def read_into(source: Any, offset: int, view: memoryview) -> None:
+    """Read ``len(view)`` bytes at ``offset`` from ``source`` into ``view``.
+
+    Zero-copy when the source implements ``read_into``; otherwise falls back
+    to ``read()`` + one copy (chaos wrappers, legacy endpoints). Short reads
+    raise ``IOError`` either way, matching the engine's retry taxonomy.
+    """
+    n = len(view)
+    fn = getattr(source, "read_into", None)
+    if fn is not None:
+        got = fn(offset, view)
+        if got != n:
+            raise IOError(f"short read at {offset}: {got}/{n}")
+        return
+    data = source.read(offset, n)
+    if len(data) != n:
+        raise IOError(f"short read at {offset}: {len(data)}/{n}")
+    view[:] = data
+
+
+def read_back_into(dest: Any, offset: int, view: memoryview) -> None:
+    """Verification read: like ``read_into`` but against a destination."""
+    n = len(view)
+    fn = getattr(dest, "read_back_into", None)
+    if fn is not None:
+        got = fn(offset, view)
+        if got != n:
+            raise IOError(f"short read-back at {offset}: {got}/{n}")
+        return
+    data = dest.read_back(offset, n)
+    if len(data) != n:
+        raise IOError(f"short read-back at {offset}: {len(data)}/{n}")
+    view[:] = data
+
+
+def fingerprint_view(mv: memoryview, granule: int = DEFAULT_STREAM_GRANULE) -> Digest:
+    """Digest a buffer in cache-sized granule steps (merge law).
+
+    One monolithic ``fingerprint_bytes`` over a large chunk streams its
+    float64 conversion scratch through memory; granule-sized batches keep
+    the working set cache-resident and run measurably faster. This is the
+    read-back path's mirror of ``stream_chunk``'s granule digesting.
+    """
+    n = len(mv)
+    if n <= granule:
+        return fingerprint_bytes(mv)
+    rf = RunningFingerprint()
+    for pos in range(0, n, granule):
+        rf.update(mv[pos : pos + granule])
+    return rf.digest()
+
+
+def read_back_fingerprint(
+    dest: Any,
+    offset: int,
+    length: int,
+    *,
+    pool: "BufferPool | None" = None,
+    granule: int = DEFAULT_STREAM_GRANULE,
+) -> Digest:
+    """Fingerprint the landed bytes, cheapest path first: in place via the
+    destination's zero-copy ``read_back_view`` when it has one, else into a
+    pooled buffer, else through the classic ``read_back()`` bytes. Shared by
+    the integrity engine and the single-pass inline verifier."""
+    viewfn = getattr(dest, "read_back_view", None)
+    if viewfn is not None:
+        mv = viewfn(offset, length)
+        try:
+            return fingerprint_view(mv, granule)
+        finally:
+            if isinstance(mv, memoryview):
+                mv.release()
+    if pool is not None:
+        with pool.acquire(length) as buf:
+            read_back_into(dest, offset, buf.view)
+            return fingerprint_view(buf.view, granule)
+    back = dest.read_back(offset, length)
+    return fingerprint_view(memoryview(back), granule)
+
+
+def stream_chunk(
+    source: Any,
+    dest: Any,
+    offset: int,
+    length: int,
+    *,
+    pool: BufferPool,
+    granule: int = DEFAULT_STREAM_GRANULE,
+    digest: bool = True,
+) -> tuple[Digest | None, float]:
+    """Single-pass chunk move: stream source->dest in granules, fingerprinting
+    each granule while it is cache-hot from the read that produced it.
+
+    Returns ``(source_digest, cksum_seconds)`` where ``cksum_seconds`` is the
+    time spent inside fingerprint math only — the copy itself is mover time.
+    The destination sees the same disjoint-offset writes a whole-chunk move
+    would produce (granule writes are idempotent re-writes on retry).
+
+    ``digest=False`` skips the fingerprint and returns ``(None, 0.0)`` when
+    the source supports stable zero-copy views — the pipelined engine's
+    checksum workers re-derive the source digest from the SAME view off the
+    mover path (the paper's "source fingerprinting runs concurrently with
+    subsequent chunk moves"). Sources without views always digest here: the
+    streamed bytes are not reachable afterwards.
+    """
+    granule = max(1, int(granule))
+    rf = RunningFingerprint()
+    ck_s = 0.0
+    pos = offset
+    end = offset + length
+    viewfn = getattr(source, "read_view", None)
+    if viewfn is not None:
+        # fully zero-copy: digest and write straight out of the source image
+        while pos < end:
+            take = min(granule, end - pos)
+            mv = viewfn(pos, take)
+            if len(mv) != take:
+                raise IOError(f"short read at {pos}: {len(mv)}/{take}")
+            if digest:
+                t0 = time.perf_counter()
+                rf.update(mv)
+                ck_s += time.perf_counter() - t0
+            dest.write(pos, mv)
+            pos += take
+        return (rf.digest() if digest else None), ck_s
+    buf = pool.acquire(min(granule, length) if length else 0)
+    try:
+        while pos < end:
+            take = min(granule, end - pos)
+            mv = buf.view[:take]
+            read_into(source, pos, mv)
+            t0 = time.perf_counter()
+            rf.update(mv)
+            ck_s += time.perf_counter() - t0
+            dest.write(pos, mv)
+            pos += take
+    finally:
+        buf.release()
+    return rf.digest(), ck_s
+
+
+# ---------------------------------------------------------------------------
+# the decoupled integrity engine
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class VerifyJob:
+    """One deferred verification, enqueued by a mover.
+
+    ``key`` is the caller's chunk identity (opaque to the engine), ``dest``
+    the endpoint to read back from, ``expected`` the source digest taken
+    during streaming. ``expected=None`` defers the SOURCE fingerprint too:
+    the worker re-derives it from ``source``'s stable zero-copy view before
+    verifying — movers on view-capable sources are pure wire. ``payload``
+    rides along to the callbacks (the engine's callers stash their
+    outcome/telemetry object there).
+    """
+
+    key: Any
+    offset: int
+    length: int
+    expected: Digest | None
+    dest: Any
+    enqueued_s: float
+    payload: Any = None
+    source: Any = None           # required when expected is None
+
+
+@dataclasses.dataclass
+class IntegrityStats:
+    verified: int = 0
+    corrupt: int = 0
+    errors: int = 0
+    lag_seconds: float = 0.0     # sum of (verdict time - enqueue time)
+    max_lag_s: float = 0.0
+    cksum_seconds: float = 0.0   # read-back + fingerprint work time
+
+
+class IntegrityEngine:
+    """Checksum worker pool consuming a digest queue off the mover path.
+
+    Workers read the landed bytes back (into pooled buffers), fingerprint
+    them, and fire exactly one of the caller's callbacks per job — all from
+    worker threads, so callbacks must do their own locking:
+
+      * ``on_verified(job, lag_s, ck_s)``   — digests match; this is where
+        the caller journals the chunk (the custody rule);
+      * ``on_corrupt(job, actual, lag_s)``  — digest mismatch; the caller
+        quarantines and re-queues the chunk within its re-fetch budget;
+      * ``on_error(job, exc)``              — the read-back itself failed.
+
+    ``drain()`` blocks until every submitted job has a verdict; ``close()``
+    stops the workers (``abandon=True`` skips the join — crash simulation).
+    """
+
+    _SENTINEL = None
+
+    def __init__(
+        self,
+        *,
+        workers: int = 2,
+        pool: BufferPool | None = None,
+        on_verified: Callable[[VerifyJob, float, float], None],
+        on_corrupt: Callable[[VerifyJob, Digest, float], None],
+        on_error: Callable[[VerifyJob, BaseException], None] | None = None,
+    ):
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        self._pool = pool
+        self._on_verified = on_verified
+        self._on_corrupt = on_corrupt
+        self._on_error = on_error
+        self._q: "queue.Queue[VerifyJob | None]" = queue.Queue()
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        self._pending = 0
+        self._closed = False
+        self.stats = IntegrityStats()
+        self._threads = [
+            threading.Thread(target=self._worker, name=f"integrity-{i}", daemon=True)
+            for i in range(workers)
+        ]
+        for th in self._threads:
+            th.start()
+
+    # ------------------------------------------------------------------
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return self._pending
+
+    def submit(self, job: VerifyJob) -> bool:
+        """Enqueue a job; returns False if the engine is already closed.
+
+        A False return happens only in shutdown/kill races (a mover landing
+        its last write while the owner tears the engine down); the chunk
+        simply stays unverified and unjournaled — exactly what a crash at
+        that instant would leave behind.
+        """
+        with self._lock:
+            if self._closed:
+                return False
+            self._pending += 1
+        self._q.put(job)
+        return True
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Wait until every submitted job has a verdict. Returns False on
+        timeout (pending jobs remain)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._idle:
+            while self._pending > 0:
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._idle.wait(remaining if remaining is not None else 0.5)
+        return True
+
+    def close(self, *, abandon: bool = False) -> None:
+        """Stop the workers. Queued jobs still get verdicts before the stop
+        lands (the sentinel sits behind them) unless ``abandon`` — the crash
+        path — which leaves the daemon workers to die with the process."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        for _ in self._threads:
+            self._q.put(self._SENTINEL)
+        if not abandon:
+            for th in self._threads:
+                th.join()
+
+    # ------------------------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            job = self._q.get()
+            if job is self._SENTINEL:
+                return
+            try:
+                self._verify_one(job)
+            finally:
+                with self._idle:
+                    self._pending -= 1
+                    self._idle.notify_all()
+
+    def _verify_one(self, job: VerifyJob) -> None:
+        t0 = time.perf_counter()
+        try:
+            if job.expected is None:
+                # deferred source fingerprint: derive it off the mover path
+                # from the source's stable view (same bytes the mover wrote)
+                src_mv = job.source.read_view(job.offset, job.length)
+                try:
+                    job.expected = fingerprint_view(src_mv)
+                finally:
+                    if isinstance(src_mv, memoryview):
+                        src_mv.release()
+            # true zero-copy verify where the dest allows it: fingerprint
+            # the landed bytes in place (in-memory dests expose their image
+            # as a view; concurrent movers only touch disjoint offsets)
+            actual = read_back_fingerprint(
+                job.dest, job.offset, job.length, pool=self._pool)
+        except BaseException as e:  # noqa: BLE001 — routed to the caller
+            with self._lock:
+                self.stats.errors += 1
+            if self._on_error is not None:
+                self._on_error(job, e)
+            return
+        now = time.perf_counter()
+        lag = now - job.enqueued_s
+        ck = now - t0
+        ok = verify(job.expected, actual)
+        with self._lock:
+            self.stats.cksum_seconds += ck
+            self.stats.lag_seconds += lag
+            self.stats.max_lag_s = max(self.stats.max_lag_s, lag)
+            if ok:
+                self.stats.verified += 1
+            else:
+                self.stats.corrupt += 1
+        try:
+            if ok:
+                self._on_verified(job, lag, ck)
+            else:
+                self._on_corrupt(job, actual, lag)
+        except BaseException as e:  # noqa: BLE001 — a callback bug must not
+            with self._lock:        # silently kill a verifier thread
+                self.stats.errors += 1
+            if self._on_error is not None:
+                self._on_error(job, e)

@@ -45,6 +45,8 @@ Three implementations, one algebra:
 from __future__ import annotations
 
 import dataclasses
+import functools
+import threading
 from typing import Iterable, Sequence
 
 import numpy as np
@@ -54,9 +56,41 @@ BASES = (10007, 20011, 31337, 40009)   # four fixed evaluation points
 NBASES = len(BASES)
 _BLOCK = 1 << 16                 # host-side processing block (bytes)
 
+# Bigint-pow accounting: `Digest.merge`/`shifted`/`combine_at_offsets` run
+# O(chunks x hops) in fabric relays and service digest chains, and every one
+# of them needs r^len for the four bases. The LRU below makes repeated
+# same-length merges hit a table instead of calling CPython's bigint pow();
+# the counter exists so benchmarks/overlap.py can *gate* that (pow calls per
+# merge chain must stay >= 5x below the uncached 4-per-merge cost).
+_POW_STATS = {"bigint_pow_calls": 0}
+
+
+@functools.lru_cache(maxsize=1 << 16)
+def _pow_mod_cached(base: int, exp: int, mod: int) -> int:
+    _POW_STATS["bigint_pow_calls"] += 1
+    return pow(base, exp, mod)
+
 
 def _pow_mod(base: int, exp: int, mod: int = P) -> int:
-    return pow(int(base), int(exp), mod)
+    return _pow_mod_cached(int(base), int(exp), mod)
+
+
+@functools.lru_cache(maxsize=1 << 14)
+def _shift_vector(exp: int) -> tuple[int, ...]:
+    """(r^exp mod P for r in BASES) — the per-merge weight vector, cached so
+    a chain of equal-length merges costs four pow() calls total, not 4/merge."""
+    return tuple(_pow_mod_cached(r, int(exp), P) for r in BASES)
+
+
+def pow_call_count() -> int:
+    """Cumulative bigint pow() invocations (cache misses) this process."""
+    return _POW_STATS["bigint_pow_calls"]
+
+
+def clear_pow_caches() -> None:
+    """Drop the pow/shift LRUs (microbenchmarks measure from a cold start)."""
+    _pow_mod_cached.cache_clear()
+    _shift_vector.cache_clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,15 +111,16 @@ class Digest:
     # -- algebra ------------------------------------------------------------
     def merge(self, right: "Digest") -> "Digest":
         """Digest of the concatenation self || right."""
+        sv = _shift_vector(right.length)
         h = tuple(
-            (hl * _pow_mod(r, right.length) + hr) % P
-            for hl, hr, r in zip(self.h, right.h, BASES)
+            (hl * s + hr) % P for hl, hr, s in zip(self.h, right.h, sv)
         )
         return Digest(h, self.length + right.length)
 
     def shifted(self, tail_bytes: int) -> tuple[int, ...]:
         """Contribution of this chunk when `tail_bytes` bytes follow it."""
-        return tuple((hv * _pow_mod(r, tail_bytes)) % P for hv, r in zip(self.h, BASES))
+        sv = _shift_vector(tail_bytes)
+        return tuple((hv * s) % P for hv, s in zip(self.h, sv))
 
     def to_bytes(self) -> bytes:
         out = bytearray()
@@ -109,13 +144,25 @@ class Digest:
 EMPTY_DIGEST = Digest((0, 0, 0, 0), 0)
 
 
-def fingerprint_bytes(data: bytes | bytearray | memoryview | np.ndarray) -> Digest:
+def fingerprint_bytes(
+    data: bytes | bytearray | memoryview | np.ndarray,
+    *,
+    state: "Digest | None" = None,
+) -> Digest:
     """Exact digest of a raw byte stream (vectorized numpy host path).
 
     This is the checkpoint-path implementation: it must digest arbitrary-length
     byte strings at (multi-)100 MB/s so that per-chunk checksumming can overlap
     chunk I/O (paper Fig. 4) without itself becoming the bottleneck.
+
+    ``state`` is a running digest of everything streamed so far: passing it
+    returns ``state || data`` by the merge law, which is the single-pass data
+    plane's primitive — the source fingerprint accumulates granule-by-granule
+    *while* the chunk streams into the destination, instead of in a second
+    full pass over the chunk (``core.dataplane.stream_chunk``).
     """
+    if state is not None:
+        return state.merge(fingerprint_bytes(data))
     buf = np.frombuffer(data, dtype=np.uint8) if not isinstance(data, np.ndarray) else data
     if buf.dtype != np.uint8:
         buf = buf.view(np.uint8)
@@ -127,28 +174,64 @@ def fingerprint_bytes(data: bytes | bytearray | memoryview | np.ndarray) -> Dige
     # Weight tables as float64: every product (<= 255 * 46336) and every
     # 64 KiB block sum (<= 7.7e11) is exactly representable in f64 (< 2^53),
     # so we get BLAS-speed GEMMs with exact integer results.
-    weights = _host_weight_table(_BLOCK).astype(np.float64)  # (NBASES, _BLOCK)
-    r_blk = np.array([_pow_mod(r, _BLOCK) for r in BASES], dtype=np.int64)
+    weights = _host_weight_table_f64(_BLOCK)                 # (NBASES, _BLOCK)
     full, rem = divmod(n, _BLOCK)
     SUPER = 128  # blocks per GEMM: 8 MiB of input per call
-    conv = np.empty((SUPER, _BLOCK), dtype=np.float64)  # reused conversion buffer
+    # per-thread reusable conversion buffer: a fresh np.empty here would cost
+    # a 64 MB mmap + page-fault storm PER CALL, halving the digest rate in
+    # the small-chunk regime the data plane streams through
+    conv = _conv_buffer(min(SUPER, full) or 1)
     for s in range(0, full, SUPER):
         e = min(s + SUPER, full)
-        x = conv[: e - s]
-        np.copyto(x, buf[s * _BLOCK : e * _BLOCK].reshape(e - s, _BLOCK))
-        blks = (x @ weights.T).astype(np.int64) % P  # (e-s, NBASES)
-        for i in range(e - s):
-            h = (h * r_blk + blks[i]) % P
+        m = e - s
+        x = conv[:m]
+        np.copyto(x, buf[s * _BLOCK : e * _BLOCK].reshape(m, _BLOCK))
+        blks = (x @ weights.T).astype(np.int64) % P  # (m, NBASES)
+        # fold the m block digests in ONE reduction instead of a python
+        # recurrence: H = sum_j blks[j] * r^(B*(m-1-j)), terms < P^2 * m
+        # stay exact in int64 for m <= 128
+        h_super = (blks * _block_fold_powers(m)).sum(axis=0) % P
+        h = (h * np.asarray(_shift_vector(m * _BLOCK), dtype=np.int64)
+             + h_super) % P
     if rem:
         tail = buf[full * _BLOCK :].astype(np.float64)
-        r_tail = np.array([_pow_mod(r, rem) for r in BASES], dtype=np.int64)
         # weights[:, B-rem:] = [r^(rem-1) ... r^0] — descending weights for `rem` coeffs.
         blk = (weights[:, _BLOCK - rem :] @ tail).astype(np.int64) % P
-        h = (h * r_tail + blk) % P
+        h = (h * np.asarray(_shift_vector(rem), dtype=np.int64) + blk) % P
     return Digest(tuple(int(v) for v in h), n)
 
 
+@functools.lru_cache(maxsize=256)
+def _block_fold_powers(m: int) -> np.ndarray:
+    """(m, NBASES) table: [r^(_BLOCK*(m-1-j))]_j — the block-fold weights."""
+    out = np.empty((m, NBASES), dtype=np.int64)
+    for j in range(m):
+        out[j] = _shift_vector((m - 1 - j) * _BLOCK)
+    return out
+
+
 _WEIGHT_CACHE: dict[int, np.ndarray] = {}
+_WEIGHT_CACHE_F64: dict[int, np.ndarray] = {}
+_TLS = threading.local()
+
+
+def _conv_buffer(blocks: int) -> np.ndarray:
+    """Thread-local (blocks, _BLOCK) float64 conversion scratch, grown on
+    demand and reused across calls (page faults paid once per thread)."""
+    buf = getattr(_TLS, "conv", None)
+    if buf is None or buf.shape[0] < blocks:
+        buf = np.empty((blocks, _BLOCK), dtype=np.float64)
+        _TLS.conv = buf
+    return buf
+
+
+def _host_weight_table_f64(block: int) -> np.ndarray:
+    """float64 view of the weight table, cached (the GEMM operand)."""
+    tbl = _WEIGHT_CACHE_F64.get(block)
+    if tbl is None:
+        tbl = _host_weight_table(block).astype(np.float64)
+        _WEIGHT_CACHE_F64[block] = tbl
+    return tbl
 
 
 def _host_weight_table(block: int) -> np.ndarray:
@@ -165,6 +248,90 @@ def _host_weight_table(block: int) -> np.ndarray:
             tbl[b] = w
         _WEIGHT_CACHE[block] = tbl
     return tbl
+
+
+class RunningFingerprint:
+    """Incremental fingerprint accumulator (the merge law as a stream API).
+
+    ``update()`` folds the next granule into the running digest while the
+    granule is still cache-hot from the copy that produced it — this is how
+    the zero-copy data plane computes the source digest during streaming
+    instead of in a separate full pass. Merge cost is four table lookups per
+    granule (the ``_shift_vector`` LRU), so granule size can be small.
+    """
+
+    __slots__ = ("_digest",)
+
+    def __init__(self, start: Digest = EMPTY_DIGEST):
+        self._digest = start
+
+    def update(self, data: bytes | bytearray | memoryview | np.ndarray) -> None:
+        self._digest = self._digest.merge(fingerprint_bytes(data))
+
+    @property
+    def length(self) -> int:
+        return self._digest.length
+
+    def digest(self) -> Digest:
+        return self._digest
+
+
+def fingerprint_many(
+    chunks: Sequence[bytes | bytearray | memoryview | np.ndarray],
+) -> list[Digest]:
+    """Digests of many chunks in one numpy dispatch per equal-length group.
+
+    ``fingerprint_bytes`` pays fixed numpy dispatch + conversion overhead per
+    call, which dominates in the small-chunk regime (fabric relay granules,
+    re-planned tails at the tuner's floor). This batches: chunks of the same
+    length are stacked into one matrix and digested with ONE GEMM per 64 KiB
+    block column, amortizing the dispatch across the whole group. Equal
+    results to the per-chunk path, bit for bit.
+    """
+    bufs: list[np.ndarray] = []
+    for data in chunks:
+        b = np.frombuffer(data, dtype=np.uint8) if not isinstance(data, np.ndarray) else data
+        if b.dtype != np.uint8:
+            b = b.view(np.uint8)
+        bufs.append(b.reshape(-1))
+    out: list[Digest | None] = [None] * len(bufs)
+    groups: dict[int, list[int]] = {}
+    for i, b in enumerate(bufs):
+        groups.setdefault(b.size, []).append(i)
+    for n, idxs in groups.items():
+        if n == 0:
+            for i in idxs:
+                out[i] = EMPTY_DIGEST
+            continue
+        mat = np.stack([bufs[i] for i in idxs])          # (k, n)
+        h = _fingerprint_matrix(mat)                     # (k, NBASES)
+        for row, i in enumerate(idxs):
+            out[i] = Digest(tuple(int(v) for v in h[row]), n)
+    return out                                            # type: ignore[return-value]
+
+
+def _fingerprint_matrix(mat: np.ndarray) -> np.ndarray:
+    """Row-wise digests of a (k, n) uint8 matrix -> (k, NBASES) residues.
+
+    Same block recurrence as ``fingerprint_bytes``, vectorized over the k
+    rows: every 64 KiB block column is one (k, block) x (block, NBASES) GEMM,
+    so k small chunks cost ~one dispatch instead of k.
+    """
+    k, n = mat.shape
+    h = np.zeros((k, NBASES), dtype=np.int64)
+    weights = _host_weight_table_f64(_BLOCK)                 # (NBASES, _BLOCK)
+    r_blk = np.array([_pow_mod(r, _BLOCK) for r in BASES], dtype=np.int64)
+    full, rem = divmod(n, _BLOCK)
+    for s in range(full):
+        x = mat[:, s * _BLOCK : (s + 1) * _BLOCK].astype(np.float64)
+        blks = (x @ weights.T).astype(np.int64) % P          # (k, NBASES)
+        h = (h * r_blk[None, :] + blks) % P
+    if rem:
+        tail = mat[:, full * _BLOCK :].astype(np.float64)
+        r_tail = np.array([_pow_mod(r, rem) for r in BASES], dtype=np.int64)
+        blk = (tail @ weights[:, _BLOCK - rem :].T).astype(np.int64) % P
+        h = (h * r_tail[None, :] + blk) % P
+    return h
 
 
 def fingerprint_ndarray(arr: np.ndarray) -> Digest:

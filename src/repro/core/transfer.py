@@ -8,6 +8,12 @@ movement, verify end-to-end integrity chunk-by-chunk, journal completions for
 partial restart, retry failed chunks (chunk-granular fault recovery rather
 than whole-transfer restart), and optionally speculate on stragglers.
 
+The data plane has three modes (see ``PIPELINE_MODES`` below and
+``core.dataplane``): the classic serial path, a zero-copy single-pass
+streaming path, and a fully pipelined path where a decoupled integrity
+engine verifies chunks concurrently with subsequent moves — the journal
+record commits only after the deferred verification lands.
+
 It backs the checkpoint subsystem (repro.ckpt) — where source = device-host
 array bytes and destination = the checkpoint file — and the CPU-measurable
 overlap benchmarks (benchmarks/overlap.py).
@@ -24,6 +30,14 @@ from typing import Callable, Protocol
 import numpy as np
 
 from repro.core.chunker import Chunk, ChunkPlan, merge_regions, partition_regions, subtract_regions
+from repro.core.dataplane import (
+    DEFAULT_STREAM_GRANULE,
+    BufferPool,
+    IntegrityEngine,
+    VerifyJob,
+    read_back_fingerprint,
+    stream_chunk,
+)
 from repro.core.integrity import (
     Digest,
     combine_at_offsets,
@@ -33,6 +47,17 @@ from repro.core.integrity import (
 )
 from repro.core.journal import ChunkJournal, JournalRecord
 
+# data-plane pipeline modes (ChunkedTransfer(pipeline=...)):
+#   serial      — read -> digest -> write -> read-back -> digest -> verify,
+#                 all on the mover (the original engine, now zero-copy);
+#   single_pass — the source digest accumulates WHILE the chunk streams into
+#                 the destination (one data pass saved); verify still inline;
+#   pipelined   — single-pass streaming + verification deferred to the
+#                 integrity engine's checksum workers, off the mover path.
+#                 Custody rule: the journal record commits only after the
+#                 deferred verification lands.
+PIPELINE_MODES = ("serial", "single_pass", "pipelined")
+
 
 # ---------------------------------------------------------------------------
 # Source / destination abstractions
@@ -40,11 +65,18 @@ from repro.core.journal import ChunkJournal, JournalRecord
 class ByteSource(Protocol):
     nbytes: int
     def read(self, offset: int, length: int) -> bytes: ...
+    # optional zero-copy variant (``core.dataplane.read_into`` adapts):
+    #   def read_into(self, offset: int, view: memoryview) -> int: ...
 
 
 class ByteDest(Protocol):
     def write(self, offset: int, data: bytes) -> None: ...
     def read_back(self, offset: int, length: int) -> bytes: ...
+    # optional zero-copy variant (``core.dataplane.read_back_into`` adapts):
+    #   def read_back_into(self, offset: int, view: memoryview) -> int: ...
+
+
+_HAS_PREAD = hasattr(os, "pread") and hasattr(os, "pwrite")
 
 
 class BufferSource:
@@ -59,11 +91,28 @@ class BufferSource:
     def read(self, offset: int, length: int) -> bytes:
         return bytes(self._mv[offset : offset + length])
 
+    def read_into(self, offset: int, view: memoryview) -> int:
+        n = min(len(view), self.nbytes - offset)
+        view[:n] = self._mv[offset : offset + n]
+        return n
+
+    def read_view(self, offset: int, length: int) -> memoryview:
+        """Zero-copy window over the source image: streaming movers digest
+        and write straight from it — no staging buffer, no copy at all."""
+        return self._mv[offset : offset + length]
+
 
 class FileSource:
+    """Positional-read file source: one shared fd, ``os.pread`` per read, so
+    concurrent movers on the same file never serialize on a seek+read handle
+    (non-POSIX platforms fall back to per-thread handles)."""
+
     def __init__(self, path: str | os.PathLike):
         self.path = str(path)
         self.nbytes = os.path.getsize(self.path)
+        self._fd: int | None = None
+        if _HAS_PREAD:
+            self._fd = os.open(self.path, os.O_RDONLY)
         self._local = threading.local()
 
     def _fh(self):
@@ -74,14 +123,35 @@ class FileSource:
         return fh
 
     def read(self, offset: int, length: int) -> bytes:
+        if self._fd is not None:
+            return os.pread(self._fd, length, offset)
         fh = self._fh()
         fh.seek(offset)
         return fh.read(length)
 
+    def read_into(self, offset: int, view: memoryview) -> int:
+        if self._fd is not None:
+            return os.preadv(self._fd, [view], offset)
+        fh = self._fh()
+        fh.seek(offset)
+        return fh.readinto(view)
+
+    def close(self) -> None:
+        fd, self._fd = self._fd, None
+        if fd is not None:
+            os.close(fd)
+
+    def __del__(self):  # raw fds are not GC-closed like file objects
+        try:
+            self.close()
+        except Exception:  # noqa: BLE001 — interpreter teardown
+            pass
+
 
 class FileDest:
-    """Preallocated file destination; per-thread handles allow concurrent
-    positional writes of disjoint ranges (the ESTO analogue)."""
+    """Preallocated file destination; positional ``os.pwrite``/``os.pread``
+    on one shared fd allow concurrent writes + verification reads of disjoint
+    ranges with no per-op locking or seeking (the ESTO analogue)."""
 
     def __init__(self, path: str | os.PathLike, total_bytes: int):
         self.path = str(path)
@@ -92,6 +162,9 @@ class FileDest:
             with open(self.path, "wb") as fh:
                 if total_bytes:
                     fh.truncate(total_bytes)
+        self._fd: int | None = None
+        if _HAS_PREAD:
+            self._fd = os.open(self.path, os.O_RDWR)
         self._local = threading.local()
 
     def _fh(self):
@@ -102,15 +175,38 @@ class FileDest:
         return fh
 
     def write(self, offset: int, data: bytes) -> None:
+        if self._fd is not None:
+            os.pwrite(self._fd, data, offset)
+            return
         fh = self._fh()
         fh.seek(offset)
         fh.write(data)
         fh.flush()
 
     def read_back(self, offset: int, length: int) -> bytes:
+        if self._fd is not None:
+            return os.pread(self._fd, length, offset)
         fh = self._fh()
         fh.seek(offset)
         return fh.read(length)
+
+    def read_back_into(self, offset: int, view: memoryview) -> int:
+        if self._fd is not None:
+            return os.preadv(self._fd, [view], offset)
+        fh = self._fh()
+        fh.seek(offset)
+        return fh.readinto(view)
+
+    def close(self) -> None:
+        fd, self._fd = self._fd, None
+        if fd is not None:
+            os.close(fd)
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:  # noqa: BLE001 — interpreter teardown
+            pass
 
 
 class BufferDest:
@@ -122,6 +218,16 @@ class BufferDest:
 
     def read_back(self, offset: int, length: int) -> bytes:
         return bytes(self.buf[offset : offset + length])
+
+    def read_back_into(self, offset: int, view: memoryview) -> int:
+        n = min(len(view), len(self.buf) - offset)
+        view[:n] = memoryview(self.buf)[offset : offset + n]
+        return n
+
+    def read_back_view(self, offset: int, length: int) -> memoryview:
+        """Zero-copy window over the landed bytes (deferred verification
+        fingerprints the destination image in place)."""
+        return memoryview(self.buf)[offset : offset + length]
 
 
 # ---------------------------------------------------------------------------
@@ -176,8 +282,10 @@ class ChunkOutcome:
     attempts: int
     mover: int
     seconds: float                 # total time on the chunk, retries included
-    attempt_seconds: float = 0.0   # fault-excluded work time (tuner signal)
-    cksum_seconds: float = 0.0     # fingerprint + read-back verify time
+    attempt_seconds: float = 0.0   # fault-excluded MOVER work time (tuner signal)
+    cksum_seconds: float = 0.0     # checksum work on the mover path (source
+    #                                fingerprint; + read-back verify when inline)
+    cksum_lag_s: float = 0.0       # pipelined only: move-landed -> verified delay
     refetches: int = 0             # corruption-healing re-reads of this chunk
 
 
@@ -196,6 +304,8 @@ class TransferReport:
     quarantined: tuple[QuarantineRecord, ...] = ()
     replans: int = 0               # mid-flight tail re-partitions (autotuner)
     chunk_bytes_final: int = 0     # nominal tail chunk size at completion
+    pipeline: str = "serial"       # data-plane mode this transfer ran under
+    cksum_lag_s: float = 0.0       # pipelined: total verification lag (sum)
 
     @property
     def gbps(self) -> float:
@@ -222,6 +332,10 @@ class ChunkedTransfer:
         speculative_factor: float = 0.0,   # >0 enables straggler duplication
         tuner=None,                        # ChunkController-like: observe(sample)
         alignment: int = 1,                # re-plan cut-point alignment
+        pipeline: str = "serial",          # serial | single_pass | pipelined
+        integrity_workers: int = 2,        # checksum worker pool (pipelined)
+        stream_granule: int = DEFAULT_STREAM_GRANULE,
+        pool: BufferPool | None = None,    # shared buffer pool (else per-run)
     ):
         if source.nbytes != plan.total_bytes:
             raise ValueError(f"source has {source.nbytes} bytes, plan expects {plan.total_bytes}")
@@ -231,8 +345,23 @@ class ChunkedTransfer:
                 "mutually exclusive: a speculated twin of a re-partitioned "
                 "chunk would overlap the fresh tail chunks"
             )
+        if pipeline not in PIPELINE_MODES:
+            raise ValueError(f"pipeline must be one of {PIPELINE_MODES}, got {pipeline!r}")
+        if pipeline == "pipelined" and speculative_factor > 0:
+            raise ValueError(
+                "speculative duplication forces serial verification: a "
+                "speculated twin racing a deferred verify could journal a "
+                "chunk the verifier has not vouched for"
+            )
+        if pipeline == "pipelined" and not integrity:
+            pipeline = "single_pass"    # nothing to defer without read-back
+        if integrity_workers < 1:
+            raise ValueError("integrity_workers must be >= 1")
         self.source, self.dest, self.plan = source, dest, plan
         self.integrity = integrity
+        self.pipeline = pipeline
+        self.integrity_workers = integrity_workers
+        self.stream_granule = max(1, int(stream_granule))
         self.journal = journal
         self.max_retries = max_retries
         self.max_refetches = max_refetches
@@ -265,8 +394,61 @@ class ChunkedTransfer:
         self._chunk_bytes_now = plan.chunk_bytes or plan.total_bytes
         self._next_index = plan.n_chunks
         self._replans = 0
+        # zero-copy buffer pool: movers stream through granule-sized views,
+        # serial verification and the integrity engine read back into
+        # chunk-sized ones. Oversize requests (jumbo re-planned tails) fall
+        # through to one-shot allocations inside the pool.
+        if pool is None:
+            buffer_bytes = max(
+                self.stream_granule, min(self._chunk_bytes_now or 1, 64 * 1024 * 1024)
+            )
+            pool = BufferPool(
+                buffer_bytes, capacity=plan.movers + integrity_workers + 2
+            )
+        self._pool = pool
+        # pipelined state: the engine is armed per run(); movers enqueue
+        # VerifyJobs, the callbacks below commit custody / quarantine.
+        self._engine: IntegrityEngine | None = None
+        self._queue: "queue.Queue[Chunk] | None" = None
+        self._verify_refetches: dict[int, int] = {}
 
     # -- single chunk (one ERET/ESTO pair) --------------------------------
+    def _copy_chunk(self, chunk: Chunk) -> tuple[Digest, float]:
+        """One read -> fingerprint -> write pass over the chunk.
+
+        Serial mode is the CLASSIC engine byte path, kept verbatim — whole-
+        chunk ``bytes()`` read, full digest pass, write — it is the baseline
+        the streaming modes are measured against. Streaming modes fingerprint
+        granule-by-granule out of zero-copy views (or pooled buffers) while
+        each granule is cache-hot, sharing the single pass with the
+        destination write. Returns ``(source_digest, cksum_seconds)``.
+        """
+        if self.pipeline == "serial":
+            data = self.source.read(chunk.offset, chunk.length)
+            if len(data) != chunk.length:
+                raise IOError(f"short read at {chunk.offset}: {len(data)}/{chunk.length}")
+            # Source-side fingerprint while the data is in hand (the
+            # paper's "modest cost incurred when first reading the file").
+            t_ck = time.perf_counter()
+            src_digest = fingerprint_bytes(data)
+            cksum_s = time.perf_counter() - t_ck
+            self.dest.write(chunk.offset, data)
+            return src_digest, cksum_s
+        # pipelined movers on view-capable sources are pure wire: the
+        # integrity engine re-derives the source digest from the same view
+        # off the mover path (tentpole rule: source fingerprinting runs
+        # concurrently with subsequent chunk moves)
+        defer_src = (
+            self.pipeline == "pipelined"
+            and self._engine is not None
+            and hasattr(self.source, "read_view")
+        )
+        return stream_chunk(
+            self.source, self.dest, chunk.offset, chunk.length,
+            pool=self._pool, granule=self.stream_granule,
+            digest=not defer_src,
+        )
+
     def _move_chunk(self, chunk: Chunk, mover: int) -> ChunkOutcome:
         """Move one chunk with per-failure-class recovery budgets.
 
@@ -290,19 +472,21 @@ class ChunkedTransfer:
             try:
                 if self.fault_injector is not None:
                     self.fault_injector(chunk, attempts)
-                data = self.source.read(chunk.offset, chunk.length)
-                if len(data) != chunk.length:
-                    raise IOError(f"short read at {chunk.offset}: {len(data)}/{chunk.length}")
-                # Source-side fingerprint while the data is in hand (the
-                # paper's "modest cost incurred when first reading the file").
-                t_ck = time.perf_counter()
-                src_digest = fingerprint_bytes(data)
-                cksum_s = time.perf_counter() - t_ck
-                self.dest.write(chunk.offset, data)
-                if self.integrity:
+                src_digest, cksum_s = self._copy_chunk(chunk)
+                if self.integrity and self.pipeline == "serial":
+                    # classic inline verification, kept verbatim
                     t_ck = time.perf_counter()
                     back = self.dest.read_back(chunk.offset, chunk.length)
                     dst_digest = fingerprint_bytes(back)
+                    cksum_s += time.perf_counter() - t_ck
+                    if not verify(src_digest, dst_digest):
+                        raise _ChunkCorruption(src_digest, dst_digest)
+                elif self.integrity and self.pipeline == "single_pass":
+                    # inline verification through the zero-copy read-back path
+                    t_ck = time.perf_counter()
+                    dst_digest = read_back_fingerprint(
+                        self.dest, chunk.offset, chunk.length,
+                        pool=self._pool, granule=self.stream_granule)
                     cksum_s += time.perf_counter() - t_ck
                     if not verify(src_digest, dst_digest):
                         raise _ChunkCorruption(src_digest, dst_digest)
@@ -379,47 +563,118 @@ class ChunkedTransfer:
                     with self._lock:
                         self._errors.append(e)
                     return
-                with self._lock:
-                    first = chunk.index not in self._outcomes
-                    if first:
-                        self._outcomes[chunk.index] = out
-                        if len(self._outcomes) >= self._target:
-                            self._cond.notify_all()
-                if first and self.journal is not None:
-                    t_j = time.perf_counter()
-                    try:
-                        self.journal.append(
-                            JournalRecord(chunk.index, chunk.offset, chunk.length,
-                                          out.digest.hexdigest())
-                        )
-                    except Exception as e:  # noqa: BLE001 — dead journal:
-                        with self._lock:    # fail fast, don't churn movers
-                            self._errors.append(RuntimeError(
-                                f"journal append failed for chunk {chunk.index}: {e}"
-                            ))
-                        return
-                    # the journal fsync is a real per-chunk control-plane
-                    # cost: the tuner must see it, or it will shrink chunks
-                    # into a journal-bound regime on slow filesystems
-                    j_secs = time.perf_counter() - t_j
-                    out.seconds += j_secs
-                    out.attempt_seconds += j_secs
-                if first and self.tuner is not None:
-                    try:
-                        with self._tune_lock:
-                            new = self.tuner.observe_outcome(out)
-                            if new is not None and new != self._chunk_bytes_now:
-                                self._replan_queued(q, new)
-                    except Exception as e:  # noqa: BLE001 — controller bug
-                        with self._lock:    # must fail the transfer, not hang it
-                            self._errors.append(RuntimeError(
-                                f"autotuner failed after chunk {chunk.index}: {e}"
-                            ))
-                        return
+                if self._engine is not None:
+                    # pipelined: the move landed; hand verification to the
+                    # integrity engine and pull the next chunk NOW. Custody
+                    # (outcome + journal) commits in _on_verified only; a
+                    # corrupt landing re-queues the chunk in _on_corrupt.
+                    self._engine.submit(VerifyJob(
+                        key=chunk, offset=chunk.offset, length=chunk.length,
+                        expected=out.digest, dest=self.dest,
+                        enqueued_s=time.perf_counter(), payload=out,
+                        source=self.source if out.digest is None else None,
+                    ))
+                    continue
+                if not self._commit_outcome(chunk, out, q):
+                    return
         finally:
             with self._cond:
                 self._live_workers -= 1
                 self._cond.notify_all()    # wake the supervisor on death/error
+
+    # -- custody commit (serial workers AND integrity-engine callbacks) ----
+    def _commit_outcome(self, chunk: Chunk, out: ChunkOutcome,
+                        q: "queue.Queue[Chunk]") -> bool:
+        """Record one verified chunk: outcome map, journal custody, tuner
+        feed. Returns False when a hard error was recorded instead."""
+        with self._lock:
+            first = chunk.index not in self._outcomes
+            if first:
+                self._outcomes[chunk.index] = out
+                if len(self._outcomes) >= self._target:
+                    self._cond.notify_all()
+        if first and self.journal is not None:
+            t_j = time.perf_counter()
+            try:
+                self.journal.append(
+                    JournalRecord(chunk.index, chunk.offset, chunk.length,
+                                  out.digest.hexdigest())
+                )
+            except Exception as e:  # noqa: BLE001 — dead journal:
+                with self._lock:    # fail fast, don't churn movers
+                    self._errors.append(RuntimeError(
+                        f"journal append failed for chunk {chunk.index}: {e}"
+                    ))
+                    self._cond.notify_all()
+                return False
+            # the journal fsync is a real per-chunk control-plane
+            # cost: the tuner must see it, or it will shrink chunks
+            # into a journal-bound regime on slow filesystems
+            j_secs = time.perf_counter() - t_j
+            out.seconds += j_secs
+            out.attempt_seconds += j_secs
+        if first and self.tuner is not None:
+            try:
+                with self._tune_lock:
+                    new = self.tuner.observe_outcome(out)
+                    if new is not None and new != self._chunk_bytes_now:
+                        self._replan_queued(q, new)
+            except Exception as e:  # noqa: BLE001 — controller bug
+                with self._lock:    # must fail the transfer, not hang it
+                    self._errors.append(RuntimeError(
+                        f"autotuner failed after chunk {chunk.index}: {e}"
+                    ))
+                    self._cond.notify_all()
+                return False
+        return True
+
+    # -- integrity-engine callbacks (pipelined mode, verifier threads) -----
+    def _on_verified(self, job: VerifyJob, lag_s: float, ck_s: float) -> None:
+        del ck_s          # verify work is off the mover path; lag carries it
+        chunk: Chunk = job.key
+        out: ChunkOutcome = job.payload
+        out.cksum_lag_s = lag_s
+        if out.digest is None:
+            out.digest = job.expected      # deferred source fingerprint
+        with self._lock:
+            out.refetches += self._verify_refetches.get(chunk.index, 0)
+        self._commit_outcome(chunk, out, self._queue)
+
+    def _on_corrupt(self, job: VerifyJob, actual: Digest, lag_s: float) -> None:
+        """A lagging verifier caught a corrupt landing: quarantine the chunk
+        and re-queue it for a source re-fetch (same budget as inline)."""
+        del lag_s
+        chunk: Chunk = job.key
+        out: ChunkOutcome = job.payload
+        detail = describe_mismatch(job.expected, actual)
+        with self._lock:
+            self._retries += 1
+            self._refetches += 1
+            n = self._verify_refetches.get(chunk.index, 0) + 1
+            self._verify_refetches[chunk.index] = n
+            self._quarantined.append(QuarantineRecord(
+                chunk.index, chunk.offset, chunk.length, out.attempts,
+                job.expected.hexdigest(), actual.hexdigest(), detail,
+            ))
+            over = n > self.max_refetches
+            if over:
+                self._errors.append(IntegrityError(
+                    f"chunk {chunk.index} digest mismatch persisted through "
+                    f"{self.max_refetches} re-fetches (offset={chunk.offset}, "
+                    f"len={chunk.length}): {detail}"
+                ))
+                self._cond.notify_all()
+        if not over:
+            self._queue.put(chunk)     # re-move from source (quarantine heal)
+
+    def _on_verify_error(self, job: VerifyJob, exc: BaseException) -> None:
+        chunk: Chunk = job.key
+        with self._lock:
+            self._errors.append(RuntimeError(
+                f"deferred verification read-back failed for chunk "
+                f"{chunk.index} (offset={chunk.offset}): {exc}"
+            ))
+            self._cond.notify_all()
 
     # -- mid-flight tail re-planning (the autotuner's actuator) ------------
     def _replan_queued(self, q: "queue.Queue[Chunk]", new_bytes: int) -> int:
@@ -488,6 +743,13 @@ class ChunkedTransfer:
         for c in pending:
             q.put(c)
         self._target = len(pending)
+        self._queue = q
+        if self.pipeline == "pipelined" and self.integrity and pending:
+            self._engine = IntegrityEngine(
+                workers=self.integrity_workers, pool=self._pool,
+                on_verified=self._on_verified, on_corrupt=self._on_corrupt,
+                on_error=self._on_verify_error,
+            )
         # warm start: a SimTuner-seeded controller may already disagree with
         # the static plan — re-cut the whole tail before the first byte moves
         if self.tuner is not None and pending:
@@ -538,6 +800,11 @@ class ChunkedTransfer:
             next_mover += 1
         for th in threads:
             th.join()
+        if self._engine is not None:
+            # fault-free exits leave an empty digest queue (movers only stop
+            # once every outcome landed); on error, let queued jobs get their
+            # verdicts — their quarantine records are part of the story
+            self._engine.close(abandon=False)
         if self._errors:
             raise self._errors[0]
 
@@ -561,6 +828,8 @@ class ChunkedTransfer:
             quarantined=tuple(self._quarantined),
             replans=self._replans,
             chunk_bytes_final=self._chunk_bytes_now,
+            pipeline=self.pipeline,
+            cksum_lag_s=sum(o.cksum_lag_s for o in self._outcomes.values()),
         )
 
     def _speculate(self, q: "queue.Queue[Chunk]", movers: int, skip: set[int]) -> None:

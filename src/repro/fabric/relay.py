@@ -39,6 +39,7 @@ from repro.core.integrity import (
     Digest,
     combine_at_offsets,
     fingerprint_bytes,
+    fingerprint_many,
     merge_all,
     verify,
 )
@@ -451,15 +452,22 @@ class RelayTransfer:
                                     hop.report.retries += 1
                                 time.sleep(self.retry_backoff_s
                                            * (2 ** min(sub_generic - 1, 6)))
-                        d = fingerprint_bytes(data)
                         hop.dest.write(pos, data)
                         if self.integrity:
+                            # batched digest path: the granule and its
+                            # read-back are fingerprinted in ONE numpy
+                            # dispatch (equal lengths share a GEMM) — the
+                            # small-granule regime a degraded hop shrinks
+                            # into is exactly where per-call overhead bites
                             back = hop.dest.read_back(pos, take)
-                            if not verify(d, fingerprint_bytes(back)):
+                            d, d_back = fingerprint_many([data, back])
+                            if not verify(d, d_back):
                                 raise IntegrityError(
                                     f"hop {hop.idx} read-back digest mismatch "
                                     f"({hop.u}->{hop.v} @ {pos})"
                                 )
+                        else:
+                            d = fingerprint_bytes(data)
                         parts.append(d)
                         pos += take
                     digest = merge_all(parts)

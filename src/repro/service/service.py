@@ -48,6 +48,13 @@ from repro.core.integrity import (
     fingerprint_bytes,
     verify,
 )
+from repro.core.dataplane import (
+    DEFAULT_STREAM_GRANULE,
+    BufferPool,
+    IntegrityEngine,
+    VerifyJob,
+    stream_chunk,
+)
 from repro.core.journal import ChunkJournal, JournalRecord
 from repro.core.scheduler import TransferRequest
 from repro.core.simulator import ALCF, DEFAULT_LINK, NERSC, LinkConfig, SiteConfig
@@ -118,6 +125,10 @@ class ServiceConfig:
     tune_max_chunk: int = 64 * MiB   # controller upper bound for tuned tasks
     tune_epoch_chunks: int = 4       # chunks per controller decision epoch
     tune_seed: str = "none"          # "sim" warm-starts from the simulator
+    # ---- data plane (zero-copy pipelined movement + integrity) -----------
+    pipeline: str = "serial"         # serial | single_pass | pipelined
+    integrity_workers: int = 2       # per-task checksum workers (pipelined)
+    stream_granule: int = DEFAULT_STREAM_GRANULE
 
     def __post_init__(self):
         if self.max_concurrent_tasks > self.mover_budget:
@@ -130,6 +141,13 @@ class ServiceConfig:
             raise ValueError(f"tuning must be 'static' or 'auto', got {self.tuning!r}")
         if self.tune_seed not in ("none", "sim"):
             raise ValueError(f"tune_seed must be 'none' or 'sim', got {self.tune_seed!r}")
+        if self.pipeline not in ("serial", "single_pass", "pipelined"):
+            raise ValueError(
+                f"pipeline must be 'serial', 'single_pass' or 'pipelined', "
+                f"got {self.pipeline!r}"
+            )
+        if self.integrity_workers < 1:
+            raise ValueError("integrity_workers must be >= 1")
 
 
 class _Task:
@@ -162,6 +180,12 @@ class _Task:
         self.mover_deaths = 0
         self.resumed_chunks = 0
         self.item_reports: tuple[ItemReport, ...] = ()
+        # data-plane accounting + pipelined-verification state
+        self.cksum_s = 0.0
+        self.cksum_lag_s = 0.0
+        self.pool: BufferPool | None = None
+        self.engine: IntegrityEngine | None = None
+        self.verify_refetches: dict[int, int] = {}   # per-gidx deferred heals
 
         # Deterministic chunk plans (same across service incarnations): the
         # journal's global chunk ids must mean the same byte ranges forever.
@@ -653,8 +677,37 @@ class TransferService:
                     t.chunks_total = len(recs) + n_work
             if t.tuning == "auto":
                 self._arm_tuner(t, work)
+            if self.config.pipeline != "serial":
+                t.pool = BufferPool(
+                    max(self.config.stream_granule,
+                        min(t.chunk_bytes_now or 1, 64 * MiB)),
+                    capacity=(self.config.mover_budget
+                              + self.config.integrity_workers + 2),
+                )
+            if self.config.pipeline == "pipelined" and self.config.integrity:
+                # decoupled integrity engine: movers enqueue, checksum
+                # workers verify concurrently with later chunk moves. The
+                # custody rule lives in _verify_pass: the journal record
+                # commits only once the deferred verification lands.
+                t.engine = IntegrityEngine(
+                    workers=self.config.integrity_workers, pool=t.pool,
+                    on_verified=lambda job, lag, ck: self._verify_pass(
+                        t, work, journal, jlock, job, lag),
+                    on_corrupt=lambda job, actual, lag: self._verify_fail(
+                        t, work, job),
+                    on_error=lambda job, exc: self._verify_error(t, job, exc),
+                )
 
             reason = self._drive_workers(t, work, journal, jlock, n_work)
+            if t.engine is not None:
+                if reason is None:
+                    t.engine.close(abandon=True)   # kill(): crash mid-flight
+                else:
+                    # drain before finalizing: a paused/canceled/failed task
+                    # still journals every chunk its verifiers vouch for, so
+                    # a resume re-moves only genuinely unverified chunks
+                    t.engine.drain()
+                    t.engine.close()
             if reason is None:          # killed: vanish without a trace
                 return
             if reason == tk.SUCCEEDED:
@@ -744,7 +797,7 @@ class TransferService:
             self._replan_task(t, work, target0, rate_Bps=0.0)
 
     def _replan_task(self, t: _Task, work, new_bytes: int, *,
-                     rate_Bps: float = 0.0) -> int:
+                     rate_Bps: float = 0.0, cksum_lag_s: float = 0.0) -> int:
         """Re-partition the task's un-started tail at ``new_bytes``.
 
         Drains the work queue (chunks never handed to a mover — journaled
@@ -783,6 +836,7 @@ class TransferService:
             old_chunk_bytes=old, chunk_bytes=int(new_bytes),
             drained=len(drained), requeued=len(entries),
             rate_Bps=round(rate_Bps, 3),
+            cksum_lag_s=round(cksum_lag_s, 6),
         )
         return len(drained)
 
@@ -794,7 +848,8 @@ class TransferService:
             new = ctrl.observe(sample)
             cur = t.chunk_bytes_now
         if new is not None and new != cur:
-            self._replan_task(t, work, new, rate_Bps=sample.rate_Bps)
+            self._replan_task(t, work, new, rate_Bps=sample.rate_Bps,
+                              cksum_lag_s=sample.cksum_lag_s)
 
     def _worker(self, t: _Task, work, journal, jlock) -> None:
         try:
@@ -845,50 +900,126 @@ class TransferService:
                         )
                         t.fault = self._fault_report(t, classify_fault(e), item_idx, chunk, e)
                     return
-                t_j = time.perf_counter()
-                try:
-                    with jlock:
-                        journal.append(JournalRecord(
-                            gidx, chunk.offset, chunk.length, digest.hexdigest()
-                        ))
-                except Exception as e:  # noqa: BLE001
-                    if self._kill_evt.is_set():
-                        return          # kill() closed the journal under us
-                    # a dead journal (ENOSPC, pulled mount) must FAIL the
-                    # task with a report, not strand it ACTIVE: completions
-                    # that can't be made durable are not completions
-                    with t.lock:
-                        t.failed_error = (
-                            f"journal append failed for item {item_idx} chunk "
-                            f"{chunk.index}: {e}"
-                        )
-                        t.fault = self._fault_report(t, "io", item_idx, chunk, e)
+                if t.engine is not None:
+                    # pipelined: the move landed; enqueue the deferred
+                    # verification and pull the next chunk NOW. Journal +
+                    # progress commit in _verify_pass (the custody rule).
+                    t.engine.submit(VerifyJob(
+                        key=gidx, offset=chunk.offset, length=chunk.length,
+                        expected=digest, dest=self._dest(t, item_idx),
+                        enqueued_s=time.perf_counter(),
+                        payload=(gidx, item_idx, chunk, sample),
+                    ))
+                    continue
+                if not self._commit_chunk(t, work, journal, jlock,
+                                          gidx, item_idx, chunk, digest, sample):
                     return
-                with self._lock:
-                    self.moved_chunks += 1
-                with t.lock:
-                    t.chunks_done += 1
-                    t.bytes_done += chunk.length
-                    done, total = t.chunks_done, t.chunks_total
-                self.events.emit(
-                    ev.PROGRESS, t.spec.task_id, t.spec.tenant,
-                    chunks_done=done, chunks_total=total,
-                )
-                if t.controller is not None:
-                    # fold the journal fsync into the sample: it is a real
-                    # per-chunk control-plane cost the tuner must weigh
-                    j_secs = time.perf_counter() - t_j
-                    sample = dataclasses.replace(
-                        sample, seconds=sample.seconds + j_secs,
-                        attempt_seconds=sample.attempt_seconds + j_secs,
-                    )
-                    self._feed_tuner(t, work, chunk, sample)
-                if done >= total:
-                    with self._cond:
-                        self._cond.notify_all()
         finally:
             with t.lock:
                 t.n_workers -= 1
+
+    def _commit_chunk(self, t: _Task, work, journal, jlock, gidx: int,
+                      item_idx: int, chunk, digest, sample: ChunkSample) -> bool:
+        """Make one verified chunk durable and visible: journal custody,
+        counters, PROGRESS event, tuner feed. Shared by the serial mover
+        path and the integrity engine's verdict callbacks; returns False
+        when the task was failed instead."""
+        t_j = time.perf_counter()
+        try:
+            with jlock:
+                journal.append(JournalRecord(
+                    gidx, chunk.offset, chunk.length, digest.hexdigest()
+                ))
+        except Exception as e:  # noqa: BLE001
+            if self._kill_evt.is_set():
+                return False    # kill() closed the journal under us
+            # a dead journal (ENOSPC, pulled mount) must FAIL the
+            # task with a report, not strand it ACTIVE: completions
+            # that can't be made durable are not completions
+            with t.lock:
+                t.failed_error = (
+                    f"journal append failed for item {item_idx} chunk "
+                    f"{chunk.index}: {e}"
+                )
+                t.fault = self._fault_report(t, "io", item_idx, chunk, e)
+            return False
+        with self._lock:
+            self.moved_chunks += 1
+        with t.lock:
+            t.chunks_done += 1
+            t.bytes_done += chunk.length
+            t.cksum_s += sample.cksum_seconds
+            t.cksum_lag_s += sample.cksum_lag_s
+            done, total = t.chunks_done, t.chunks_total
+        self.events.emit(
+            ev.PROGRESS, t.spec.task_id, t.spec.tenant,
+            chunks_done=done, chunks_total=total,
+        )
+        if t.controller is not None:
+            # fold the journal fsync into the sample: it is a real
+            # per-chunk control-plane cost the tuner must weigh
+            j_secs = time.perf_counter() - t_j
+            sample = dataclasses.replace(
+                sample, seconds=sample.seconds + j_secs,
+                attempt_seconds=sample.attempt_seconds + j_secs,
+            )
+            self._feed_tuner(t, work, chunk, sample)
+        if done >= total:
+            with self._cond:
+                self._cond.notify_all()
+        return True
+
+    # ------------------------------------------------------------------
+    # integrity-engine verdicts (pipelined data plane, verifier threads)
+    # ------------------------------------------------------------------
+    def _verify_pass(self, t: _Task, work, journal, jlock,
+                     job: VerifyJob, lag_s: float) -> None:
+        gidx, item_idx, chunk, sample = job.payload
+        sample = dataclasses.replace(sample, cksum_lag_s=lag_s)
+        self._commit_chunk(t, work, journal, jlock,
+                           gidx, item_idx, chunk, job.expected, sample)
+
+    def _verify_fail(self, t: _Task, work, job: VerifyJob) -> None:
+        """A lagging verifier caught a corrupt landing: quarantine + re-queue
+        the chunk for a source re-fetch, on the same re-fetch budget the
+        inline path uses; the budget exhausting fails the task with a
+        structured corruption report."""
+        gidx, item_idx, chunk, _sample = job.payload
+        with t.lock:
+            t.retries += 1
+            t.refetches += 1
+            n = t.verify_refetches.get(gidx, 0) + 1
+            t.verify_refetches[gidx] = n
+            over = n > self.config.max_refetches
+            if over:
+                exc = IntegrityError(
+                    f"deferred read-back digest mismatch persisted through "
+                    f"{self.config.max_refetches} re-fetches "
+                    f"(item {item_idx} @ {chunk.offset})"
+                )
+                t.failed_error = (
+                    f"item {item_idx} chunk {chunk.index} "
+                    f"(offset={chunk.offset}): {exc}"
+                )
+                t.fault = self._fault_report(t, "corruption", item_idx, chunk, exc)
+        self.events.emit(
+            ev.FAULT, t.spec.task_id, t.spec.tenant,
+            fault="corruption", item=item_idx, chunk=chunk.index,
+            deferred=True, fatal=over,
+        )
+        if not over:
+            work.put((gidx, item_idx, chunk))
+
+    def _verify_error(self, t: _Task, job: VerifyJob, exc: BaseException) -> None:
+        gidx, item_idx, chunk, _sample = job.payload
+        if self._kill_evt.is_set():
+            return                  # kill() tore the endpoints down under us
+        with t.lock:
+            t.failed_error = (
+                f"deferred verification read-back failed for item {item_idx} "
+                f"chunk {chunk.index}: {exc}"
+            )
+            t.fault = self._fault_report(t, classify_fault(exc), item_idx, chunk, exc)
 
     def _fault_report(self, t: _Task, kind: str, item_idx: int, chunk,
                       exc: BaseException) -> FaultReport:
@@ -927,16 +1058,25 @@ class TransferService:
             try:
                 if self._fault_injector is not None:
                     self._fault_injector(t.spec.task_id, item_idx, chunk, attempts)
-                data = src.read(chunk.offset, chunk.length)
-                if len(data) != chunk.length:
-                    raise IOError(
-                        f"short read at {chunk.offset}: {len(data)}/{chunk.length}"
+                if self.config.pipeline == "serial" or t.pool is None:
+                    data = src.read(chunk.offset, chunk.length)
+                    if len(data) != chunk.length:
+                        raise IOError(
+                            f"short read at {chunk.offset}: {len(data)}/{chunk.length}"
+                        )
+                    t_ck = time.perf_counter()
+                    digest = fingerprint_bytes(data)
+                    cksum_s = time.perf_counter() - t_ck
+                    dst.write(chunk.offset, data)
+                else:
+                    # single-pass streaming: the source fingerprint
+                    # accumulates while each granule streams into the
+                    # destination through a pooled zero-copy buffer
+                    digest, cksum_s = stream_chunk(
+                        src, dst, chunk.offset, chunk.length,
+                        pool=t.pool, granule=self.config.stream_granule,
                     )
-                t_ck = time.perf_counter()
-                digest = fingerprint_bytes(data)
-                cksum_s = time.perf_counter() - t_ck
-                dst.write(chunk.offset, data)
-                if self.config.integrity:
+                if self.config.integrity and self.config.pipeline != "pipelined":
                     t_ck = time.perf_counter()
                     back = dst.read_back(chunk.offset, chunk.length)
                     ok = verify(digest, fingerprint_bytes(back))
@@ -1133,4 +1273,7 @@ class TransferService:
                 tuning=t.tuning,
                 replans=t.replans,
                 chunk_bytes_current=t.chunk_bytes_now,
+                pipeline=self.config.pipeline,
+                cksum_seconds=round(t.cksum_s, 6),
+                cksum_lag_s=round(t.cksum_lag_s, 6),
             )

@@ -215,6 +215,11 @@ class TaskStatus:
     tuning: str = "static"    # effective policy this task ran under
     replans: int = 0          # mid-flight tail re-partitions
     chunk_bytes_current: int | None = None   # nominal tail chunk size now
+    # data-plane accounting (pipelined integrity engine visibility):
+    pipeline: str = "serial"  # serial | single_pass | pipelined
+    cksum_seconds: float = 0.0   # checksum work on the mover path (cumulative)
+    cksum_lag_s: float = 0.0     # deferred-verification lag (cumulative; the
+    #                              distance integrity ran behind movement)
 
     @property
     def done(self) -> bool:

@@ -148,7 +148,9 @@ class ChunkController:
         return self.observe(ChunkSample(
             offset=c.offset, length=c.length, seconds=out.seconds,
             attempt_seconds=out.attempt_seconds,
-            cksum_seconds=out.cksum_seconds, attempts=out.attempts,
+            cksum_seconds=out.cksum_seconds,
+            cksum_lag_s=getattr(out, "cksum_lag_s", 0.0),
+            attempts=out.attempts,
             refetches=out.refetches, mover=out.mover,
         ))
 
@@ -175,7 +177,15 @@ class ChunkController:
         rate = TransferProbe.epoch_rate(self._epoch_samples)
         work_s = sum(s.attempt_seconds for s in self._epoch_samples)
         ck_s = sum(s.cksum_seconds for s in self._epoch_samples)
-        ck_frac = ck_s / work_s if work_s > 0 else 0.0
+        # pipelined data plane: verification runs OFF the mover path, so its
+        # cost shows up as per-chunk lag, not mover checksum time. Lag is
+        # sampled separately from mover time (it must not read as
+        # congestion), but it IS checksum pressure: fold it into the
+        # checksum-dominance fraction so starved verifiers still steer the
+        # MD direction toward larger (amortizing) chunks.
+        lag_s = sum(s.cksum_lag_s for s in self._epoch_samples)
+        denom = work_s + lag_s
+        ck_frac = (ck_s + lag_s) / denom if denom > 0 else 0.0
         self._epoch_samples = []
         self._epoch += 1
         return self._update(rate, ck_frac)

@@ -36,7 +36,13 @@ class ChunkSample:
     attempt_seconds: float   # fault-excluded work time: successful attempt +
     #                          generic (congestion-like) retries; corruption
     #                          re-fetch and outage time excluded
-    cksum_seconds: float = 0.0   # fingerprint + read-back verify time
+    cksum_seconds: float = 0.0   # checksum work ON the mover path (source
+    #                              fingerprint; + read-back verify when inline)
+    cksum_lag_s: float = 0.0     # pipelined data plane: move-landed ->
+    #                              verified delay (checksum work happening
+    #                              OFF the mover path; sampled separately so
+    #                              deferred verification never masquerades as
+    #                              mover congestion)
     attempts: int = 1
     refetches: int = 0       # corruption-healing source re-reads
     mover: int = 0
@@ -63,6 +69,7 @@ class TransferProbe:
         self.move_seconds = 0.0
         self.attempt_seconds = 0.0
         self.cksum_seconds = 0.0
+        self.cksum_lag_seconds = 0.0
 
     def add(self, sample: ChunkSample) -> None:
         self.window.append(sample)
@@ -73,6 +80,7 @@ class TransferProbe:
         self.move_seconds += sample.seconds
         self.attempt_seconds += sample.attempt_seconds
         self.cksum_seconds += sample.cksum_seconds
+        self.cksum_lag_seconds += sample.cksum_lag_s
 
     # -- control signals ----------------------------------------------------
     @property
@@ -86,6 +94,16 @@ class TransferProbe:
         """Mean per-chunk checksum (fingerprint + read-back) latency."""
         n = len(self.window)
         return sum(s.cksum_seconds for s in self.window) / n if n else 0.0
+
+    @property
+    def cksum_lag_latency_s(self) -> float:
+        """Mean per-chunk deferred-verification lag (pipelined data plane).
+
+        Non-zero only when an integrity engine is verifying off the mover
+        path; a growing value means the checksum workers are falling behind
+        movement — the pipelined analogue of checksum starvation."""
+        n = len(self.window)
+        return sum(s.cksum_lag_s for s in self.window) / n if n else 0.0
 
     @property
     def retry_amplification(self) -> float:

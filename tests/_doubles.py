@@ -1,0 +1,44 @@
+"""Shared endpoint test doubles for the pipelined data plane.
+
+``SlowReadBackDest`` makes deferred verification lag chunks behind movement
+by delaying the read-back path. It pins the zero-copy variants
+(``read_back_into`` / ``read_back_view``) to None on purpose: the data plane
+prefers those when present, and a double that only slowed ``read_back``
+while inheriting them would silently stop lagging.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import BufferDest
+
+
+class SlowReadBackDest(BufferDest):
+    """BufferDest whose read-back sleeps, forcing verification lag."""
+
+    read_back_into = None
+    read_back_view = None
+
+    def __init__(self, total_bytes: int, delay_s: float = 0.005):
+        super().__init__(total_bytes)
+        self.delay_s = delay_s
+
+    def read_back(self, offset, length):
+        time.sleep(self.delay_s)
+        return super().read_back(offset, length)
+
+
+class SlowReadBackWrapper:
+    """Wraps ANY ByteDest with a slow read-back (no zero-copy methods, so
+    the data plane always takes the delayed path)."""
+
+    def __init__(self, inner, delay_s: float = 0.005):
+        self._inner = inner
+        self.delay_s = delay_s
+
+    def write(self, offset, data):
+        self._inner.write(offset, data)
+
+    def read_back(self, offset, length):
+        time.sleep(self.delay_s)
+        return self._inner.read_back(offset, length)

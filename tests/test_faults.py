@@ -20,6 +20,7 @@ from repro.core import (
     fingerprint_bytes,
     plan_chunks,
 )
+from _doubles import SlowReadBackWrapper
 from repro.faults import (
     FULL_MATRIX,
     FaultCampaign,
@@ -111,6 +112,63 @@ def test_persistent_corruption_exhausts_refetch_budget(payload):
     with pytest.raises(IntegrityError, match="re-fetches"):
         ChunkedTransfer(BufferSource(payload), AlwaysCorrupt(len(payload)), plan,
                         max_refetches=2).run()
+
+
+# ---------------------------------------------------------------------------
+# engine: pipelined data plane — the lagging verifier must catch everything
+# ---------------------------------------------------------------------------
+def run_pipelined_campaign(payload, scenario, seed=0, movers=4, lag=True,
+                           **engine_kw):
+    plan = make_plan(len(payload), movers)
+    camp = FaultCampaign(scenario, total_bytes=len(payload), seed=seed, movers=movers)
+    dst = BufferDest(len(payload))
+    wrapped = camp.wrap_dest(SlowReadBackWrapper(dst, 0.003) if lag else dst)
+    eng = ChunkedTransfer(
+        camp.wrap_source(BufferSource(payload)), wrapped, plan,
+        pipeline="pipelined", integrity_workers=2, **engine_kw,
+    )
+    return eng.run(), dst, camp
+
+
+def test_pipelined_corruption_caught_by_lagging_verifier(payload):
+    """Corruption detected by the DEFERRED verifier (chunks behind the mover)
+    must still quarantine the landing and heal by source re-fetch within the
+    same budget — zero escapes, every corrupt write caught."""
+    sc = SCENARIOS["corrupt_1_per_TiB"].scaled_to(len(payload), target_events=6)
+    for seed in range(3):
+        rep, dst, camp = run_pipelined_campaign(payload, sc, seed=seed)
+        assert bytes(dst.buf) == payload, seed                # zero escapes
+        assert camp.stats.corrupt_writes > 0 or camp.planned_corruptions == 0
+        assert rep.refetches == camp.stats.corrupt_writes     # all caught
+        assert len(rep.quarantined) == rep.refetches
+        assert all("corruption" in q.detail for q in rep.quarantined)
+        assert rep.file_digest == fingerprint_bytes(payload)
+
+
+def test_pipelined_persistent_corruption_exhausts_budget(payload):
+    plan = make_plan(len(payload))
+
+    class AlwaysCorrupt(BufferDest):
+        def write(self, offset, data):
+            if offset == plan.chunks[2].offset:
+                data = bytes([data[0] ^ 0x01]) + bytes(data[1:])
+            super().write(offset, data)
+
+    with pytest.raises(IntegrityError, match="re-fetches"):
+        ChunkedTransfer(BufferSource(payload), AlwaysCorrupt(len(payload)), plan,
+                        max_refetches=2, pipeline="pipelined").run()
+
+
+def test_pipelined_compound_campaign_full_recovery(payload):
+    """The failure cocktail against the pipelined engine: corruption caught
+    by deferred verify, mover deaths re-queued, outages waited out."""
+    sc = parse_scenario("corrupt_1_per_TiB+kill_2_movers+outage_at_50pct")
+    sc = sc.scaled_to(len(payload), target_events=5)
+    rep, dst, camp = run_pipelined_campaign(payload, sc, seed=1)
+    assert bytes(dst.buf) == payload
+    assert rep.refetches == camp.stats.corrupt_writes
+    assert rep.mover_deaths == 2
+    assert camp.stats.outage_rejections > 0
 
 
 # ---------------------------------------------------------------------------
@@ -259,6 +317,96 @@ def test_service_multi_item_corruption_spans_all_items(tmp_path):
             assert open(src, "rb").read() == open(dst, "rb").read()
     finally:
         svc.close()
+
+
+def test_service_pipelined_corruption_heals_and_surfaces_lag(tmp_path):
+    """Pipelined service data plane: deferred verification catches every
+    corrupt landing (FAULT events carry deferred=True), the task still
+    succeeds byte-exact, and checksum lag is surfaced in TaskStatus."""
+    items = _svc_files(tmp_path, seed=11)
+    sizes = [os.path.getsize(p) for p, _ in items]
+    total = sum(sizes)
+    sc = SCENARIOS["corrupt_1_per_TiB"].scaled_to(total, target_events=4)
+    camp = FaultCampaign(sc, total_bytes=total, seed=3, movers=4, item_bytes=sizes)
+    events = []
+    svc = TransferService(tmp_path / "svc", _svc_config(pipeline="pipelined"),
+                          dest_wrapper=camp.service_dest_wrapper)
+    svc.subscribe(lambda e: e.kind == "FAULT" and events.append(e))
+    try:
+        [tid] = svc.submit(items, batch=False)
+        st = svc.wait(tid, timeout=60)
+        assert st.state == "SUCCEEDED"
+        for src, dst in items:
+            assert open(src, "rb").read() == open(dst, "rb").read()
+        assert st.pipeline == "pipelined"
+        assert st.refetches == camp.stats.corrupt_writes > 0
+        assert st.cksum_lag_s > 0.0        # verification ran off the movers
+        corr = [e for e in events if e.payload.get("fault") == "corruption"]
+        assert len(corr) == st.refetches
+        assert all(e.payload.get("deferred") for e in corr)
+        assert all(not e.payload["fatal"] for e in corr)
+    finally:
+        svc.close()
+
+
+def test_service_pipelined_kill_restart_removes_only_unverified(tmp_path):
+    """Service kill with deferred verification in flight: the journal holds
+    only verified chunks; the restarted service re-moves the rest and never
+    a journaled one (the pipelined custody rule, service flavoured)."""
+    items = _svc_files(tmp_path, n=1, nbytes=400_000, seed=12)
+
+    cfg = _svc_config(pipeline="pipelined", integrity_workers=1,
+                      chunk_bytes=16 * 1024)
+    svc = TransferService(tmp_path / "svc", cfg,
+                          dest_wrapper=lambda _t, _i, d: SlowReadBackWrapper(d, 0.02))
+    [tid] = svc.submit(items, batch=False)
+    # wait until some chunks are journaled, then kill mid-verification
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline:
+        st = svc.status(tid)
+        if st.chunks_done >= 3:
+            break
+        time.sleep(0.005)
+    svc.kill()
+
+    # kill() abandons the verifier threads mid-flight (as SIGKILL would leave
+    # in-flight appends); wait for the journal to go quiet before probing it
+    def _journal_snapshot():
+        j = svc.store.open_journal(tid)
+        snap = {g: (r.offset, r.length) for g, r in j.records.items()}
+        j.close()
+        return snap
+
+    journaled = _journal_snapshot()
+    deadline = time.monotonic() + 5
+    while time.monotonic() < deadline:
+        time.sleep(0.3)
+        nxt = _journal_snapshot()
+        if nxt == journaled:
+            break
+        journaled = nxt
+    assert journaled                          # something was verified
+    st = svc.status(tid)
+    assert 0 < len(journaled) <= st.chunks_total
+
+    moved = []
+    svc2 = TransferService(
+        tmp_path / "svc", cfg,
+        fault_injector=lambda _t, _i, chunk, _a: moved.append(
+            (chunk.offset, chunk.length)),
+    )
+    try:
+        st2 = svc2.wait(tid, timeout=60)
+        assert st2.state == "SUCCEEDED"
+        assert st2.resumed_chunks == len(journaled)
+        re_moved = [m for m in set(moved)
+                    if any(m[0] < jo + jl and jo < m[0] + m[1]
+                           for jo, jl in journaled.values())]
+        assert re_moved == []
+        src, dst = items[0]
+        assert open(src, "rb").read() == open(dst, "rb").read()
+    finally:
+        svc2.close()
 
 
 def test_service_mover_deaths_requeue_chunks(tmp_path):

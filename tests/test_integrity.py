@@ -110,3 +110,46 @@ def test_serialization_roundtrip():
     d = fingerprint_bytes(b"some chunk data")
     assert Digest.from_bytes(d.to_bytes()) == d
     assert EMPTY_DIGEST.merge(d) == d and d.merge(EMPTY_DIGEST) == d
+
+
+# ---------------------------------------------------------------------------
+# digest-algebra hot paths: batched / incremental / cached-pow variants
+# ---------------------------------------------------------------------------
+def test_fingerprint_many_matches_per_chunk():
+    rng = np.random.default_rng(7)
+    chunks = [rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+              for n in (0, 1, 17, 300, 300, 65536, 65537, 200_000, 17)]
+    from repro.core.integrity import fingerprint_many
+    assert fingerprint_many(chunks) == [fingerprint_bytes(c) for c in chunks]
+
+
+def test_fingerprint_state_and_running_accumulator():
+    from repro.core.integrity import RunningFingerprint
+    rng = np.random.default_rng(8)
+    granules = [rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+                for n in (4096, 1, 65537, 13, 0, 9000)]
+    whole = fingerprint_bytes(b"".join(granules))
+    acc = None
+    rf = RunningFingerprint()
+    for g in granules:
+        acc = fingerprint_bytes(g) if acc is None else fingerprint_bytes(g, state=acc)
+        rf.update(g)
+    assert acc == whole == rf.digest()
+    assert rf.length == whole.length
+
+
+def test_merge_chain_hits_pow_cache():
+    """A chain of equal-length merges must cost O(1) bigint pow() calls, not
+    4 per merge — the digest-algebra hot path the relay/service chains hit."""
+    from repro.core import integrity as I
+
+    ds = [fingerprint_bytes(bytes([i % 256]) * 1000) for i in range(65)]
+    I.clear_pow_caches()
+    before = I.pow_call_count()
+    out = ds[0]
+    for d in ds[1:]:
+        out = out.merge(d)
+    calls = I.pow_call_count() - before
+    assert out == fingerprint_bytes(
+        b"".join(bytes([i % 256]) * 1000 for i in range(65)))
+    assert calls * 5 <= 4 * 64          # >= 5x fewer than the uncached cost

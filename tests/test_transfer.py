@@ -4,6 +4,7 @@ import os
 import numpy as np
 import pytest
 
+from _doubles import SlowReadBackDest
 from repro.core import (
     BufferDest, BufferSource, ChunkJournal, ChunkedTransfer, FileDest,
     FileSource, IntegrityError, fingerprint_bytes, plan_chunks, transfer_verified,
@@ -130,6 +131,107 @@ def test_journal_survives_torn_write(tmp_path):
     j2 = ChunkJournal(jpath)
     assert set(j2.records) == {0, 1}
     j2.close()
+
+
+@pytest.mark.parametrize("mode", ["single_pass", "pipelined"])
+def test_roundtrip_pipeline_modes_buffer(payload, mode):
+    plan = make_plan(len(payload))
+    dst = BufferDest(len(payload))
+    rep = transfer_verified(BufferSource(payload), dst, plan,
+                            expected=fingerprint_bytes(payload), pipeline=mode)
+    assert bytes(dst.buf) == payload
+    assert rep.pipeline == mode
+    assert rep.file_digest == fingerprint_bytes(payload)
+    if mode == "pipelined":
+        assert rep.cksum_lag_s > 0.0      # verification ran off the mover path
+
+
+@pytest.mark.parametrize("mode", ["serial", "single_pass", "pipelined"])
+def test_roundtrip_pipeline_modes_files(payload, tmp_path, mode):
+    src_path = tmp_path / "src.bin"
+    src_path.write_bytes(payload)
+    plan = make_plan(len(payload))
+    dst = FileDest(tmp_path / f"dst-{mode}.bin", len(payload))
+    transfer_verified(FileSource(src_path), dst, plan,
+                      expected=fingerprint_bytes(payload), pipeline=mode)
+    assert (tmp_path / f"dst-{mode}.bin").read_bytes() == payload
+
+
+def test_pipelined_rejects_speculation(payload):
+    plan = make_plan(len(payload))
+    with pytest.raises(ValueError, match="serial verification"):
+        ChunkedTransfer(BufferSource(payload), BufferDest(len(payload)), plan,
+                        pipeline="pipelined", speculative_factor=1.0)
+
+
+def test_zero_copy_file_endpoints(payload, tmp_path):
+    """read_into/read_back_into move bytes positionally (os.pread/os.preadv):
+    concurrent movers on ONE file must neither serialize nor misread."""
+    src_path = tmp_path / "src.bin"
+    src_path.write_bytes(payload)
+    src = FileSource(src_path)
+    view = memoryview(bytearray(4099))
+    assert src.read_into(17, view) == 4099
+    assert bytes(view) == payload[17 : 17 + 4099]
+    dst = FileDest(tmp_path / "dst.bin", len(payload))
+    dst.write(100, payload[100:300])
+    back = memoryview(bytearray(200))
+    assert dst.read_back_into(100, back) == 200
+    assert bytes(back) == payload[100:300]
+    src.close()
+    dst.close()
+
+
+def test_pipelined_custody_kill_restart_lagging_verifier(payload, tmp_path):
+    """Crash mid-transfer with verification lagging N chunks behind movement:
+    the journal must hold ONLY verified chunks, and the restart must re-move
+    exactly the unverified ones — 0 re-moved journaled-and-verified chunks."""
+    import threading
+
+    plan = make_plan(len(payload), movers=4)
+    jpath = tmp_path / "pipelined.journal"
+
+    class Bomb(Exception):
+        pass
+
+    lock = threading.Lock()
+    count = {"n": 0}
+
+    def crash(chunk, attempt):
+        with lock:
+            count["n"] += 1
+            if count["n"] == 9:
+                raise Bomb("host died mid-transfer")
+
+    dst = SlowReadBackDest(len(payload))
+    j = ChunkJournal(jpath)
+    with pytest.raises(Bomb):
+        ChunkedTransfer(BufferSource(payload), dst, plan, journal=j,
+                        fault_injector=crash, max_retries=0,
+                        pipeline="pipelined", integrity_workers=1).run()
+    j.close()
+
+    j2 = ChunkJournal(jpath)
+    journaled = {(r.offset, r.length) for r in j2.records.values()}
+    done_before = len(j2.records)
+    assert done_before < plan.n_chunks     # the crash landed mid-flight
+    moved = []
+
+    def record(chunk, attempt):
+        with lock:
+            moved.append((chunk.offset, chunk.length))
+
+    rep = ChunkedTransfer(BufferSource(payload), dst, plan, journal=j2,
+                          fault_injector=record, pipeline="pipelined").run()
+    j2.close()
+    assert rep.skipped_chunks == done_before       # partial restart honored
+    # custody rule: nothing the first run journaled (== verified) was re-moved
+    re_moved = [m for m in set(moved)
+                if any(m[0] < jo + jl and jo < m[0] + m[1]
+                       for jo, jl in journaled)]
+    assert re_moved == []
+    assert bytes(dst.buf) == payload
+    assert rep.file_digest == fingerprint_bytes(payload)
 
 
 def test_speculative_straggler_duplication(payload):
