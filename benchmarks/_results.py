@@ -2,18 +2,30 @@
 
 Every benchmark that prints its ``name,value,unit`` CSV also writes a JSON
 document next to it so the performance trajectory of the repo is tracked
-commit-over-commit: metrics, the seed(s) the run used, the git revision, and
-the exact arguments. CI archives these files; diffing two of them answers
-"did this PR move the needle" without re-parsing stdout.
+commit-over-commit: metrics, the seed(s) the run used, the git revision, the
+exact arguments, and enough host provenance (CPU count, platform) to judge
+whether two results are even comparable. CI archives these files; diffing
+two of them answers "did this PR move the needle" without re-parsing stdout.
+
+Overwrite protection: a ``BENCH_*.json`` written at one git revision is a
+record of that revision's performance. ``emit`` refuses to silently replace
+a result from a *different* revision — pass ``force=True`` (the benchmarks'
+``--force`` flag) to overwrite deliberately. Same-revision re-runs always
+overwrite (iterating locally must stay frictionless).
 
 Schema (stable; additions only):
 
     {
+      "schema_version": 2,
       "bench":     "<name>",
       "git_rev":   "<short rev or 'unknown'>",
       "timestamp": <unix seconds>,
+      "elapsed_s": <benchmark wall time | null>,
+      "host":      {"cpu_count": <int>, "platform": "...", "machine": "...",
+                    "python": "..."},
       "seed":      <int | null>,
       "args":      {...},                      # run configuration
+      "artifacts": ["<path>", ...],            # attached trace/attribution files
       "metrics":   {"<metric>": {"value": <num>, "unit": "<unit>"}}
     }
 """
@@ -21,11 +33,15 @@ from __future__ import annotations
 
 import json
 import os
+import platform
 import subprocess
-import time
 from typing import Any, Sequence
 
+from repro.obs.clock import wall_s
+
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCHEMA_VERSION = 2
 
 
 def git_rev() -> str:
@@ -41,6 +57,36 @@ def git_rev() -> str:
         return "unknown"
 
 
+def host_info() -> dict[str, Any]:
+    """Comparability provenance: what machine produced this number."""
+    return {
+        "cpu_count": os.cpu_count() or 1,
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+    }
+
+
+class ResultOverwriteError(RuntimeError):
+    """Refused to clobber a BENCH file from a different git revision."""
+
+
+def _check_overwrite(path: str, rev: str, force: bool) -> None:
+    if force or not os.path.exists(path):
+        return
+    try:
+        with open(path, encoding="utf-8") as fh:
+            prev_rev = json.load(fh).get("git_rev", "unknown")
+    except Exception:  # noqa: BLE001 — corrupt/legacy file: replacing is fine
+        return
+    if prev_rev != "unknown" and rev != "unknown" and prev_rev != rev:
+        raise ResultOverwriteError(
+            f"{path} holds a result from git rev {prev_rev}, but this run is "
+            f"rev {rev}. Overwriting would silently lose a recorded "
+            f"performance point — re-run with --force to replace it."
+        )
+
+
 def emit(
     name: str,
     rows: Sequence[tuple[str, float, str]],
@@ -48,21 +94,32 @@ def emit(
     seed: int | None = None,
     args: dict[str, Any] | None = None,
     out_dir: str | os.PathLike | None = None,
+    elapsed_s: float | None = None,
+    artifacts: Sequence[str] | None = None,
+    force: bool = False,
 ) -> str:
     """Write ``BENCH_<name>.json`` and return its path.
 
     ``rows`` is the same ``(metric, value, unit)`` list the benchmark prints
-    as CSV, so both outputs can never disagree.
+    as CSV, so both outputs can never disagree. ``artifacts`` attaches paths
+    of companion files (exported traces, attribution reports) so a perf
+    number always arrives with its explanation.
     """
+    rev = git_rev()
     doc = {
+        "schema_version": SCHEMA_VERSION,
         "bench": name,
-        "git_rev": git_rev(),
-        "timestamp": time.time(),
+        "git_rev": rev,
+        "timestamp": wall_s(),
+        "elapsed_s": elapsed_s,
+        "host": host_info(),
         "seed": seed,
         "args": dict(args or {}),
+        "artifacts": list(artifacts or []),
         "metrics": {n: {"value": v, "unit": u} for n, v, u in rows},
     }
     path = os.path.join(str(out_dir) if out_dir else os.getcwd(), f"BENCH_{name}.json")
+    _check_overwrite(path, rev, force)
     tmp = path + ".tmp"
     with open(tmp, "w", encoding="utf-8") as fh:
         json.dump(doc, fh, indent=2, sort_keys=True)

@@ -261,8 +261,11 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--force", action="store_true",
+                    help="overwrite a BENCH_autotune.json from another git rev")
     args = ap.parse_args(argv)
 
+    t_start = time.perf_counter()
     nbytes = (10 * MiB if args.quick else 16 * MiB) + 4093
     rows: list[tuple[str, float, str]] = []
     violations: list[str] = []
@@ -284,7 +287,9 @@ def main(argv=None) -> int:
     for name, val, unit in rows:
         print(f"{name},{val},{unit}")
     path = emit("autotune", rows, seed=args.seed,
-                args={"quick": args.quick, "payload_bytes": nbytes})
+                args={"quick": args.quick, "payload_bytes": nbytes},
+                elapsed_s=round(time.perf_counter() - t_start, 3),
+                force=args.force)
     print(f"# wrote {path}")
     if violations:
         print("\nAUTOTUNE GATE VIOLATIONS:", file=sys.stderr)

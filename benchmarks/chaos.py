@@ -295,7 +295,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--seeds", type=int, default=5)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="overwrite a BENCH result from a different git rev")
     args = ap.parse_args(argv)
+    t_start = time.perf_counter()
 
     nbytes = (1 * 1024 * 1024 + 4093) if args.quick else (3 * 1024 * 1024 + 4093)
     chunk, movers = 96 * 1024, 8
@@ -396,7 +399,9 @@ def main(argv=None) -> int:
     for name, val, unit in rows:
         print(f"{name},{val},{unit}")
     path = emit("chaos", rows,
-                args={"quick": args.quick, "seeds": list(range(args.seeds))})
+                args={"quick": args.quick, "seeds": list(range(args.seeds))},
+                elapsed_s=round(time.perf_counter() - t_start, 3),
+                force=args.force)
     print(f"# wrote {path}")
     if violations:
         print("\nCONFORMANCE VIOLATIONS:", file=sys.stderr)

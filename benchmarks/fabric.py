@@ -273,8 +273,11 @@ def main(argv=None) -> int:
     ap.add_argument("--seeds", type=int, default=3)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out-dir", default=None, help="where BENCH_fabric.json lands")
+    ap.add_argument("--force", action="store_true",
+                    help="overwrite a BENCH_fabric.json from another git rev")
     args = ap.parse_args(argv)
 
+    t_start = time.perf_counter()
     fanouts = (2, 4) if args.quick else (2, 4, 8)
     v_bytes = 100 * GB
     r_bytes = (1 * 1024 * 1024 + 4093) if args.quick else (2 * 1024 * 1024 + 4093)
@@ -297,7 +300,9 @@ def main(argv=None) -> int:
     path = emit("fabric", rows,
                 args={"quick": args.quick, "fanouts": list(fanouts),
                       "seeds": list(range(seeds))},
-                out_dir=args.out_dir)
+                out_dir=args.out_dir,
+                elapsed_s=round(time.perf_counter() - t_start, 3),
+                force=args.force)
     print(f"# wrote {path}")
     if violations:
         print("\nCONFORMANCE VIOLATIONS:", file=sys.stderr)

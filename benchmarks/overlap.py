@@ -167,13 +167,15 @@ def host_cksum_rate_Bps(seed: int = 0) -> float:
     return samples[len(samples) // 2]
 
 
-def _run_once(payload: bytes, mode: str, dest_factory, chunk: int):
+def _run_once(payload: bytes, mode: str, dest_factory, chunk: int,
+              *, tracer=None, task: str = ""):
     """One transfer in one mode; returns (Bps, escape, report)."""
     plan = plan_chunks(len(payload), MOVERS, chunk_bytes=chunk,
                        min_chunk=1, max_chunk=1 << 40)
     dst = dest_factory()
     eng = ChunkedTransfer(BufferSource(payload), dst, plan,
-                          pipeline=mode, integrity_workers=VERIFIERS)
+                          pipeline=mode, integrity_workers=VERIFIERS,
+                          tracer=tracer, task=task)
     t0 = time.perf_counter()
     rep = eng.run()
     dt = time.perf_counter() - t0
@@ -295,6 +297,116 @@ def restart_rows(seed: int, nbytes: int, tmpdir: str,
     ]
 
 
+def trace_attr_rows(seed: int, violations: list[str], *,
+                    out_dir: str | None = None, attempts: int = 2):
+    """Tracing + attribution leg (the observability acceptance gates).
+
+    1. Tracing overhead: best-of-reps pipelined goodput on the gate mix,
+       untraced (NullTracer) vs a live bounded Tracer — gated at <= 2%.
+    2. Per-mix attribution: one traced pipelined run per mix; the exported
+       trace is a Perfetto-loadable artifact, and ``obs.attr`` must show the
+       per-phase shares summing to ~100% of makespan with cksum-dominance
+       flipping between the cksum-bound and wire-bound mixes.
+    """
+    from repro.obs.attr import attribute
+    from repro.obs.trace import Tracer
+
+    out_dir = out_dir or os.getcwd()
+    nbytes = 96 * MiB
+    chunk = 8 * MiB
+    payload = _payload(seed + 5, nbytes)
+    rows: list[tuple[str, float, str]] = []
+    artifacts: list[str] = []
+
+    # ---- 1. tracing overhead on the gate mix: interleaved untraced/traced
+    # pairs (steal dips hit both populations equally), best-of per side,
+    # min over attempts — the tracer's true cost is a handful of deque
+    # appends per chunk, so any apparent overhead beyond noise is a bug
+    overhead = float("inf")
+    for attempt in range(attempts):
+        cksum_Bps = host_cksum_rate_Bps(seed)
+        base = traced = 0.0
+        for _ in range(4):
+            bps, _, _ = _run_once(
+                payload, "pipelined",
+                lambda n=nbytes, w=cksum_Bps: ThrottledDest(n, w), chunk)
+            base = max(base, bps)
+            bps, _, _ = _run_once(
+                payload, "pipelined",
+                lambda n=nbytes, w=cksum_Bps: ThrottledDest(n, w), chunk,
+                tracer=Tracer(), task="overhead")
+            traced = max(traced, bps)
+        overhead = min(overhead, max(0.0, 1.0 - traced / base))
+        if overhead <= 0.02:
+            break
+        if attempt == attempts - 1:
+            violations.append(
+                f"trace: {overhead * 100:.2f}% tracing overhead (> 2% gate)")
+        else:
+            print(f"# trace overhead {overhead * 100:.2f}% > 2% — "
+                  "re-measuring once (shared-CPU steal window?)")
+    rows.append(("overlap/trace/overhead_pct", round(overhead * 100, 2), "%"))
+
+    # ---- 2. per-mix traced run -> Perfetto trace + attribution report
+    attr_doc: dict[str, dict] = {}
+    for attempt in range(attempts):
+        cksum_Bps = host_cksum_rate_Bps(seed)
+        mix_rows_local: list[tuple[str, float, str]] = []
+        artifacts = []
+        attr_doc = {}
+        flip_ok = sums_ok = True
+        # attribution probes the INTERIOR of each regime: cksum_bound rates
+        # the wire well above the checksum rate (the modern-NIC shape where
+        # the checksum pass is unambiguously the tax), wire_bound well below
+        # it — the speedup-gate mixes above sit nearer the boundary where
+        # dominance is a coin toss by construction
+        for mix, w_frac in (("cksum_bound", 2.5), ("wire_bound", 0.7)):
+            tracer = Tracer()
+            _run_once(
+                payload, "pipelined",
+                lambda n=nbytes, w=w_frac * cksum_Bps: ThrottledDest(n, w),
+                chunk, tracer=tracer, task=mix)
+            tpath = os.path.join(out_dir, f"BENCH_overlap_trace_{mix}.json")
+            tracer.export(tpath)
+            artifacts.append(os.path.basename(tpath))
+            a = attribute(tracer.spans(mix))
+            attr_doc[mix] = a.to_json()
+            print(a.format(f"pipelined/{mix}"))
+            total_share = sum(a.shares().values())
+            sums_ok &= abs(total_share - 1.0) <= 0.01
+            for phase in ("wire", "cksum", "stall", "journal", "queue", "idle"):
+                mix_rows_local.append((f"overlap/attr/{mix}/{phase}_share",
+                                       round(a.share(phase), 4), "frac"))
+            mix_rows_local.append((f"overlap/attr/{mix}/share_sum",
+                                   round(total_share, 4), "frac"))
+        flip_ok = (attr_doc["cksum_bound"]["shares"]["cksum"]
+                   > attr_doc["cksum_bound"]["shares"]["wire"]) and \
+                  (attr_doc["wire_bound"]["shares"]["wire"]
+                   > attr_doc["wire_bound"]["shares"]["cksum"])
+        if sums_ok and flip_ok:
+            break
+        if attempt == attempts - 1:
+            if not sums_ok:
+                violations.append("attr: per-phase shares do not sum to "
+                                  "~100% of makespan")
+            if not flip_ok:
+                violations.append(
+                    "attr: cksum-dominance did not flip between mixes "
+                    f"(cksum_bound {attr_doc['cksum_bound']['shares']}, "
+                    f"wire_bound {attr_doc['wire_bound']['shares']})")
+        else:
+            print("# attribution flip/sum check failed — re-measuring once")
+    rows += mix_rows_local
+
+    apath = os.path.join(out_dir, "BENCH_overlap_attribution.json")
+    import json as _json
+    with open(apath, "w", encoding="utf-8") as fh:
+        _json.dump(attr_doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    artifacts.append(os.path.basename(apath))
+    return rows, artifacts
+
+
 def pow_microbench_rows(violations: list[str]):
     """Digest-algebra hot path: bigint pow() calls per merge chain must be
     >= 5x below the uncached 4-per-merge cost (the LRU'd r^len tables)."""
@@ -351,8 +463,11 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--force", action="store_true",
+                    help="overwrite a BENCH_overlap.json from another git rev")
     args = ap.parse_args(argv)
 
+    t_start = time.perf_counter()
     rows: list[tuple[str, float, str]] = []
     violations: list[str] = []
 
@@ -372,6 +487,8 @@ def main(argv=None) -> int:
     tmp_base = "/dev/shm" if os.path.isdir("/dev/shm") else None
     with tempfile.TemporaryDirectory(prefix="overlap-", dir=tmp_base) as tmpdir:
         rows += restart_rows(args.seed, 8 * MiB, tmpdir, violations)
+    trace_rows, artifacts = trace_attr_rows(args.seed, violations)
+    rows += trace_rows
     rows += pow_microbench_rows(violations)
     rows += virtual_rows()
 
@@ -383,7 +500,9 @@ def main(argv=None) -> int:
         print(f"{name},{val},{unit}")
     path = emit("overlap", rows, seed=args.seed,
                 args={"quick": args.quick, "movers": MOVERS,
-                      "integrity_workers": VERIFIERS})
+                      "integrity_workers": VERIFIERS},
+                elapsed_s=round(time.perf_counter() - t_start, 3),
+                artifacts=artifacts, force=args.force)
     print(f"# wrote {path}")
     if violations:
         print("\nOVERLAP GATE VIOLATIONS:", file=sys.stderr)

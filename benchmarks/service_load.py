@@ -16,6 +16,7 @@ Run: PYTHONPATH=src python -m benchmarks.service_load [--quick]
 from __future__ import annotations
 
 import sys
+import time
 
 from benchmarks._results import emit
 from repro.service import BatchConfig, mixed_workload, run_load
@@ -61,11 +62,15 @@ def sweep(*, quick: bool = False) -> list[tuple[str, float, str]]:
 
 def main() -> None:
     quick = "--quick" in sys.argv
+    force = "--force" in sys.argv
+    t_start = time.perf_counter()
     rows = sweep(quick=quick)
     print("name,value,unit")
     for name, val, unit in rows:
         print(f"{name},{val},{unit}")
-    path = emit("service_load", rows, args={"quick": quick})
+    path = emit("service_load", rows, args={"quick": quick},
+                elapsed_s=round(time.perf_counter() - t_start, 3),
+                force=force)
     print(f"# wrote {path}")
 
 

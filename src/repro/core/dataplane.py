@@ -43,6 +43,8 @@ from repro.core.integrity import (
     fingerprint_bytes,
     verify,
 )
+from repro.obs import metrics as _metrics
+from repro.obs.trace import NULL as _NULL_TRACER
 
 MiB = 1024 * 1024
 DEFAULT_STREAM_GRANULE = 1 * MiB
@@ -341,6 +343,8 @@ class IntegrityEngine:
         on_verified: Callable[[VerifyJob, float, float], None],
         on_corrupt: Callable[[VerifyJob, Digest, float], None],
         on_error: Callable[[VerifyJob, BaseException], None] | None = None,
+        tracer=None,                 # obs.Tracer: verify wait/work spans
+        task: str = "",              # owning task id for spans + metrics
     ):
         if workers < 1:
             raise ValueError("workers must be >= 1")
@@ -348,6 +352,17 @@ class IntegrityEngine:
         self._on_verified = on_verified
         self._on_corrupt = on_corrupt
         self._on_error = on_error
+        self._tracer = tracer if tracer is not None else _NULL_TRACER
+        self._task = task
+        # verification lag is the pipelined data plane's health signal: a
+        # growing distribution means the checksum pool is falling behind
+        # movement (the flip side of the overlap win)
+        self._lag_hist = _metrics.REGISTRY.histogram(
+            "verify_lag_seconds", "move-landed -> verified delay",
+            ("task",), scale=1e-5)
+        self._verdicts = _metrics.REGISTRY.counter(
+            "verify_verdicts_total", "deferred verification verdicts",
+            ("task", "verdict"))
         self._q: "queue.Queue[VerifyJob | None]" = queue.Queue()
         self._lock = threading.Lock()
         self._idle = threading.Condition(self._lock)
@@ -355,7 +370,8 @@ class IntegrityEngine:
         self._closed = False
         self.stats = IntegrityStats()
         self._threads = [
-            threading.Thread(target=self._worker, name=f"integrity-{i}", daemon=True)
+            threading.Thread(target=self._worker, args=(i,),
+                             name=f"integrity-{i}", daemon=True)
             for i in range(workers)
         ]
         for th in self._threads:
@@ -409,20 +425,26 @@ class IntegrityEngine:
                 th.join()
 
     # ------------------------------------------------------------------
-    def _worker(self) -> None:
+    def _worker(self, wid: int) -> None:
         while True:
             job = self._q.get()
             if job is self._SENTINEL:
                 return
             try:
-                self._verify_one(job)
+                self._verify_one(job, wid)
             finally:
                 with self._idle:
                     self._pending -= 1
                     self._idle.notify_all()
 
-    def _verify_one(self, job: VerifyJob) -> None:
+    def _verify_one(self, job: VerifyJob, wid: int = 0) -> None:
         t0 = time.perf_counter()
+        # queue-wait is a first-class span: when this interval is non-trivial
+        # the verify pool is saturated and the transfer is checksum-BOUND —
+        # exactly the condition obs.attr charges segments to "cksum"
+        self._tracer.add(
+            "verify_wait", "cksum_wait", job.enqueued_s, t0,
+            task=self._task, lane=f"verifier{wid}", offset=job.offset)
         try:
             if job.expected is None:
                 # deferred source fingerprint: derive it off the mover path
@@ -448,6 +470,12 @@ class IntegrityEngine:
         lag = now - job.enqueued_s
         ck = now - t0
         ok = verify(job.expected, actual)
+        self._tracer.add(
+            "verify", "cksum", t0, now, task=self._task,
+            lane=f"verifier{wid}", offset=job.offset, ok=ok)
+        self._lag_hist.observe(lag, task=self._task)
+        self._verdicts.inc(1, task=self._task,
+                           verdict="ok" if ok else "corrupt")
         with self._lock:
             self.stats.cksum_seconds += ck
             self.stats.lag_seconds += lag

@@ -46,6 +46,8 @@ from repro.core.integrity import (
     verify,
 )
 from repro.core.journal import ChunkJournal, JournalRecord
+from repro.obs import metrics as obsmetrics
+from repro.obs.trace import NULL as NULL_TRACER
 
 # data-plane pipeline modes (ChunkedTransfer(pipeline=...)):
 #   serial      — read -> digest -> write -> read-back -> digest -> verify,
@@ -336,6 +338,8 @@ class ChunkedTransfer:
         integrity_workers: int = 2,        # checksum worker pool (pipelined)
         stream_granule: int = DEFAULT_STREAM_GRANULE,
         pool: BufferPool | None = None,    # shared buffer pool (else per-run)
+        tracer=None,                       # obs.Tracer: chunk-lifecycle spans
+        task: str = "",                    # task id on spans/metrics labels
     ):
         if source.nbytes != plan.total_bytes:
             raise ValueError(f"source has {source.nbytes} bytes, plan expects {plan.total_bytes}")
@@ -372,6 +376,22 @@ class ChunkedTransfer:
         self.speculative_factor = speculative_factor
         self.tuner = tuner
         self.alignment = max(1, alignment)
+        # observability: spans are emitted RETROACTIVELY from timestamps the
+        # engine takes anyway (tuner telemetry), so the default NullTracer
+        # costs one no-op call per phase on the hot path
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.task = task
+        self._enq_t: dict[int, float] = {}    # chunk index -> last enqueue time
+        self._m_chunks = obsmetrics.REGISTRY.counter(
+            "chunks_total", "landed chunks", ("task", "pipeline"))
+        self._m_bytes = obsmetrics.REGISTRY.counter(
+            "bytes_total", "landed bytes", ("task", "pipeline"))
+        self._m_retry = obsmetrics.REGISTRY.counter(
+            "chunk_retries_total", "per-class chunk recovery events",
+            ("task", "kind"))
+        self._m_wire = obsmetrics.REGISTRY.histogram(
+            "chunk_wire_seconds", "fault-excluded per-chunk mover time",
+            ("task",), scale=1e-4)
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)   # completion/error/death
         self._outcomes: dict[int, ChunkOutcome] = {}
@@ -491,6 +511,20 @@ class ChunkedTransfer:
                     if not verify(src_digest, dst_digest):
                         raise _ChunkCorruption(src_digest, dst_digest)
                 now = time.perf_counter()
+                # retroactive spans: wire = the successful attempt minus its
+                # inline checksum share (placed at the attempt's tail — the
+                # durations are exact, the sub-placement is synthetic)
+                wire_end = max(t_att, now - cksum_s)
+                lane = f"mover{mover}"
+                self.tracer.add("move", "wire", t_att, wire_end,
+                                task=self.task, lane=lane,
+                                offset=chunk.offset, index=chunk.index,
+                                attempt=attempts)
+                if cksum_s > 0.0:
+                    self.tracer.add("cksum_inline", "cksum", wire_end, now,
+                                    task=self.task, lane=lane,
+                                    offset=chunk.offset, index=chunk.index)
+                self._m_wire.observe(signal_s + (now - t_att), task=self.task)
                 return ChunkOutcome(
                     chunk, src_digest, attempts, mover, now - t0,
                     attempt_seconds=signal_s + (now - t_att),
@@ -501,6 +535,11 @@ class ChunkedTransfer:
                 raise
             except _ChunkCorruption as c:
                 refetches += 1
+                self.tracer.add("refetch", "stall", t_att,
+                                time.perf_counter(), task=self.task,
+                                lane=f"mover{mover}", offset=chunk.offset,
+                                index=chunk.index, attempt=attempts)
+                self._m_retry.inc(1, task=self.task, kind="refetch")
                 with self._lock:
                     self._retries += 1
                     self._refetches += 1
@@ -518,16 +557,40 @@ class ChunkedTransfer:
                 outages += 1
                 with self._lock:
                     self._outage_retries_seen += 1
+                self._m_retry.inc(1, task=self.task, kind="outage")
                 if outages > self.outage_retries:
+                    self.tracer.add("outage_wait", "stall", t_att,
+                                    time.perf_counter(), task=self.task,
+                                    lane=f"mover{mover}", offset=chunk.offset,
+                                    index=chunk.index)
                     raise
                 time.sleep(self.outage_backoff_s * min(outages, 8))
+                # the rejected op plus its backoff is fault recovery, not
+                # congestion — same exclusion rule as the tuner's rate signal
+                self.tracer.add("outage_wait", "stall", t_att,
+                                time.perf_counter(), task=self.task,
+                                lane=f"mover{mover}", offset=chunk.offset,
+                                index=chunk.index)
             except Exception:
                 generic += 1
-                signal_s += time.perf_counter() - t_att   # congestion-like
+                now = time.perf_counter()
+                signal_s += now - t_att   # congestion-like
+                # a generic-I/O retry IS the path slowing down: its time is
+                # wire, not stall (mirrors the tuner's congestion signal)
+                self.tracer.add("move_retry", "wire", t_att, now,
+                                task=self.task, lane=f"mover{mover}",
+                                offset=chunk.offset, index=chunk.index,
+                                attempt=attempts)
+                self._m_retry.inc(1, task=self.task, kind="generic")
                 if generic > self.max_retries:
                     raise
                 with self._lock:
                     self._retries += 1
+
+    def _enqueue(self, q: "queue.Queue[Chunk]", chunk: Chunk) -> None:
+        """Queue a chunk, timestamping it so pickup emits a queue-wait span."""
+        self._enq_t[chunk.index] = time.perf_counter()
+        q.put(chunk)
 
     # -- worker loop: pull-from-queue == work stealing ---------------------
     def _worker(self, mover: int, q: "queue.Queue[Chunk]") -> None:
@@ -543,6 +606,12 @@ class ChunkedTransfer:
                 with self._lock:
                     if chunk.index in self._outcomes:   # speculated twin landed
                         continue
+                enq = self._enq_t.get(chunk.index)
+                if enq is not None:
+                    self.tracer.add("queue_wait", "queue", enq,
+                                    time.perf_counter(), task=self.task,
+                                    lane=f"mover{mover}", offset=chunk.offset,
+                                    index=chunk.index)
                 try:
                     out = self._move_chunk(chunk, mover)
                 except MoverCrash:
@@ -557,7 +626,7 @@ class ChunkedTransfer:
                                 f"({self._mover_deaths} > {self._death_budget})"
                             ))
                     if not over:
-                        q.put(chunk)
+                        self._enqueue(q, chunk)
                     return
                 except BaseException as e:  # noqa: BLE001 — propagated to caller
                     with self._lock:
@@ -613,6 +682,13 @@ class ChunkedTransfer:
             j_secs = time.perf_counter() - t_j
             out.seconds += j_secs
             out.attempt_seconds += j_secs
+            self.tracer.add("journal_append", "journal", t_j, t_j + j_secs,
+                            task=self.task, lane="journal",
+                            offset=chunk.offset, index=chunk.index)
+        if first:
+            self._m_chunks.inc(1, task=self.task, pipeline=self.pipeline)
+            self._m_bytes.inc(chunk.length, task=self.task,
+                              pipeline=self.pipeline)
         if first and self.tuner is not None:
             try:
                 with self._tune_lock:
@@ -665,7 +741,8 @@ class ChunkedTransfer:
                 ))
                 self._cond.notify_all()
         if not over:
-            self._queue.put(chunk)     # re-move from source (quarantine heal)
+            # re-move from source (quarantine heal)
+            self._enqueue(self._queue, chunk)
 
     def _on_verify_error(self, job: VerifyJob, exc: BaseException) -> None:
         chunk: Chunk = job.key
@@ -704,8 +781,10 @@ class ChunkedTransfer:
             self._target += len(fresh) - len(drained)
             self._replans += 1
             self._chunk_bytes_now = max(self.alignment, int(new_bytes))
+        self.tracer.mark("replan", "plan", task=self.task,
+                         chunk_bytes=int(new_bytes), recut=len(fresh))
         for c in fresh:
-            q.put(c)
+            self._enqueue(q, c)
         return len(drained)
 
     def run(self) -> TransferReport:
@@ -741,7 +820,7 @@ class ChunkedTransfer:
             self._next_index += len(pending)
         q: "queue.Queue[Chunk]" = queue.Queue()
         for c in pending:
-            q.put(c)
+            self._enqueue(q, c)
         self._target = len(pending)
         self._queue = q
         if self.pipeline == "pipelined" and self.integrity and pending:
@@ -749,6 +828,7 @@ class ChunkedTransfer:
                 workers=self.integrity_workers, pool=self._pool,
                 on_verified=self._on_verified, on_corrupt=self._on_corrupt,
                 on_error=self._on_verify_error,
+                tracer=self.tracer, task=self.task,
             )
         # warm start: a SimTuner-seeded controller may already disagree with
         # the static plan — re-cut the whole tail before the first byte moves
@@ -805,6 +885,11 @@ class ChunkedTransfer:
             # once every outcome landed); on error, let queued jobs get their
             # verdicts — their quarantine records are part of the story
             self._engine.close(abandon=False)
+        # the root span carries the makespan (obs.attr's default window) and
+        # is emitted on the error path too — post-mortem traces need it most
+        self.tracer.add("transfer", "task", t0, time.perf_counter(),
+                        task=self.task, lane="", pipeline=self.pipeline,
+                        bytes=self.plan.total_bytes)
         if self._errors:
             raise self._errors[0]
 
@@ -847,7 +932,7 @@ class ChunkedTransfer:
                     missing = [c for c in self.plan.chunks
                                if c.index not in self._outcomes and c.index not in skip]
                     for c in missing[: movers]:
-                        q.put(c)
+                        self._enqueue(q, c)
                         self._speculated += 1
                     return
 

@@ -56,6 +56,8 @@ from repro.core.transfer import (
 from repro.faults.injectors import FaultCampaign, _seed_int
 from repro.faults.scenarios import Scenario
 from repro.fabric.topology import Route
+from repro.obs.clock import mono_s
+from repro.obs.trace import NULL as _NULL_TRACER
 from repro.tune.controller import ChunkController
 from repro.tune.probe import ChunkSample
 
@@ -167,9 +169,13 @@ class RelayTransfer:
         granule_min: int = 64 * 1024,
         tune_epoch_chunks: int = 3,
         tune_hops: "set[int] | frozenset[int] | None" = None,  # None = all hops
+        tracer=None,                       # obs.trace.Tracer; spans carry hop=
+        task: str = "",
     ):
         if movers < 1:
             raise ValueError("movers must be >= 1")
+        self.tracer = tracer if tracer is not None else _NULL_TRACER
+        self.task = task or f"relay:{'-'.join(route.nodes)}"
         self.route = route
         self.workdir = str(workdir)
         os.makedirs(self.workdir, exist_ok=True)
@@ -252,7 +258,7 @@ class RelayTransfer:
 
     # -- execution -----------------------------------------------------------
     def run(self) -> RelayReport:
-        t0 = time.perf_counter()
+        t0 = mono_s()
         n = self.plan.n_chunks
         try:
             # seed each hop's ready queue: upstream custody present, own absent
@@ -298,11 +304,18 @@ class RelayTransfer:
             return RelayReport(
                 route=self.route, total_bytes=self.total_bytes, n_chunks=n,
                 hops=[h.report for h in self.hops],
-                seconds=time.perf_counter() - t0, file_digest=file_digest,
+                seconds=mono_s() - t0, file_digest=file_digest,
             )
         finally:
             for hop in self.hops:
                 hop.journal.close()
+            # root span covers the relay makespan even on a faulted exit, so
+            # post-mortem attribution still sees the full window
+            self.tracer.add(
+                "relay", "task", t0, mono_s(), task=self.task,
+                route="-".join(self.route.nodes), bytes=self.total_bytes,
+                hops=self.route.n_hops,
+            )
 
     def _finished_locked(self) -> bool:
         n = self.plan.n_chunks
@@ -345,9 +358,15 @@ class RelayTransfer:
                         self._cond.notify_all()
                     return
                 try:
+                    t_j = mono_s()
                     hop.journal.append(JournalRecord(
                         chunk.index, chunk.offset, chunk.length, digest.hexdigest()
                     ))
+                    self.tracer.add(
+                        "custody_commit", "journal", t_j, mono_s(),
+                        task=self.task, lane=f"hop{hop.idx}:journal",
+                        offset=chunk.offset, index=chunk.index, hop=hop.idx,
+                    )
                 except Exception as e:  # noqa: BLE001 — dead journal: fail fast
                     with self._lock:
                         self._errors.append(RuntimeError(
@@ -390,9 +409,10 @@ class RelayTransfer:
         attempts = generic = refetches = outages = 0
         signal_s = 0.0   # fault-excluded work time: generic retries count
         # (congestion), corruption re-fetches and outage waits do not
+        lane = f"hop{hop.idx}:{threading.current_thread().name}"
         while True:
             attempts += 1
-            t_att = time.perf_counter()
+            t_att = mono_s()
             try:
                 if self._fault_injector is not None:
                     self._fault_injector(hop.idx, chunk, attempts)
@@ -478,15 +498,28 @@ class RelayTransfer:
                                 f"hop {hop.idx} staging read of chunk {chunk.index} "
                                 f"does not match upstream custody digest"
                             )
+                now = mono_s()
+                # custody span: this chunk crossing this hop (the attempt
+                # that landed it) — checksum work is inline with the move on
+                # a relay hop, so the whole attempt is wire custody time
+                self.tracer.add(
+                    "hop_move", "wire", t_att, now, task=self.task, lane=lane,
+                    offset=chunk.offset, index=chunk.index, hop=hop.idx,
+                    attempt=attempts,
+                )
                 if hop.controller is not None:
                     self._observe_hop(
-                        hop, chunk, signal_s + (time.perf_counter() - t_att),
+                        hop, chunk, signal_s + (now - t_att),
                         attempts, refetches)
                 return digest
             except MoverCrash:
                 raise
             except IntegrityError:
                 refetches += 1
+                self.tracer.add(
+                    "refetch", "stall", t_att, mono_s(), task=self.task,
+                    lane=lane, offset=chunk.offset, hop=hop.idx, kind="corruption",
+                )
                 with self._lock:
                     hop.report.retries += 1
                     hop.report.refetches += 1
@@ -497,11 +530,24 @@ class RelayTransfer:
                 with self._lock:
                     hop.report.outage_retries += 1
                 if outages > self.outage_retries:
+                    self.tracer.add(
+                        "outage_wait", "stall", t_att, mono_s(), task=self.task,
+                        lane=lane, offset=chunk.offset, hop=hop.idx, kind="outage",
+                    )
                     raise
                 time.sleep(self.outage_backoff_s * min(outages, 8))
+                # stall span covers the rejected attempt AND the backoff wait
+                self.tracer.add(
+                    "outage_wait", "stall", t_att, mono_s(), task=self.task,
+                    lane=lane, offset=chunk.offset, hop=hop.idx, kind="outage",
+                )
             except Exception:
                 generic += 1
-                signal_s += time.perf_counter() - t_att   # congestion-like
+                signal_s += mono_s() - t_att   # congestion-like
+                self.tracer.add(
+                    "move_retry", "wire", t_att, mono_s(), task=self.task,
+                    lane=lane, offset=chunk.offset, hop=hop.idx, kind="generic",
+                )
                 if generic > self.max_retries:
                     raise
                 with self._lock:

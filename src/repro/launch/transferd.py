@@ -17,6 +17,21 @@ Service modes:
 
         PYTHONPATH=src python -m repro.launch.transferd --real /tmp/transferd
 
+Observability modes (``transferd top`` / ``transferd trace``):
+
+  * ``top``    — live terminal snapshot of a draining service: one row per
+    task (state, progress, wire-time quantiles, verify lag, faults) plus a
+    registry header (active tasks per tenant, movers, aggregate bytes).
+    Drives the same local smoke workload as ``--real``:
+
+        ... transferd top --root /tmp/transferd-top
+
+  * ``trace``  — run a workload with the span tracer attached and export a
+    Chrome/Perfetto ``trace_event`` JSON (open at https://ui.perfetto.dev):
+
+        ... transferd trace --export /tmp/testbed.trace.json           # virtual
+        ... transferd trace --export /tmp/real.trace.json --real DIR   # real
+
 Fabric modes (``transferd fabric <cmd>``, the multi-endpoint WAN layer):
 
   * ``fabric plan``      — k-shortest routes between two endpoints:
@@ -173,6 +188,142 @@ def run_real(args) -> None:
 
 
 # ---------------------------------------------------------------------------
+# observability subcommands
+# ---------------------------------------------------------------------------
+def _smoke_ids(svc, datadir, seed, *, tenants=2, n_small=4,
+               small_kb=200, big_kb=2048):
+    """Generate and submit a small mixed local workload; returns task ids."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    ids = []
+    for k in range(tenants):
+        tenant = f"tenant{k}"
+        items = []
+        for i in range(n_small):
+            p = os.path.join(datadir, f"{tenant}-small{i}.bin")
+            with open(p, "wb") as fh:
+                fh.write(rng.integers(
+                    0, 256, small_kb * 1024 + i, dtype=np.uint8).tobytes())
+            items.append((p, p + ".out"))
+        big = os.path.join(datadir, f"{tenant}-big.bin")
+        with open(big, "wb") as fh:
+            fh.write(rng.integers(0, 256, big_kb * 1024, dtype=np.uint8).tobytes())
+        items.append((big, big + ".out"))
+        ids += svc.submit(items, tenant=tenant, label="smoke")
+    return ids
+
+
+def render_top(svc) -> str:
+    """One ``transferd top`` frame: registry header + per-task metric rows."""
+    from repro.obs.metrics import REGISTRY
+
+    snap = REGISTRY.snapshot()
+    active = snap.get("service_active_tasks", {"series": {}})["series"]
+    act = ", ".join(
+        f"{k or 'default'}={int(v)}" for k, v in sorted(active.items())
+    ) or "-"
+    rows = [
+        f"tenants active: {act}",
+        f"{'task':26s} {'state':9s} {'prog':>5s} {'chunks':>9s} "
+        f"{'wire p50/p99 ms':>16s} {'vlag p99 ms':>11s} {'faults':>6s} {'retries':>7s}",
+    ]
+    for st in sorted(svc.tasks(), key=lambda s: s.task_id):
+        m = st.metrics or {}
+        faults = sum((m.get("faults") or {}).values())
+        chunks = f"{st.chunks_done}/{st.chunks_total}"
+        rows.append(
+            f"{st.task_id:26s} {st.state:9s} {st.progress * 100:4.0f}% "
+            f"{chunks:>9s} "
+            f"{m.get('wire_p50_s', 0.0) * 1e3:7.2f}/"
+            f"{m.get('wire_p99_s', 0.0) * 1e3:<8.2f} "
+            f"{m.get('verify_lag_p99_s', 0.0) * 1e3:11.2f} "
+            f"{faults:6.0f} {st.retries:7d}"
+        )
+    return "\n".join(rows)
+
+
+def top_main(argv) -> None:
+    ap = argparse.ArgumentParser(
+        prog="transferd top",
+        description="live snapshot of a draining local service")
+    ap.add_argument("--root", required=True, help="working directory")
+    ap.add_argument("--interval", type=float, default=0.25)
+    ap.add_argument("--frames", type=int, default=0,
+                    help="stop after N frames (0 = until all tasks drain)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    root = os.path.abspath(args.root)
+    datadir = os.path.join(root, "data")
+    os.makedirs(datadir, exist_ok=True)
+    svc = TransferService(os.path.join(root, "state"), ServiceConfig(
+        mover_budget=4, max_concurrent_tasks=2, chunk_bytes=128 * 1024,
+        batch=BatchConfig(direct_bytes=1 << 30, batch_files=8),
+    ))
+    try:
+        ids = _smoke_ids(svc, datadir, args.seed)
+        frames = 0
+        while True:
+            print(f"--- transferd top · frame {frames} ---")
+            print(render_top(svc))
+            frames += 1
+            if all(svc.status(i).done for i in ids):
+                break
+            if args.frames and frames >= args.frames:
+                break
+            time.sleep(args.interval)
+    finally:
+        svc.close()
+
+
+def trace_main(argv) -> None:
+    from repro.obs.clock import Clock
+    from repro.obs.trace import Tracer
+
+    ap = argparse.ArgumentParser(
+        prog="transferd trace",
+        description="run a workload under the span tracer and export a "
+                    "Chrome/Perfetto trace_event JSON")
+    ap.add_argument("--export", required=True, metavar="FILE")
+    ap.add_argument("--real", default=None, metavar="DIR",
+                    help="trace a real local smoke run instead of the "
+                         "virtual testbed (which is deterministic per seed)")
+    ap.add_argument("--small", type=int, default=40, help="# small testbed files")
+    ap.add_argument("--large", type=int, default=2, help="# large testbed files")
+    ap.add_argument("--chaos", nargs="?", default=None,
+                    const="corrupt_1_per_TiB+kill_2_movers+outage_at_50pct",
+                    help="scenario DSL for the testbed (bare --chaos uses "
+                         "the standard compound scenario)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.real:
+        root = os.path.abspath(args.real)
+        datadir = os.path.join(root, "data")
+        os.makedirs(datadir, exist_ok=True)
+        svc = TransferService(os.path.join(root, "state"), ServiceConfig(
+            mover_budget=4, max_concurrent_tasks=2, chunk_bytes=128 * 1024,
+            batch=BatchConfig(direct_bytes=1 << 30, batch_files=8),
+        ))
+        try:
+            svc.wait_all(_smoke_ids(svc, datadir, args.seed), timeout=300)
+            tracer = svc.tracer
+        finally:
+            svc.close()
+    else:
+        from repro.faults import parse_scenario
+
+        tracer = Tracer(clock=Clock(lambda: 0.0, virtual=True))
+        run_load(
+            mixed_workload(n_small=args.small, n_large=args.large),
+            scenario=parse_scenario(args.chaos) if args.chaos else None,
+            seed=args.seed, tracer=tracer,
+        )
+    path = tracer.export(args.export)
+    print(f"exported {len(tracer.spans())} spans "
+          f"({len(tracer.tasks())} tasks) -> {path}")
+
+
+# ---------------------------------------------------------------------------
 # fabric subcommands
 # ---------------------------------------------------------------------------
 def _load_topology(spec: str, fanout: int):
@@ -316,6 +467,12 @@ def main(argv=None):
         argv = sys.argv[1:]
     if argv and argv[0] == "fabric":
         fabric_main(argv[1:])
+        return None
+    if argv and argv[0] == "top":
+        top_main(argv[1:])
+        return None
+    if argv and argv[0] == "trace":
+        trace_main(argv[1:])
         return None
     ap = argparse.ArgumentParser(prog="transferd", description=__doc__)
     ap.add_argument("--policy", default="all", choices=POLICIES + ("all",))

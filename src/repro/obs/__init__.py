@@ -1,0 +1,18 @@
+"""Observability layer: tracing, metrics, flight recorder, attribution.
+
+Zero-dependency, threaded through every subsystem. See README
+"Observability" for the span model and the Perfetto workflow.
+"""
+from .attr import Attribution, attribute, by_group, report
+from .clock import Clock, mono_s, wall_s
+from .metrics import REGISTRY, Counter, Gauge, Histogram, Registry, delta
+from .recorder import FlightRecorder, journal_tail_summary
+from .trace import CATEGORIES, NULL, NullTracer, Span, Tracer
+
+__all__ = [
+    "Attribution", "attribute", "by_group", "report",
+    "Clock", "mono_s", "wall_s",
+    "REGISTRY", "Counter", "Gauge", "Histogram", "Registry", "delta",
+    "FlightRecorder", "journal_tail_summary",
+    "CATEGORIES", "NULL", "NullTracer", "Span", "Tracer",
+]

@@ -18,12 +18,12 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 from typing import Any
 
 import numpy as np
 
 from repro.ckpt.checkpoint import SaveReport, _flatten
+from repro.obs.clock import mono_s, wall_s
 from repro.service.task import SUCCEEDED, TaskStatus
 
 
@@ -37,7 +37,10 @@ class CheckpointSubmission:
     tmp_dir: str
     final_dir: str
     leaf_meta: list[tuple[str, tuple[int, ...], str]]   # (key, shape, dtype)
-    submitted_s: float
+    submitted_s: float          # wall-clock timestamp (display only)
+    t0_mono: float = 0.0        # monotonic mark: elapsed-time math only —
+    #                             wall clock steps (NTP slew) must not be
+    #                             able to produce a negative save duration
 
     def status(self) -> TaskStatus:
         return self.service.status(self.task_id)
@@ -73,7 +76,7 @@ class CheckpointSubmission:
             step=self.step,
             path=self.final_dir,
             total_bytes=total,
-            seconds=time.time() - self.submitted_s,
+            seconds=mono_s() - self.t0_mono,
             n_leaves=len(self.leaf_meta),
             resumed_chunks=st.resumed_chunks,
         )
@@ -116,5 +119,6 @@ def submit_checkpoint(
         tmp_dir=tmp,
         final_dir=final,
         leaf_meta=leaf_meta,
-        submitted_s=time.time(),
+        submitted_s=wall_s(),
+        t0_mono=mono_s(),
     )

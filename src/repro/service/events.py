@@ -4,14 +4,19 @@ Subscribers get every TaskEvent in emission order. Callbacks run on service
 threads, so they must be quick and must not raise; a raising subscriber is
 isolated (the error is recorded, other subscribers still fire). A bounded
 ring buffer keeps recent history for late joiners / tests.
+
+Event payloads may carry a ``span`` key — the obs.trace span id of the
+interval the event describes (fault events name their stall span, terminal
+events the task's root span), linking the event stream to exported traces.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import threading
-import time
 from typing import Any, Callable
+
+from repro.obs.clock import wall_s
 
 # event kinds
 SUBMITTED = "SUBMITTED"
@@ -65,7 +70,7 @@ class EventBus:
 
     def emit(self, kind: str, task_id: str, tenant: str, **payload: Any) -> TaskEvent:
         with self._lock:
-            ev = TaskEvent(self._seq, time.time(), kind, task_id, tenant, payload)
+            ev = TaskEvent(self._seq, wall_s(), kind, task_id, tenant, payload)
             self._seq += 1
             self._history.append(ev)
             subs = list(self._subs)

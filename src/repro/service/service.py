@@ -57,6 +57,10 @@ from repro.core.dataplane import (
 )
 from repro.core.journal import ChunkJournal, JournalRecord
 from repro.core.scheduler import TransferRequest
+from repro.obs import metrics as obsmetrics
+from repro.obs.clock import mono_s, wall_s
+from repro.obs.recorder import FlightRecorder
+from repro.obs.trace import Tracer
 from repro.core.simulator import ALCF, DEFAULT_LINK, NERSC, LinkConfig, SiteConfig
 from repro.core.transfer import (
     BufferSource,
@@ -166,6 +170,12 @@ class _Task:
         self.state = tk.PENDING
         self.error: str | None = None
         self.lock = threading.Lock()
+        # observability: per-worker lane ids, queue-entry timestamps (queue-
+        # wait spans), the task's monotonic activation mark and root span id
+        self.worker_seq = 0
+        self.enq_t: dict[int, float] = {}
+        self.t0_mono: float | None = None
+        self.root_sid = 0
         self.pause_evt = threading.Event()
         self.cancel_evt = threading.Event()
         self.target_movers = 1
@@ -249,10 +259,33 @@ class TransferService:
         fault_injector: Callable[[str, int, Any, int], None] | None = None,
         source_wrapper: Callable[[str, int, ByteSource], ByteSource] | None = None,
         dest_wrapper: Callable[[str, int, ByteDest], ByteDest] | None = None,
+        tracer: Tracer | None = None,
     ):
         self.config = config or ServiceConfig()
         self.store = TaskStore(root)
         self.events = EventBus()
+        # observability: a bounded span tracer, a flight recorder fed from
+        # the event stream (auto-dumps a post-mortem bundle next to the task
+        # log when a fault fails a task), and per-task metric families
+        self.tracer = tracer if tracer is not None else Tracer()
+        self.recorder = FlightRecorder(
+            tracer=self.tracer,
+            dump_dir=os.path.join(str(root), "flight"))
+        self.events.subscribe(
+            lambda e: self.recorder.record(
+                e.task_id, e.kind, e.payload, t=e.time_s))
+        self._m_chunks = obsmetrics.REGISTRY.counter(
+            "service_chunks_total", "landed chunks", ("tenant", "task"))
+        self._m_bytes = obsmetrics.REGISTRY.counter(
+            "service_bytes_total", "landed bytes", ("tenant", "task"))
+        self._m_faults = obsmetrics.REGISTRY.counter(
+            "service_faults_total", "chunk-level fault observations",
+            ("tenant", "task", "kind"))
+        self._m_wire = obsmetrics.REGISTRY.histogram(
+            "service_chunk_wire_seconds",
+            "fault-excluded per-chunk mover time", ("task",), scale=1e-4)
+        self._m_active = obsmetrics.REGISTRY.gauge(
+            "service_active_tasks", "tasks in ACTIVE state", ("tenant",))
         self.batcher = Batcher(self.config.batch)
         self.engine = AllocationEngine(
             policy=self.config.policy,
@@ -308,7 +341,7 @@ class TransferService:
                 # in-memory sources died with the previous process
                 t.state = tk.FAILED
                 t.error = "ephemeral source lost across service restart"
-                t.finished_s = time.time()
+                t.finished_s = wall_s()
                 self.store.append_state(task_id, tk.FAILED, t.error)
                 self._tasks[task_id] = t
                 self.events.emit(ev.FAILED, task_id, rec.spec.tenant, error=t.error)
@@ -573,13 +606,20 @@ class TransferService:
             t = self._tasks[task_id]
             self._served[t.spec.tenant] = self._served.get(t.spec.tenant, 0) + 1
             self._transition(t, tk.ACTIVE)
-            t.started_s = t.started_s or time.time()
+            t.started_s = t.started_s or wall_s()
+            t.t0_mono = mono_s()
+            # the root span id rides on every task-level event so an event
+            # stream entry can be located inside an exported trace
+            t.root_sid = self.tracer.mark(
+                "activated", "task", task=task_id, tenant=t.spec.tenant)
+            self._m_active.add(1, tenant=t.spec.tenant)
             runner = threading.Thread(
                 target=self._run_task, args=(t,), name=f"runner-{task_id}", daemon=True
             )
             self._runners[task_id] = runner
             runner.start()
-            self.events.emit(ev.ACTIVATED, task_id, t.spec.tenant)
+            self.events.emit(ev.ACTIVATED, task_id, t.spec.tenant,
+                             span=t.root_sid)
             self._alloc_dirty = True
 
     def _allocation_requests_locked(self) -> list[tuple[str, str, TransferRequest]]:
@@ -644,7 +684,7 @@ class TransferService:
                     base = t.chunk_base[i]
                     for c in plan.chunks:
                         if base + c.index not in recs:
-                            work.put((base + c.index, i, c))
+                            self._enq(t, work, (base + c.index, i, c))
                             n_work += 1
             else:
                 per_item: dict[int, list] = {i: [] for i in range(len(t.spec.items))}
@@ -671,7 +711,7 @@ class TransferService:
                         )
                         t.next_tune_seq[i] += len(fresh)
                     for c in fresh:
-                        work.put((t.tune_gidx(i, c.index), i, c))
+                        self._enq(t, work, (t.tune_gidx(i, c.index), i, c))
                         n_work += 1
                 with t.lock:
                     t.chunks_total = len(recs) + n_work
@@ -696,6 +736,7 @@ class TransferService:
                     on_corrupt=lambda job, actual, lag: self._verify_fail(
                         t, work, job),
                     on_error=lambda job, exc: self._verify_error(t, job, exc),
+                    tracer=self.tracer, task=task_id,
                 )
 
             reason = self._drive_workers(t, work, journal, jlock, n_work)
@@ -761,8 +802,10 @@ class TransferService:
                 short = want - t.n_workers
                 for _ in range(max(0, short)):
                     t.n_workers += 1
+                    t.worker_seq += 1
                     threading.Thread(
-                        target=self._worker, args=(t, work, journal, jlock),
+                        target=self._worker,
+                        args=(t, work, journal, jlock, t.worker_seq),
                         daemon=True,
                     ).start()
             time.sleep(self.config.tick_s)
@@ -830,7 +873,9 @@ class TransferService:
             old = t.chunk_bytes_now
             t.chunk_bytes_now = int(new_bytes)
         for e in entries:
-            work.put(e)
+            self._enq(t, work, e)
+        self.tracer.mark("replan", "plan", task=t.spec.task_id,
+                         chunk_bytes=int(new_bytes), recut=len(entries))
         self.events.emit(
             ev.TUNE, t.spec.task_id, t.spec.tenant,
             old_chunk_bytes=old, chunk_bytes=int(new_bytes),
@@ -851,7 +896,13 @@ class TransferService:
             self._replan_task(t, work, new, rate_Bps=sample.rate_Bps,
                               cksum_lag_s=sample.cksum_lag_s)
 
-    def _worker(self, t: _Task, work, journal, jlock) -> None:
+    def _enq(self, t: _Task, work, entry) -> None:
+        """Queue a work entry, timestamping it for the queue-wait span."""
+        t.enq_t[entry[0]] = mono_s()
+        work.put(entry)
+
+    def _worker(self, t: _Task, work, journal, jlock, wid: int = 0) -> None:
+        lane = f"mover{wid}"
         try:
             while True:
                 if (
@@ -869,8 +920,15 @@ class TransferService:
                     gidx, item_idx, chunk = work.get_nowait()
                 except queue.Empty:
                     return
+                enq = t.enq_t.get(gidx)
+                if enq is not None:
+                    self.tracer.add(
+                        "queue_wait", "queue", enq, mono_s(),
+                        task=t.spec.task_id, lane=lane,
+                        offset=chunk.offset, item=item_idx)
                 try:
-                    digest, sample = self._move_chunk(t, item_idx, chunk)
+                    digest, sample = self._move_chunk(t, item_idx, chunk,
+                                                      lane=lane)
                 except MoverCrash as e:
                     # the mover thread dies; the chunk survives it. Re-queue
                     # the chunk for the remaining movers (the driver tops the
@@ -884,13 +942,15 @@ class TransferService:
                                 f"({t.mover_deaths} > {self.config.max_mover_deaths})"
                             )
                             t.fault = self._fault_report(t, "mover_death", item_idx, chunk, e)
+                    self._m_faults.inc(1, tenant=t.spec.tenant,
+                                       task=t.spec.task_id, kind="mover_death")
                     self.events.emit(
                         ev.FAULT, t.spec.task_id, t.spec.tenant,
                         fault="mover_death", item=item_idx, chunk=chunk.index,
-                        fatal=over,
+                        fatal=over, span=t.root_sid,
                     )
                     if not over:
-                        work.put((gidx, item_idx, chunk))
+                        self._enq(t, work, (gidx, item_idx, chunk))
                     return
                 except Exception as e:  # noqa: BLE001
                     with t.lock:
@@ -943,6 +1003,12 @@ class TransferService:
                 )
                 t.fault = self._fault_report(t, "io", item_idx, chunk, e)
             return False
+        self.tracer.add("journal_append", "journal", t_j, time.perf_counter(),
+                        task=t.spec.task_id, lane="journal",
+                        offset=chunk.offset, item=item_idx)
+        self._m_chunks.inc(1, tenant=t.spec.tenant, task=t.spec.task_id)
+        self._m_bytes.inc(chunk.length, tenant=t.spec.tenant,
+                          task=t.spec.task_id)
         with self._lock:
             self.moved_chunks += 1
         with t.lock:
@@ -1002,13 +1068,15 @@ class TransferService:
                     f"(offset={chunk.offset}): {exc}"
                 )
                 t.fault = self._fault_report(t, "corruption", item_idx, chunk, exc)
+        self._m_faults.inc(1, tenant=t.spec.tenant, task=t.spec.task_id,
+                           kind="corruption")
         self.events.emit(
             ev.FAULT, t.spec.task_id, t.spec.tenant,
             fault="corruption", item=item_idx, chunk=chunk.index,
-            deferred=True, fatal=over,
+            deferred=True, fatal=over, span=t.root_sid,
         )
         if not over:
-            work.put((gidx, item_idx, chunk))
+            self._enq(t, work, (gidx, item_idx, chunk))
 
     def _verify_error(self, t: _Task, job: VerifyJob, exc: BaseException) -> None:
         gidx, item_idx, chunk, _sample = job.payload
@@ -1030,7 +1098,8 @@ class TransferService:
             outages=t.outages, mover_deaths=t.mover_deaths,
         )
 
-    def _move_chunk(self, t: _Task, item_idx: int, chunk):
+    def _move_chunk(self, t: _Task, item_idx: int, chunk, *,
+                    lane: str = "mover0"):
         """One chunk: read -> fingerprint -> write -> read-back verify, with
         per-failure-class recovery budgets (chunk-granular fault recovery):
 
@@ -1086,6 +1155,18 @@ class TransferService:
                             f"read-back digest mismatch ({item.dst} @ {chunk.offset})"
                         )
                 now = time.perf_counter()
+                # retroactive spans: the successful attempt minus its inline
+                # checksum share is wire; the checksum share sits at the tail
+                wire_end = max(t_att, now - cksum_s)
+                tid = t.spec.task_id
+                self.tracer.add("move", "wire", t_att, wire_end, task=tid,
+                                lane=lane, offset=chunk.offset, item=item_idx,
+                                attempt=attempts)
+                if cksum_s > 0.0:
+                    self.tracer.add("cksum_inline", "cksum", wire_end, now,
+                                    task=tid, lane=lane, offset=chunk.offset,
+                                    item=item_idx)
+                self._m_wire.observe(signal_s + (now - t_att), task=tid)
                 return digest, ChunkSample(
                     offset=chunk.offset, length=chunk.length,
                     seconds=now - t0,
@@ -1100,10 +1181,17 @@ class TransferService:
                 with t.lock:
                     t.retries += 1
                     t.refetches += 1
+                sid = self.tracer.add(
+                    "refetch", "stall", t_att, time.perf_counter(),
+                    task=t.spec.task_id, lane=lane, offset=chunk.offset,
+                    item=item_idx, attempt=attempts)
+                self._m_faults.inc(1, tenant=t.spec.tenant,
+                                   task=t.spec.task_id, kind="corruption")
                 self.events.emit(
                     ev.FAULT, t.spec.task_id, t.spec.tenant,
                     fault="corruption", item=item_idx, chunk=chunk.index,
                     attempt=attempts, fatal=refetches > self.config.max_refetches,
+                    span=sid,
                 )
                 if refetches > self.config.max_refetches:
                     raise
@@ -1111,17 +1199,35 @@ class TransferService:
                 outages += 1
                 with t.lock:
                     t.outages += 1
+                over = outages > self.config.outage_retries
+                if not over:
+                    time.sleep(self.config.retry_backoff_s * min(outages, 8))
+                # the rejected op plus its backoff is fault recovery, not
+                # congestion (the tuner's fault-exclusion rule)
+                sid = self.tracer.add(
+                    "outage_wait", "stall", t_att, time.perf_counter(),
+                    task=t.spec.task_id, lane=lane, offset=chunk.offset,
+                    item=item_idx)
+                self._m_faults.inc(1, tenant=t.spec.tenant,
+                                   task=t.spec.task_id, kind="outage")
                 self.events.emit(
                     ev.FAULT, t.spec.task_id, t.spec.tenant,
                     fault="outage", item=item_idx, chunk=chunk.index,
-                    attempt=attempts, fatal=outages > self.config.outage_retries,
+                    attempt=attempts, fatal=over, span=sid,
                 )
-                if outages > self.config.outage_retries:
+                if over:
                     raise
-                time.sleep(self.config.retry_backoff_s * min(outages, 8))
             except Exception:
                 generic += 1
-                signal_s += time.perf_counter() - t_att   # congestion-like
+                now = time.perf_counter()
+                signal_s += now - t_att   # congestion-like
+                # generic retries ARE the path slowing down: wire, not stall
+                sid = self.tracer.add(
+                    "move_retry", "wire", t_att, now, task=t.spec.task_id,
+                    lane=lane, offset=chunk.offset, item=item_idx,
+                    attempt=attempts)
+                self._m_faults.inc(1, tenant=t.spec.tenant,
+                                   task=t.spec.task_id, kind="generic")
                 if generic > self.config.max_retries:
                     raise
                 with t.lock:
@@ -1129,6 +1235,7 @@ class TransferService:
                 self.events.emit(
                     ev.RETRY, t.spec.task_id, t.spec.tenant,
                     item=item_idx, chunk=chunk.index, attempt=attempts,
+                    span=sid,
                 )
                 time.sleep(self.config.retry_backoff_s * (2 ** (generic - 1)))
 
@@ -1229,24 +1336,65 @@ class TransferService:
                 state = tk.PENDING      # resume() raced the pause drain
             self._transition(t, state, error)
             if state in tk.TERMINAL:
-                t.finished_s = time.time()
+                t.finished_s = wall_s()
             if state == tk.SUCCEEDED:
                 t.item_reports = reports
             self._alloc_dirty = True
             self._cond.notify_all()
+        if t.t0_mono is not None:
+            # task root span: the makespan window obs.attr sweeps by default
+            self.tracer.add("task", "task", t.t0_mono, mono_s(),
+                            task=t.spec.task_id, tenant=t.spec.tenant,
+                            state=state)
+            self._m_active.add(-1, tenant=t.spec.tenant)
+            t.t0_mono = None
         kind = {
             tk.SUCCEEDED: ev.SUCCEEDED, tk.FAILED: ev.FAILED,
             tk.CANCELED: ev.CANCELED, tk.PAUSED: ev.PAUSED,
             tk.PENDING: ev.RESUMED,     # pause withdrawn mid-drain
         }[state]
-        payload: dict[str, Any] = {"chunks_done": t.chunks_done}
+        payload: dict[str, Any] = {"chunks_done": t.chunks_done,
+                                   "span": t.root_sid}
         if error:
             payload["error"] = error
         if state == tk.FAILED and t.fault is not None:
             payload["fault"] = t.fault.to_json()
         self.events.emit(kind, t.spec.task_id, t.spec.tenant, **payload)
+        if state == tk.FAILED and t.fault is not None:
+            # post-mortem flight-recorder bundle: the event ring, the faulted
+            # chunk's span chain, a metrics snapshot, and the journal tail
+            try:
+                self.recorder.dump(
+                    t.spec.task_id, t.fault.kind, offset=t.fault.offset,
+                    journal_path=self.store.journal_path(t.spec.task_id),
+                    extra={"error": t.fault.error,
+                           "chunk": t.fault.chunk, "item": t.fault.item})
+            except Exception:  # noqa: BLE001 — a failing dump must never
+                pass           # mask the task failure it is documenting
+
+    def _task_metrics(self, t: _Task) -> dict[str, Any]:
+        """The TaskStatus ``metrics`` view: per-task registry readout."""
+        tid = t.spec.task_id
+        ten = t.spec.tenant
+        lag = obsmetrics.REGISTRY.histogram(
+            "verify_lag_seconds", "move-landed -> verified delay",
+            ("task",), scale=1e-5)
+        return {
+            "chunks": self._m_chunks.value(tenant=ten, task=tid),
+            "bytes": self._m_bytes.value(tenant=ten, task=tid),
+            "wire_p50_s": round(self._m_wire.quantile(0.5, task=tid), 6),
+            "wire_p99_s": round(self._m_wire.quantile(0.99, task=tid), 6),
+            "verify_lag_p50_s": round(lag.quantile(0.5, task=tid), 6),
+            "verify_lag_p99_s": round(lag.quantile(0.99, task=tid), 6),
+            "faults": {
+                kind: self._m_faults.value(tenant=ten, task=tid, kind=kind)
+                for kind in ("corruption", "outage", "generic", "mover_death")
+            },
+            "spans": len(self.tracer.spans(tid)),
+        }
 
     def _snapshot(self, t: _Task) -> TaskStatus:
+        metrics_view = self._task_metrics(t)
         with t.lock:
             return TaskStatus(
                 task_id=t.spec.task_id,
@@ -1276,4 +1424,5 @@ class TransferService:
                 pipeline=self.config.pipeline,
                 cksum_seconds=round(t.cksum_s, 6),
                 cksum_lag_s=round(t.cksum_lag_s, 6),
+                metrics=metrics_view,
             )

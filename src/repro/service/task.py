@@ -21,8 +21,9 @@ ensures already-moved chunks are never moved again.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any
+
+from repro.obs.clock import wall_s
 
 # ---------------------------------------------------------------------------
 # States
@@ -93,7 +94,7 @@ class TaskSpec:
     # per-task tuning policy: "auto" closes the chunk-size loop over this
     # task's tail, "static" pins the plan; None defers to the service default
     tuning: str | None = None
-    submitted_s: float = dataclasses.field(default_factory=time.time)
+    submitted_s: float = dataclasses.field(default_factory=wall_s)
 
     @property
     def durable(self) -> bool:
@@ -220,6 +221,10 @@ class TaskStatus:
     cksum_seconds: float = 0.0   # checksum work on the mover path (cumulative)
     cksum_lag_s: float = 0.0     # deferred-verification lag (cumulative; the
     #                              distance integrity ran behind movement)
+    # observability view: per-task numbers pulled from the obs metrics
+    # registry at snapshot time (wire-time quantiles, verify lag, retry
+    # counts by class) — what ``transferd top`` renders per row
+    metrics: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def done(self) -> bool:

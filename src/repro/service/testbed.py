@@ -160,8 +160,14 @@ def run_load(
     integrity: bool = True,
     scenario: Scenario | None = None,
     seed: int = 0,
+    tracer=None,
 ) -> LoadReport:
-    """Drive the service scheduling stack over a workload in virtual time."""
+    """Drive the service scheduling stack over a workload in virtual time.
+
+    ``tracer`` (an ``obs.trace.Tracer``) receives one deterministic span set
+    per task — queue wait, fluid drain, outage stalls — stamped with VIRTUAL
+    timestamps, so two same-seed runs export byte-identical traces.
+    """
     if max_concurrent > mover_budget:
         raise ValueError("max_concurrent must be <= mover_budget")
     engine = AllocationEngine(
@@ -207,6 +213,7 @@ def run_load(
     if scenario is not None and scenario.outage_at_frac is not None:
         outage_at = scenario.outage_at_frac * grand_total
     outage_win: Window | None = None
+    outage_log: list[tuple[float, float]] = []   # closed windows, for spans
     moved_bytes = 0.0
 
     pending: list[SimTask] = []
@@ -303,6 +310,7 @@ def run_load(
             flog.outage_s = scenario.outage_s
             outage_at = None
         if outage_win is not None and clock.now >= outage_win.end - 1e-12:
+            outage_log.append((outage_win.start, outage_win.end))
             outage_win = None
         done_now = [a for a in active if a.remaining_bytes <= 1e-6]
         for a in done_now:
@@ -310,6 +318,34 @@ def run_load(
             a.remaining_bytes = 0.0
             active.remove(a)
             finished.append(a)
+
+    if outage_win is not None:
+        outage_log.append((outage_win.start, min(outage_win.end, clock.now)))
+
+    # ---- deterministic trace emission (virtual timestamps, seq order)
+    if tracer is not None:
+        for t in sorted(finished, key=lambda t: t.seq):
+            end = t.done_s if t.done_s is not None else clock.now
+            start = t.start_s if t.start_s is not None else end
+            tracer.add(
+                "queue_wait", "queue", t.submit_s, start,
+                task=t.task_id, lane="scheduler", tenant=t.tenant,
+            )
+            tracer.add(
+                "drain", "wire", start, end, task=t.task_id, lane="fluid",
+                tenant=t.tenant, bytes=t.total_bytes,
+            )
+            for (o0, o1) in outage_log:
+                lo, hi = max(o0, start), min(o1, end)
+                if hi > lo:
+                    tracer.add(
+                        "outage", "stall", lo, hi, task=t.task_id,
+                        lane="fluid", kind="outage",
+                    )
+            tracer.add(
+                "task", "task", t.submit_s, end, task=t.task_id,
+                tenant=t.tenant, state="SUCCEEDED",
+            )
 
     total_bytes = sum(t.total_bytes for t in tasks)
     t0 = min((t.submit_s for t in tasks), default=0.0)

@@ -34,6 +34,7 @@ import threading
 import time
 
 from repro.core.transfer import ByteDest, ByteSource
+from repro.obs.clock import mono_s
 
 
 def precise_sleep(dt: float) -> None:
@@ -45,9 +46,9 @@ def precise_sleep(dt: float) -> None:
     interval coarsely, then yield-spin to the deadline: elapsed time is
     >= dt and within a hair of it, independent of timer resolution.
     """
-    deadline = time.perf_counter() + dt
+    deadline = mono_s() + dt
     while True:
-        remaining = deadline - time.perf_counter()
+        remaining = deadline - mono_s()
         if remaining <= 0:
             return
         if remaining > 0.001:
@@ -115,7 +116,7 @@ class StepPath:
         self.progress_bytes = 0        # successfully landed bytes (monotone)
         self.failed_reads = 0
         self.phase_changes: list[float] = []   # progress fracs where it switched
-        self.phase_change_walls: list[float] = []   # perf_counter() at switch
+        self.phase_change_walls: list[float] = []   # mono_s() at switch
         self._last_phase: Phase | None = None
 
     def _phase(self) -> Phase:
@@ -124,7 +125,7 @@ class StepPath:
         if p is not self._last_phase:
             if self._last_phase is not None:
                 self.phase_changes.append(frac)
-                self.phase_change_walls.append(time.perf_counter())
+                self.phase_change_walls.append(mono_s())
             self._last_phase = p
         return p
 

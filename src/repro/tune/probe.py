@@ -120,3 +120,48 @@ class TransferProbe:
         """Fault-excluded aggregate rate of one epoch's samples."""
         secs = sum(s.attempt_seconds for s in samples)
         return sum(s.length for s in samples) / secs if secs > 0 else 0.0
+
+
+def sample_from_chain(chain, *, length: int = 0) -> ChunkSample:
+    """Derive one ChunkSample from a chunk's ``obs.trace`` span chain.
+
+    ``chain`` is what ``Tracer.chunk_chain(task, offset)`` returns: the
+    time-ordered spans carrying this chunk's offset. The mapping enforces the
+    probe's fault-exclusion rule span-categorically — ``wire`` spans (the
+    landing move plus congestion-like generic retries) feed
+    ``attempt_seconds``; ``stall`` spans (corruption re-fetch, outage waits)
+    are counted but excluded; inline ``cksum`` spans feed ``cksum_seconds``
+    and ``cksum_wait`` spans feed ``cksum_lag_s``. This lets replayed traces
+    re-drive the controller with exactly the telemetry the live probe saw.
+    """
+    if not chain:
+        raise ValueError("empty span chain")
+    offset = int(chain[0].arg("offset", 0))
+    wire_s = cksum_s = lag_s = stall_s = 0.0
+    attempts = 1
+    refetches = 0
+    mover = 0
+    t_end = 0.0
+    for sp in chain:
+        t_end = max(t_end, sp.t1)
+        if sp.cat == "wire":
+            wire_s += sp.dur
+            attempts = max(attempts, int(sp.arg("attempt", 1)))
+            if sp.lane.startswith("mover") and sp.lane[5:].isdigit():
+                mover = int(sp.lane[5:])
+        elif sp.cat == "cksum":
+            if sp.name != "verify":        # off-path verification is lag-side
+                cksum_s += sp.dur
+        elif sp.cat == "cksum_wait":
+            lag_s += sp.dur
+        elif sp.cat == "stall":
+            stall_s += sp.dur
+            if sp.arg("kind", "") == "corruption" or sp.name == "refetch":
+                refetches += 1
+    return ChunkSample(
+        offset=offset, length=length,
+        seconds=wire_s + cksum_s + stall_s,
+        attempt_seconds=wire_s + cksum_s,
+        cksum_seconds=cksum_s, cksum_lag_s=lag_s,
+        attempts=attempts, refetches=refetches, mover=mover, t_end=t_end,
+    )
