@@ -64,7 +64,10 @@ from repro.core import (
     BufferSource,
     ChunkJournal,
     ChunkedTransfer,
+    IntegrityEngine,
+    VerifyJob,
     fingerprint_bytes,
+    fingerprint_many,
     plan_chunks,
 )
 from repro.core import integrity as integrity_mod
@@ -459,13 +462,322 @@ def virtual_rows():
     return rows
 
 
+# ---------------------------------------------------------------------------
+# striped mode (--striped): intra-chunk striping + fused batch integrity
+# ---------------------------------------------------------------------------
+class PerStreamThrottledDest:
+    """BufferDest where EACH writer thread has its own wire rating.
+
+    This is the per-stream-bottleneck shape intra-chunk striping exists for
+    (per-TCP-stream pacing, per-OST bandwidth caps): a single mover tops out
+    at ``stream_rate_Bps`` no matter how fast the path's aggregate is, while
+    N concurrent stripe movers each get a full stream's worth. Token-bucket
+    pacing per thread, same >=20 ms sleep quanta as ThrottledDest."""
+
+    def __init__(self, total_bytes: int, stream_rate_Bps: float):
+        self._inner = BufferDest(total_bytes)
+        self.rate_Bps = stream_rate_Bps
+        self._local = threading.local()
+
+    @property
+    def buf(self):
+        return self._inner.buf
+
+    def write(self, offset, data):
+        debt = getattr(self._local, "debt", 0.0) + len(data) / self.rate_Bps
+        if debt >= 0.02:
+            t0 = time.perf_counter()
+            time.sleep(debt)
+            debt -= time.perf_counter() - t0
+        self._local.debt = debt
+        self._inner.write(offset, data)
+
+    def read_back(self, offset, length):          # dest-local re-read: full speed
+        return self._inner.read_back(offset, length)
+
+    def read_back_into(self, offset, view):
+        return self._inner.read_back_into(offset, view)
+
+    def read_back_view(self, offset, length):
+        return self._inner.read_back_view(offset, length)
+
+
+def stripe_goodput_rows(payload: bytes, stream_frac: float, gate: float,
+                        violations: list[str], *, seed: int = 0,
+                        reps: int = 3, stripes: int = 4, attempts: int = 2):
+    """Striped vs single-stream pipelined movement of ONE large chunk on a
+    per-stream-rated wire. Same chunk boundaries, same verify capacity —
+    the only variable is whether the chunk crosses as one stream or as
+    ``stripes`` concurrent sub-streams. Gate: striped >= ``gate``x."""
+    chunk = len(payload)
+    rows: list[tuple[str, float, str]] = []
+    for attempt in range(attempts):
+        cksum_Bps = host_cksum_rate_Bps(seed)
+        rate = stream_frac * cksum_Bps
+        best = {"single": 0.0, "striped": 0.0}
+        escapes = 0
+        striped_chunks = 0
+        for _ in range(reps):
+            for leg, n_str in (("single", 1), ("striped", stripes)):
+                plan = plan_chunks(chunk, max(1, n_str), chunk_bytes=chunk,
+                                   min_chunk=1, max_chunk=1 << 40)
+                dst = PerStreamThrottledDest(chunk, rate)
+                eng = ChunkedTransfer(
+                    BufferSource(payload), dst, plan, pipeline="pipelined",
+                    integrity_workers=stripes, stripes=n_str,
+                    stripe_min_bytes=MiB)
+                t0 = time.perf_counter()
+                rep = eng.run()
+                dt = time.perf_counter() - t0
+                best[leg] = max(best[leg], chunk / dt)
+                escapes += int(bytes(dst.buf) != payload)
+                if leg == "striped":
+                    striped_chunks = rep.striped_chunks
+        speedup = best["striped"] / best["single"]
+        rows = [
+            ("stripe/goodput/host_cksum_MBps", round(cksum_Bps / 1e6, 1), "MB/s"),
+            ("stripe/goodput/stream_rate_MBps", round(rate / 1e6, 1), "MB/s"),
+            ("stripe/goodput/chunk_MB", round(chunk / 1e6), "MB"),
+            ("stripe/goodput/stripes", stripes, "streams"),
+            ("stripe/goodput/striped_chunks", striped_chunks, "chunks"),
+            ("stripe/goodput/single_MBps", round(best["single"] / 1e6, 2), "MB/s"),
+            ("stripe/goodput/striped_MBps", round(best["striped"] / 1e6, 2), "MB/s"),
+            ("stripe/goodput/speedup", round(speedup, 3), "x"),
+            ("stripe/goodput/escapes", escapes, "transfers"),
+        ]
+        if escapes:
+            violations.append(f"stripe goodput: {escapes} integrity escapes")
+            break
+        if not striped_chunks:
+            violations.append("stripe goodput: striping never engaged")
+            break
+        if speedup >= gate:
+            break
+        if attempt == attempts - 1:
+            violations.append(
+                f"stripe goodput: striped/single {speedup:.2f}x < {gate}x gate")
+        else:
+            print(f"# stripe goodput {speedup:.2f}x < {gate}x — re-measuring "
+                  "once (shared-CPU steal window?)")
+    return rows
+
+
+def fused_drain_rows(seed: int, violations: list[str], *, jobs: int = 512,
+                     granule: int = 64 * 1024, reps: int = 5,
+                     attempts: int = 2, gate: float = 1.2):
+    """Fused batch integrity vs per-chunk host calls at the engine drain.
+
+    The same ``jobs`` equal-length verify jobs drain through one checksum
+    worker twice: ``fuse=False`` digests each landed granule with its own
+    host call; ``fuse=True`` collects up to a batch per drain pass and
+    dispatches ONE stacked GEMM over all of them (``fingerprint_rows``).
+    The small-granule regime is exactly where a degraded hop's autotuned
+    granule lands — and where per-call overhead bites. Gate: >= ``gate``x."""
+    total = jobs * granule
+    payload = _payload(seed + 9, total)
+    dst = BufferDest(total)
+    dst.write(0, payload)
+    expected = fingerprint_many(
+        [payload[i * granule:(i + 1) * granule] for i in range(jobs)])
+
+    def drain_s(fuse: bool) -> tuple[float, int]:
+        errs: list[str] = []
+        eng = IntegrityEngine(
+            workers=1, fuse=fuse, batch=64,
+            on_verified=lambda j, l, c: None,
+            on_corrupt=lambda j, a, l: errs.append(f"corrupt {j.key}"),
+            on_error=lambda j, e: errs.append(f"error {j.key}: {e}"),
+        )
+        t0 = time.perf_counter()
+        for i in range(jobs):
+            eng.submit(VerifyJob(key=i, offset=i * granule, length=granule,
+                                 expected=expected[i], dest=dst,
+                                 enqueued_s=time.perf_counter()))
+        if not eng.drain(timeout=120.0):
+            errs.append("drain timed out")
+        dt = time.perf_counter() - t0
+        fused_batches = eng.stats.fused_batches
+        eng.close()
+        if errs:
+            raise RuntimeError("; ".join(errs[:3]))
+        return dt, fused_batches
+
+    rows: list[tuple[str, float, str]] = []
+    for attempt in range(attempts):
+        drain_s(True)                              # warm tables + scratch
+        per_chunk = min(drain_s(False)[0] for _ in range(reps))
+        fused_best = float("inf")
+        fused_batches = 0
+        for _ in range(reps):
+            dt, nb = drain_s(True)
+            if dt < fused_best:
+                fused_best, fused_batches = dt, nb
+        speedup = per_chunk / fused_best
+        rows = [
+            ("stripe/fused/jobs", jobs, "granules"),
+            ("stripe/fused/granule_KiB", granule // 1024, "KiB"),
+            ("stripe/fused/per_chunk_ms", round(per_chunk * 1e3, 2), "ms"),
+            ("stripe/fused/fused_ms", round(fused_best * 1e3, 2), "ms"),
+            ("stripe/fused/fused_batches", fused_batches, "dispatches"),
+            ("stripe/fused/speedup", round(speedup, 3), "x"),
+        ]
+        if not fused_batches:
+            violations.append("fused drain: fusion never engaged")
+            break
+        if speedup >= gate:
+            break
+        if attempt == attempts - 1:
+            violations.append(
+                f"fused drain: fused/per-chunk {speedup:.2f}x < {gate}x gate")
+        else:
+            print(f"# fused drain {speedup:.2f}x < {gate}x — re-measuring once")
+
+    # detection parity: a corrupted granule must be caught by the FUSED path
+    bad = bytearray(payload[:granule])
+    bad[granule // 2] ^= 0x41
+    dst_bad = BufferDest(total)
+    dst_bad.write(0, bytes(bad) + payload[granule:])
+    caught: list[int] = []
+    eng = IntegrityEngine(workers=1, fuse=True, batch=64,
+                          on_verified=lambda j, l, c: None,
+                          on_corrupt=lambda j, a, l: caught.append(j.key),
+                          on_error=lambda j, e: None)
+    for i in range(jobs):
+        eng.submit(VerifyJob(key=i, offset=i * granule, length=granule,
+                             expected=expected[i], dest=dst_bad,
+                             enqueued_s=time.perf_counter()))
+    eng.drain(timeout=120.0)
+    eng.close()
+    missed = int(caught != [0])
+    if missed:
+        violations.append(
+            f"fused drain: corrupted granule escaped fused verification "
+            f"(caught={caught!r})")
+    rows.append(("stripe/fused/corruption_escapes", missed, "granules"))
+    return rows
+
+
+def stripe_restart_rows(seed: int, nbytes: int, tmpdir: str,
+                        violations: list[str], *, stripes: int = 4):
+    """Striped pipelined kill+restart: the journal holds only land-AND-
+    verified stripes, and the restart must re-move none of their bytes."""
+    payload = _payload(seed + 177, nbytes)
+    plan = plan_chunks(len(payload), stripes, chunk_bytes=2 * MiB,
+                       min_chunk=1, max_chunk=1 << 40)
+    jpath = os.path.join(tmpdir, "stripe-restart.journal")
+    lock = threading.Lock()
+    calls = [0]
+
+    def bomb(_chunk, _attempt):
+        with lock:
+            calls[0] += 1
+            if calls[0] > 3 * stripes:
+                raise _HostCrash("host died mid-stripe")
+
+    dst = SlowVerifyDest(len(payload))
+    j = ChunkJournal(jpath)
+    try:
+        ChunkedTransfer(BufferSource(payload), dst, plan, journal=j,
+                        fault_injector=bomb, max_retries=0,
+                        pipeline="pipelined", integrity_workers=1,
+                        stripes=stripes, stripe_min_bytes=256 * 1024).run()
+        raise RuntimeError("crash bomb never fired")
+    except _HostCrash:
+        pass
+    finally:
+        j.close()
+
+    j2 = ChunkJournal(jpath)
+    journaled = [(r.offset, r.length) for r in j2.records.values()]
+    moved: list[tuple[int, int]] = []
+
+    def record(chunk, _attempt):
+        with lock:
+            moved.append((chunk.offset, chunk.length))
+
+    rep2 = ChunkedTransfer(BufferSource(payload), dst, plan, journal=j2,
+                           fault_injector=record, pipeline="pipelined",
+                           stripes=stripes, stripe_min_bytes=256 * 1024).run()
+    j2.close()
+    escapes = int(bytes(dst.buf) != payload)
+    re_moved = sum(
+        1 for off, ln in set(moved)
+        for joff, jln in journaled
+        if off < joff + jln and joff < off + ln       # any byte overlap
+    )
+    if re_moved:
+        violations.append(
+            f"stripe restart: {re_moved} journaled stripes re-moved")
+    if escapes:
+        violations.append(f"stripe restart: {escapes} integrity escapes")
+    if not journaled:
+        violations.append("stripe restart: nothing was journaled before "
+                          "the crash (leg proved nothing)")
+    return [
+        ("stripe/restart/verified_at_crash", len(journaled), "stripes"),
+        ("stripe/restart/resumed_records", rep2.skipped_chunks, "records"),
+        ("stripe/restart/re_moved_journaled", re_moved, "stripes"),
+        ("stripe/restart/escapes", escapes, "transfers"),
+    ]
+
+
+def striped_main(args) -> int:
+    """--striped: the intra-chunk striping + fused-integrity gate suite.
+
+    Writes BENCH_stripe.json. Gates: striped goodput >= 1.3x single-stream
+    pipelined on the per-stream wire-bound mix (one >= 256 MB chunk), fused
+    integrity drain >= 1.2x per-chunk host calls, 0 integrity escapes
+    everywhere, and a kill+restart leg re-moving 0 journaled stripes."""
+    t_start = time.perf_counter()
+    rows: list[tuple[str, float, str]] = []
+    violations: list[str] = []
+
+    nbytes = 256 * MiB     # the gate is defined at >= 256 MB chunks
+    reps = 2 if args.quick else 4
+    payload = _payload(args.seed, nbytes)
+    rows += stripe_goodput_rows(payload, 0.4, 1.3, violations,
+                                seed=args.seed, reps=reps)
+    del payload
+    rows += fused_drain_rows(args.seed, violations,
+                             jobs=256 if args.quick else 512,
+                             reps=3 if args.quick else 5)
+    tmp_base = "/dev/shm" if os.path.isdir("/dev/shm") else None
+    with tempfile.TemporaryDirectory(prefix="stripe-", dir=tmp_base) as tmpdir:
+        rows += stripe_restart_rows(args.seed, 8 * MiB, tmpdir, violations)
+
+    total_escapes = sum(v for n, v, _u in rows
+                        if n.endswith("/escapes") or n.endswith("_escapes"))
+    rows.append(("stripe/total_escapes", total_escapes, "transfers"))
+
+    print("name,value,unit")
+    for name, val, unit in rows:
+        print(f"{name},{val},{unit}")
+    path = emit("stripe", rows, seed=args.seed,
+                args={"quick": args.quick, "stripes": 4,
+                      "chunk_bytes": nbytes},
+                elapsed_s=round(time.perf_counter() - t_start, 3),
+                force=args.force)
+    print(f"# wrote {path}")
+    if violations:
+        print("\nSTRIPE GATE VIOLATIONS:", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--striped", action="store_true",
+                    help="run the striping + fused-integrity gate suite "
+                         "(writes BENCH_stripe.json)")
     ap.add_argument("--force", action="store_true",
                     help="overwrite a BENCH_overlap.json from another git rev")
     args = ap.parse_args(argv)
+    if args.striped:
+        return striped_main(args)
 
     t_start = time.perf_counter()
     rows: list[tuple[str, float, str]] = []

@@ -34,6 +34,7 @@ from repro.core.integrity import (
     fingerprint_bytes,
     fingerprint_many,
     fingerprint_ndarray,
+    fingerprint_rows,
     merge_all,
     verify,
 )
@@ -58,7 +59,7 @@ __all__ = [
     "BASES", "Digest", "EMPTY_DIGEST", "P", "RunningFingerprint",
     "combine_at_offsets",
     "describe_mismatch", "fingerprint_bytes", "fingerprint_many",
-    "fingerprint_ndarray", "merge_all", "verify",
+    "fingerprint_ndarray", "fingerprint_rows", "merge_all", "verify",
     "BufferPool", "ChunkBuffer", "IntegrityEngine", "VerifyJob",
     "read_into", "read_back_into", "stream_chunk",
     "ChunkJournal", "JournalRecord", "replay_checked_lines",

@@ -276,17 +276,110 @@ class RunningFingerprint:
         return self._digest
 
 
+# rows per conversion slab: the f64 slab (rows x 512 KiB) must stay
+# cache-resident — at 128 rows the 64 MiB working set spills to DRAM and the
+# "fused" path measures slower than per-chunk; 16 rows (8 MiB) is the sweet
+# spot measured across the 64 KiB..1 MiB granule range
+_ROW_SLAB = 16
+
+
+def _wT_f64() -> np.ndarray:
+    """Contiguous (_BLOCK, NBASES) GEMM operand — ``weights.T`` as a view is
+    non-contiguous, and BLAS re-copies the 2 MiB table on EVERY call; cached
+    contiguous it is read once per slab and stays in LLC across the batch."""
+    tbl = _WEIGHT_CACHE_F64.get(-_BLOCK)
+    if tbl is None:
+        tbl = np.ascontiguousarray(_host_weight_table_f64(_BLOCK).T)
+        _WEIGHT_CACHE_F64[-_BLOCK] = tbl
+    return tbl
+
+
+@functools.lru_cache(maxsize=64)
+def _tail_weight_f64(rem: int) -> np.ndarray:
+    """Contiguous (rem, NBASES) tail-weight operand for partial blocks."""
+    return np.ascontiguousarray(_host_weight_table_f64(_BLOCK)[:, _BLOCK - rem :].T)
+
+
+def fingerprint_rows(rows: Sequence[np.ndarray]) -> list[Digest]:
+    """Digests of k equal-length uint8 rows — one fused GEMM per block column.
+
+    This is the batched-dispatch primitive under ``fingerprint_many`` and the
+    ``IntegrityEngine`` fused drain. The old implementation stacked the rows
+    into one matrix and ran a full-width ``astype(np.float64)``: two fresh
+    multi-MB allocations per call, which page-fault so hard the "fused" path
+    measured *slower* than per-chunk calls. Here every 64 KiB block column is
+    converted row-by-row straight into the same thread-local float64 scratch
+    ``fingerprint_bytes`` reuses, so the only large memory traffic is the one
+    unavoidable uint8→f64 spread, and the GEMM amortizes across all k rows.
+
+    Rows may be arbitrary 1-D uint8 views (rows of a staging buffer, pooled
+    granules) — no copy-stacking. Raises ``ValueError`` naming the offending
+    row on ragged input; callers that may be ragged use ``fingerprint_many``.
+    """
+    k = len(rows)
+    if k == 0:
+        return []
+    n = int(rows[0].size)
+    for j, r in enumerate(rows):
+        if int(r.size) != n:
+            raise ValueError(
+                f"fingerprint_rows requires equal lengths: row {j} has "
+                f"{int(r.size)} bytes, row 0 has {n}"
+            )
+    if n == 0:
+        return [EMPTY_DIGEST] * k
+    wT = _wT_f64()                                           # (_BLOCK, NBASES)
+    full, rem = divmod(n, _BLOCK)
+    h = np.zeros((k, NBASES), dtype=np.int64)
+    r_blk = np.asarray(_shift_vector(_BLOCK), dtype=np.int64)
+    for s0 in range(0, k, _ROW_SLAB):
+        s1 = min(s0 + _ROW_SLAB, k)
+        m = s1 - s0
+        conv = _conv_buffer(m)
+        for s in range(full):
+            lo = s * _BLOCK
+            x = conv[:m]
+            for j in range(m):
+                np.copyto(x[j], rows[s0 + j][lo : lo + _BLOCK])
+            blks = (x @ wT).astype(np.int64) % P             # (m, NBASES)
+            h[s0:s1] = (h[s0:s1] * r_blk[None, :] + blks) % P
+        if rem:
+            lo = full * _BLOCK
+            if full == 0:
+                # sub-block rows: pack contiguously into the flat scratch —
+                # conv[:m, :rem] has strided rows, which forces BLAS to
+                # re-copy the whole operand on every GEMM call
+                x = conv.reshape(-1)[: m * rem].reshape(m, rem)
+            else:
+                x = conv[:m, :rem]
+            for j in range(m):
+                np.copyto(x[j], rows[s0 + j][lo:])
+            r_tail = np.asarray(_shift_vector(rem), dtype=np.int64)
+            blk = (x @ _tail_weight_f64(rem)).astype(np.int64) % P
+            h[s0:s1] = (h[s0:s1] * r_tail[None, :] + blk) % P
+    return [Digest(tuple(int(v) for v in h[i]), n) for i in range(k)]
+
+
 def fingerprint_many(
     chunks: Sequence[bytes | bytearray | memoryview | np.ndarray],
+    *,
+    expect_equal: bool = False,
 ) -> list[Digest]:
     """Digests of many chunks in one numpy dispatch per equal-length group.
 
     ``fingerprint_bytes`` pays fixed numpy dispatch + conversion overhead per
     call, which dominates in the small-chunk regime (fabric relay granules,
-    re-planned tails at the tuner's floor). This batches: chunks of the same
-    length are stacked into one matrix and digested with ONE GEMM per 64 KiB
-    block column, amortizing the dispatch across the whole group. Equal
+    engine drain batches, re-planned tails at the tuner's floor). Lengths are
+    validated up front: equal-length groups of two or more go through the
+    fused ``fingerprint_rows`` GEMM stack, while ragged leftovers fall back
+    to per-item ``fingerprint_bytes`` — so mixed-length input degrades
+    gracefully instead of raising deep inside the GEMM stacking. Equal
     results to the per-chunk path, bit for bit.
+
+    ``expect_equal=True`` makes ragged input an error, reported in the
+    ``describe_mismatch`` style (which items, which lengths) — for callers
+    like the relay's read-back comparison where a length spread is itself
+    the fault being detected (a short read-back), not a batching choice.
     """
     bufs: list[np.ndarray] = []
     for data in chunks:
@@ -294,44 +387,29 @@ def fingerprint_many(
         if b.dtype != np.uint8:
             b = b.view(np.uint8)
         bufs.append(b.reshape(-1))
-    out: list[Digest | None] = [None] * len(bufs)
     groups: dict[int, list[int]] = {}
     for i, b in enumerate(bufs):
-        groups.setdefault(b.size, []).append(i)
+        groups.setdefault(int(b.size), []).append(i)
+    if expect_equal and len(groups) > 1:
+        sizes = sorted(groups)
+        raise ValueError(
+            "length mismatch across batch: "
+            + ", ".join(f"items {groups[n]} have {n} bytes" for n in sizes)
+            + " — short read/over read upstream of the digest"
+        )
+    out: list[Digest | None] = [None] * len(bufs)
     for n, idxs in groups.items():
         if n == 0:
             for i in idxs:
                 out[i] = EMPTY_DIGEST
-            continue
-        mat = np.stack([bufs[i] for i in idxs])          # (k, n)
-        h = _fingerprint_matrix(mat)                     # (k, NBASES)
-        for row, i in enumerate(idxs):
-            out[i] = Digest(tuple(int(v) for v in h[row]), n)
+        elif len(idxs) == 1:
+            # singleton group: the fused path has nothing to amortize over
+            out[idxs[0]] = fingerprint_bytes(bufs[idxs[0]])
+        else:
+            digs = fingerprint_rows([bufs[i] for i in idxs])
+            for row, i in enumerate(idxs):
+                out[i] = digs[row]
     return out                                            # type: ignore[return-value]
-
-
-def _fingerprint_matrix(mat: np.ndarray) -> np.ndarray:
-    """Row-wise digests of a (k, n) uint8 matrix -> (k, NBASES) residues.
-
-    Same block recurrence as ``fingerprint_bytes``, vectorized over the k
-    rows: every 64 KiB block column is one (k, block) x (block, NBASES) GEMM,
-    so k small chunks cost ~one dispatch instead of k.
-    """
-    k, n = mat.shape
-    h = np.zeros((k, NBASES), dtype=np.int64)
-    weights = _host_weight_table_f64(_BLOCK)                 # (NBASES, _BLOCK)
-    r_blk = np.array([_pow_mod(r, _BLOCK) for r in BASES], dtype=np.int64)
-    full, rem = divmod(n, _BLOCK)
-    for s in range(full):
-        x = mat[:, s * _BLOCK : (s + 1) * _BLOCK].astype(np.float64)
-        blks = (x @ weights.T).astype(np.int64) % P          # (k, NBASES)
-        h = (h * r_blk[None, :] + blks) % P
-    if rem:
-        tail = mat[:, full * _BLOCK :].astype(np.float64)
-        r_tail = np.array([_pow_mod(r, rem) for r in BASES], dtype=np.int64)
-        blk = (tail @ weights[:, _BLOCK - rem :].T).astype(np.int64) % P
-        h = (h * r_tail[None, :] + blk) % P
-    return h
 
 
 def fingerprint_ndarray(arr: np.ndarray) -> Digest:

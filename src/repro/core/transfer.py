@@ -29,7 +29,14 @@ from typing import Callable, Protocol
 
 import numpy as np
 
-from repro.core.chunker import Chunk, ChunkPlan, merge_regions, partition_regions, subtract_regions
+from repro.core.chunker import (
+    Chunk,
+    ChunkPlan,
+    merge_regions,
+    partition_regions,
+    plan_stripes,
+    subtract_regions,
+)
 from repro.core.dataplane import (
     DEFAULT_STREAM_GRANULE,
     BufferPool,
@@ -43,6 +50,7 @@ from repro.core.integrity import (
     combine_at_offsets,
     describe_mismatch,
     fingerprint_bytes,
+    merge_all,
     verify,
 )
 from repro.core.journal import ChunkJournal, JournalRecord
@@ -59,6 +67,13 @@ from repro.obs.trace import NULL as NULL_TRACER
 #                 Custody rule: the journal record commits only after the
 #                 deferred verification lands.
 PIPELINE_MODES = ("serial", "single_pass", "pipelined")
+
+# Work-item index band for intra-chunk stripes. Stripe work items carry
+# indices from this base so they can never collide with plan chunk ids,
+# re-planned tail ids (which grow upward from plan.n_chunks), or the
+# service's tuned band (1 << 40) — and so restart logic can recognize a
+# journal record as stripe custody by its index alone.
+STRIPE_INDEX_BASE = 1 << 50
 
 
 # ---------------------------------------------------------------------------
@@ -104,6 +119,41 @@ class BufferSource:
         return self._mv[offset : offset + length]
 
 
+class _FallbackHandles:
+    """Per-thread seekable handles for the off-POSIX path.
+
+    Each mover thread gets its OWN handle (two movers sharing one seekable
+    handle can interleave seek+read/seek+write and corrupt landings), and
+    every handle ever vended is tracked under a lock so ``close()`` can
+    actually close them — the per-thread handles used to leak, one fd per
+    mover thread per endpoint, for the lifetime of the process.
+    """
+
+    def __init__(self, opener: Callable[[], object]):
+        self._opener = opener
+        self._local = threading.local()
+        self._lock = threading.Lock()
+        self._all: list = []
+
+    def get(self):
+        fh = getattr(self._local, "fh", None)
+        if fh is None or fh.closed:
+            fh = self._opener()
+            self._local.fh = fh
+            with self._lock:
+                self._all.append(fh)
+        return fh
+
+    def close_all(self) -> None:
+        with self._lock:
+            handles, self._all = self._all, []
+        for fh in handles:
+            try:
+                fh.close()
+            except Exception:  # noqa: BLE001 — already-closed / teardown
+                pass
+
+
 class FileSource:
     """Positional-read file source: one shared fd, ``os.pread`` per read, so
     concurrent movers on the same file never serialize on a seek+read handle
@@ -115,14 +165,10 @@ class FileSource:
         self._fd: int | None = None
         if _HAS_PREAD:
             self._fd = os.open(self.path, os.O_RDONLY)
-        self._local = threading.local()
+        self._fallback = _FallbackHandles(lambda: open(self.path, "rb"))
 
     def _fh(self):
-        fh = getattr(self._local, "fh", None)
-        if fh is None:
-            fh = open(self.path, "rb")
-            self._local.fh = fh
-        return fh
+        return self._fallback.get()
 
     def read(self, offset: int, length: int) -> bytes:
         if self._fd is not None:
@@ -138,10 +184,27 @@ class FileSource:
         fh.seek(offset)
         return fh.readinto(view)
 
+    def readv_into(self, offset: int, views: list) -> int:
+        """Vectored read: one ``os.preadv`` fills every view (the stripe
+        movers' iovec batch); the off-POSIX fallback loops on the thread's
+        own handle, so concurrency safety matches the scalar path."""
+        if self._fd is not None:
+            return os.preadv(self._fd, views, offset)
+        fh = self._fh()
+        fh.seek(offset)
+        got = 0
+        for v in views:
+            n = fh.readinto(v)
+            got += n
+            if n < len(v):
+                break
+        return got
+
     def close(self) -> None:
         fd, self._fd = self._fd, None
         if fd is not None:
             os.close(fd)
+        self._fallback.close_all()
 
     def __del__(self):  # raw fds are not GC-closed like file objects
         try:
@@ -167,14 +230,10 @@ class FileDest:
         self._fd: int | None = None
         if _HAS_PREAD:
             self._fd = os.open(self.path, os.O_RDWR)
-        self._local = threading.local()
+        self._fallback = _FallbackHandles(lambda: open(self.path, "r+b"))
 
     def _fh(self):
-        fh = getattr(self._local, "fh", None)
-        if fh is None:
-            fh = open(self.path, "r+b")
-            self._local.fh = fh
-        return fh
+        return self._fallback.get()
 
     def write(self, offset: int, data: bytes) -> None:
         if self._fd is not None:
@@ -184,6 +243,25 @@ class FileDest:
         fh.seek(offset)
         fh.write(data)
         fh.flush()
+
+    def writev(self, offset: int, views: list) -> int:
+        """Vectored write: one ``os.pwritev`` lands every view (the stripe
+        movers' iovec batch); the off-POSIX fallback loops on the thread's
+        own handle."""
+        if self._fd is not None and hasattr(os, "pwritev"):
+            return os.pwritev(self._fd, views, offset)
+        if self._fd is not None:
+            got = 0
+            for v in views:
+                got += os.pwrite(self._fd, v, offset + got)
+            return got
+        fh = self._fh()
+        fh.seek(offset)
+        got = 0
+        for v in views:
+            got += fh.write(v)
+        fh.flush()
+        return got
 
     def read_back(self, offset: int, length: int) -> bytes:
         if self._fd is not None:
@@ -203,6 +281,7 @@ class FileDest:
         fd, self._fd = self._fd, None
         if fd is not None:
             os.close(fd)
+        self._fallback.close_all()
 
     def __del__(self):
         try:
@@ -292,6 +371,22 @@ class ChunkOutcome:
 
 
 @dataclasses.dataclass
+class _StripeSet:
+    """Aggregation state for one striped chunk: per-stripe digests collect
+    here and fold into the parent digest when the last stripe verifies."""
+
+    parent: Chunk
+    n: int
+    digests: dict[int, Digest] = dataclasses.field(default_factory=dict)
+    attempts: int = 0
+    refetches: int = 0
+    seconds: float = 0.0           # summed stripe mover time (work, not wall)
+    attempt_seconds: float = 0.0
+    cksum_seconds: float = 0.0
+    cksum_lag_s: float = 0.0
+
+
+@dataclasses.dataclass
 class TransferReport:
     total_bytes: int
     file_digest: Digest
@@ -308,6 +403,9 @@ class TransferReport:
     chunk_bytes_final: int = 0     # nominal tail chunk size at completion
     pipeline: str = "serial"       # data-plane mode this transfer ran under
     cksum_lag_s: float = 0.0       # pipelined: total verification lag (sum)
+    stripes: int = 1               # stripe fan-out at completion (tuner-led)
+    striped_chunks: int = 0        # parent chunks that were striped
+    stripe_replans: int = 0        # mid-flight stripe-count changes (tuner)
 
     @property
     def gbps(self) -> float:
@@ -340,6 +438,9 @@ class ChunkedTransfer:
         pool: BufferPool | None = None,    # shared buffer pool (else per-run)
         tracer=None,                       # obs.Tracer: chunk-lifecycle spans
         task: str = "",                    # task id on spans/metrics labels
+        stripes: int = 1,                  # >1 splits big chunks across movers
+        stripe_min_bytes: int = 4 * 1024 * 1024,
+        iov_batch: int = 1,                # granules per vectored I/O syscall
     ):
         if source.nbytes != plan.total_bytes:
             raise ValueError(f"source has {source.nbytes} bytes, plan expects {plan.total_bytes}")
@@ -361,6 +462,17 @@ class ChunkedTransfer:
             pipeline = "single_pass"    # nothing to defer without read-back
         if integrity_workers < 1:
             raise ValueError("integrity_workers must be >= 1")
+        if stripes < 1:
+            raise ValueError("stripes must be >= 1")
+        if stripes > 1 and speculative_factor > 0:
+            raise ValueError(
+                "speculative duplication and striping are mutually "
+                "exclusive: a speculated twin duplicates whole plan chunks, "
+                "but striped chunks land as sub-ranges the speculation "
+                "watcher does not know about"
+            )
+        if stripe_min_bytes < 1:
+            raise ValueError("stripe_min_bytes must be >= 1")
         self.source, self.dest, self.plan = source, dest, plan
         self.integrity = integrity
         self.pipeline = pipeline
@@ -414,6 +526,19 @@ class ChunkedTransfer:
         self._chunk_bytes_now = plan.chunk_bytes or plan.total_bytes
         self._next_index = plan.n_chunks
         self._replans = 0
+        # striping state: stripe work items carry indices from the stripe
+        # band; the parent map routes their commits into the _StripeSet that
+        # folds per-stripe digests into the parent chunk digest. The index
+        # allocator is bumped past any journaled stripe ids at run() so a
+        # restarted incarnation can never re-issue a journaled stripe's id.
+        self.stripes = int(stripes)
+        self.stripe_min_bytes = int(stripe_min_bytes)
+        self.iov_batch = max(1, int(iov_batch))
+        self._stripe_parent: dict[int, Chunk] = {}
+        self._stripe_sets: dict[int, _StripeSet] = {}
+        self._next_stripe_index = STRIPE_INDEX_BASE
+        self._striped_chunks = 0
+        self._stripe_replans = 0
         # zero-copy buffer pool: movers stream through granule-sized views,
         # serial verification and the integrity engine read back into
         # chunk-sized ones. Oversize requests (jumbo re-planned tails) fall
@@ -466,8 +591,45 @@ class ChunkedTransfer:
         return stream_chunk(
             self.source, self.dest, chunk.offset, chunk.length,
             pool=self._pool, granule=self.stream_granule,
-            digest=not defer_src,
+            digest=not defer_src, iov_batch=self.iov_batch,
         )
+
+    # -- intra-chunk striping ----------------------------------------------
+    def _expand_work(self, chunks: list[Chunk]) -> list[Chunk]:
+        """Split stripe-eligible chunks into stripe work items.
+
+        Caller must hold ``self._lock`` or be single-threaded (run() setup):
+        this touches the stripe registries and the stripe index allocator.
+        Each stripe becomes an ordinary work item — queued, moved, retried,
+        verified, and journaled exactly like a chunk — except its commit is
+        routed into the parent's ``_StripeSet`` and the parent only counts
+        as landed when every stripe has verified (the journal custody rule).
+        """
+        if self.stripes <= 1:
+            return chunks
+        out: list[Chunk] = []
+        for c in chunks:
+            sp = plan_stripes(c, self.stripes,
+                              stripe_min_bytes=self.stripe_min_bytes,
+                              alignment=self.alignment)
+            if sp.n_stripes <= 1:
+                out.append(c)
+                continue
+            self._striped_chunks += 1
+            self._stripe_sets[c.index] = _StripeSet(parent=c, n=sp.n_stripes)
+            for s in sp.stripes:
+                widx = self._next_stripe_index
+                self._next_stripe_index += 1
+                item = Chunk(index=widx, offset=s.offset, length=s.length,
+                             mover=(c.mover + s.seq) % max(1, self.plan.movers))
+                self._stripe_parent[widx] = c
+                out.append(item)
+        return out
+
+    def _span_extra(self, chunk: Chunk) -> dict:
+        """Span kwargs tying a stripe's spans to its parent chunk's chain."""
+        p = self._stripe_parent.get(chunk.index)
+        return {"parent_offset": p.offset} if p is not None else {}
 
     def _move_chunk(self, chunk: Chunk, mover: int) -> ChunkOutcome:
         """Move one chunk with per-failure-class recovery budgets.
@@ -516,14 +678,16 @@ class ChunkedTransfer:
                 # durations are exact, the sub-placement is synthetic)
                 wire_end = max(t_att, now - cksum_s)
                 lane = f"mover{mover}"
+                extra = self._span_extra(chunk)
                 self.tracer.add("move", "wire", t_att, wire_end,
                                 task=self.task, lane=lane,
                                 offset=chunk.offset, index=chunk.index,
-                                attempt=attempts)
+                                attempt=attempts, **extra)
                 if cksum_s > 0.0:
                     self.tracer.add("cksum_inline", "cksum", wire_end, now,
                                     task=self.task, lane=lane,
-                                    offset=chunk.offset, index=chunk.index)
+                                    offset=chunk.offset, index=chunk.index,
+                                    **extra)
                 self._m_wire.observe(signal_s + (now - t_att), task=self.task)
                 return ChunkOutcome(
                     chunk, src_digest, attempts, mover, now - t0,
@@ -611,7 +775,8 @@ class ChunkedTransfer:
                     self.tracer.add("queue_wait", "queue", enq,
                                     time.perf_counter(), task=self.task,
                                     lane=f"mover{mover}", offset=chunk.offset,
-                                    index=chunk.index)
+                                    index=chunk.index,
+                                    **self._span_extra(chunk))
                 try:
                     out = self._move_chunk(chunk, mover)
                 except MoverCrash:
@@ -689,19 +854,83 @@ class ChunkedTransfer:
             self._m_chunks.inc(1, task=self.task, pipeline=self.pipeline)
             self._m_bytes.inc(chunk.length, task=self.task,
                               pipeline=self.pipeline)
-        if first and self.tuner is not None:
-            try:
-                with self._tune_lock:
-                    new = self.tuner.observe_outcome(out)
-                    if new is not None and new != self._chunk_bytes_now:
-                        self._replan_queued(q, new)
-            except Exception as e:  # noqa: BLE001 — controller bug
-                with self._lock:    # must fail the transfer, not hang it
-                    self._errors.append(RuntimeError(
-                        f"autotuner failed after chunk {chunk.index}: {e}"
-                    ))
-                    self._cond.notify_all()
-                return False
+        if not first:
+            return True
+        parent = self._stripe_parent.get(chunk.index)
+        if parent is not None:
+            # a stripe's journal record is its own custody; the parent-level
+            # commit (tuner feed, stripe_commit mark) waits for the full set
+            return self._finish_stripe(parent, chunk, out, q)
+        return self._feed_tuner(out, q, chunk.index)
+
+    def _finish_stripe(self, parent: Chunk, chunk: Chunk, out: ChunkOutcome,
+                       q: "queue.Queue[Chunk]") -> bool:
+        """Fold one verified stripe into its parent's stripe set; on the last
+        stripe, derive the parent chunk digest via the merge law and feed the
+        tuner ONE aggregated outcome (per-stripe samples would look like
+        tiny chunks and drag the controller toward the floor)."""
+        with self._lock:
+            st = self._stripe_sets[parent.index]
+            st.digests[chunk.offset] = out.digest
+            st.attempts += out.attempts
+            st.refetches += out.refetches
+            st.seconds += out.seconds
+            st.attempt_seconds += out.attempt_seconds
+            st.cksum_seconds += out.cksum_seconds
+            st.cksum_lag_s = max(st.cksum_lag_s, out.cksum_lag_s)
+            done = len(st.digests) == st.n
+        if not done:
+            return True
+        # partition refinement: stripe digests in offset order ARE the chunk
+        # digest — no extra hashing pass over the parent's bytes
+        digest = merge_all(d for _, d in sorted(st.digests.items()))
+        self.tracer.mark("stripe_commit", "journal", task=self.task,
+                         offset=parent.offset, index=parent.index,
+                         stripes=st.n)
+        parent_out = ChunkOutcome(
+            parent, digest, st.attempts, -1, st.seconds,
+            attempt_seconds=st.attempt_seconds,
+            cksum_seconds=st.cksum_seconds,
+            cksum_lag_s=st.cksum_lag_s,
+            refetches=st.refetches,
+        )
+        return self._feed_tuner(parent_out, q, parent.index)
+
+    def _feed_tuner(self, out: ChunkOutcome, q: "queue.Queue[Chunk]",
+                    idx: int) -> bool:
+        """Feed one landed-chunk sample to the controller and act on its
+        chunk-size / stripe-count targets. Returns False on controller error."""
+        if self.tuner is None:
+            return True
+        try:
+            with self._tune_lock:
+                new = self.tuner.observe_outcome(out)
+                stripe_changed = False
+                ns = getattr(self.tuner, "target_stripes", None)
+                if callable(ns):
+                    want = int(ns())
+                    if want >= 1 and want != self.stripes:
+                        with self._lock:
+                            self.stripes = want
+                            self._stripe_replans += 1
+                        self.tracer.mark("stripe_replan", "plan",
+                                         task=self.task, stripes=want)
+                        stripe_changed = True
+                if new is not None and new != self._chunk_bytes_now:
+                    self._replan_queued(q, new)
+                elif stripe_changed:
+                    # a stripe-count change alone must also re-expand the
+                    # un-started tail: the new fan-out takes effect now, not
+                    # at the next chunk-size replan (which may never come
+                    # when the size is pinned at a bound)
+                    self._replan_queued(q, self._chunk_bytes_now)
+        except Exception as e:  # noqa: BLE001 — controller bug
+            with self._lock:    # must fail the transfer, not hang it
+                self._errors.append(RuntimeError(
+                    f"autotuner failed after chunk {idx}: {e}"
+                ))
+                self._cond.notify_all()
+            return False
         return True
 
     # -- integrity-engine callbacks (pipelined mode, verifier threads) -----
@@ -769,23 +998,34 @@ class ChunkedTransfer:
                 drained.append(q.get_nowait())
             except queue.Empty:
                 break
-        if not drained:
+        # stripe work items keep their boundaries: their parent's _StripeSet
+        # is already sized, and a journaled sibling pins the partition — only
+        # whole un-started plain chunks are re-cuttable
+        kept = [c for c in drained if c.index >= STRIPE_INDEX_BASE]
+        plain = [c for c in drained if c.index < STRIPE_INDEX_BASE]
+        if not plain:
+            for c in kept:
+                self._enqueue(q, c)
             return 0
-        regions = merge_regions([(c.offset, c.length) for c in drained])
+        regions = merge_regions([(c.offset, c.length) for c in plain])
         with self._lock:
             fresh = partition_regions(
                 regions, new_bytes, start_index=self._next_index,
                 movers=self.plan.movers, alignment=self.alignment,
             )
             self._next_index += len(fresh)
-            self._target += len(fresh) - len(drained)
-            self._replans += 1
+            fresh = self._expand_work(fresh)
+            self._target += len(fresh) - len(plain)
+            if max(self.alignment, int(new_bytes)) != self._chunk_bytes_now:
+                self._replans += 1      # stripe-only re-expansions don't count
             self._chunk_bytes_now = max(self.alignment, int(new_bytes))
         self.tracer.mark("replan", "plan", task=self.task,
                          chunk_bytes=int(new_bytes), recut=len(fresh))
+        for c in kept:
+            self._enqueue(q, c)
         for c in fresh:
             self._enqueue(q, c)
-        return len(drained)
+        return len(plain)
 
     def run(self) -> TransferReport:
         t0 = time.perf_counter()
@@ -812,12 +1052,27 @@ class ChunkedTransfer:
             gaps = subtract_regions(
                 self.plan.total_bytes, [(r.offset, r.length) for r in recs.values()]
             )
-            self._next_index = max(max(recs, default=-1) + 1, self.plan.n_chunks)
+            # the plain-index allocator must not absorb stripe-band ids: a
+            # max() over a journal holding stripe records would catapult it
+            # into the stripe band and collide with fresh stripe items
+            self._next_index = max(
+                max((i for i in recs if i < STRIPE_INDEX_BASE), default=-1) + 1,
+                self.plan.n_chunks,
+            )
             pending = partition_regions(
                 gaps, self._chunk_bytes_now, start_index=self._next_index,
                 movers=self.plan.movers, alignment=self.alignment,
             )
             self._next_index += len(pending)
+        # stripe ids of a crashed striped incarnation are journal keys too:
+        # resume the stripe allocator past them or the journal dict would
+        # overwrite old custody records on the next crash
+        self._next_stripe_index = max(
+            self._next_stripe_index,
+            max((i + 1 for i in recs if i >= STRIPE_INDEX_BASE),
+                default=STRIPE_INDEX_BASE),
+        )
+        pending = self._expand_work(pending)
         q: "queue.Queue[Chunk]" = queue.Queue()
         for c in pending:
             self._enqueue(q, c)
@@ -915,6 +1170,9 @@ class ChunkedTransfer:
             chunk_bytes_final=self._chunk_bytes_now,
             pipeline=self.pipeline,
             cksum_lag_s=sum(o.cksum_lag_s for o in self._outcomes.values()),
+            stripes=self.stripes,
+            striped_chunks=self._striped_chunks,
+            stripe_replans=self._stripe_replans,
         )
 
     def _speculate(self, q: "queue.Queue[Chunk]", movers: int, skip: set[int]) -> None:

@@ -480,7 +480,17 @@ class RelayTransfer:
                             # small-granule regime a degraded hop shrinks
                             # into is exactly where per-call overhead bites
                             back = hop.dest.read_back(pos, take)
-                            d, d_back = fingerprint_many([data, back])
+                            if len(back) != take:
+                                # diagnose the short read-back HERE: fed to
+                                # the batched digest it would surface as a
+                                # baffling length-mismatch (or worse, a
+                                # digest mismatch) far from the cause
+                                raise IOError(
+                                    f"hop {hop.idx} short read-back at {pos}: "
+                                    f"{len(back)}/{take} bytes"
+                                )
+                            d, d_back = fingerprint_many(
+                                [data, back], expect_equal=True)
                             if not verify(d, d_back):
                                 raise IntegrityError(
                                     f"hop {hop.idx} read-back digest mismatch "

@@ -133,6 +133,58 @@ def checksum_words(words: jax.Array, *, rows: int = ROWS, interpret: bool = True
     return out[0]
 
 
+def _checksum_many_kernel(words_ref, w0_ref, rinv_ref, rpow_ref, out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros((1, NBASES), jnp.int32)
+
+    words = words_ref[0]                           # (rows, LANES)
+    acc = out_ref[...]
+    new = []
+    for b in range(NBASES):
+        th = _plane_hash(words, w0_ref[b], rinv_ref[b])
+        new.append((acc[0, b] * rpow_ref[b, 0] + th) % P)
+    out_ref[...] = jnp.stack(new)[None, :]
+
+
+def checksum_many_words(
+    words2d: jax.Array, *, rows: int = ROWS, interpret: bool = True
+) -> jax.Array:
+    """Digests of k equal-length int32 word streams in ONE kernel dispatch.
+
+    ``words2d`` is (k, n_words) with n_words % (rows*128) == 0. The grid is
+    (k, tiles): the row axis is the batch, the tile axis walks each stream
+    sequentially (TPU grids execute in row-major order, so the per-stream
+    running digest accumulates in its output row, re-initialized whenever the
+    tile index wraps to 0). This is the accelerator side of the fused
+    IntegrityEngine drain: one dispatch per drain batch instead of one per
+    chunk — the same per-call amortization ``fingerprint_rows`` does for the
+    host GEMM path, with the weight tables pinned in VMEM across the whole
+    batch. Returns (k, NBASES) int32 residues.
+    """
+    assert words2d.ndim == 2 and words2d.dtype == jnp.int32, (words2d.shape, words2d.dtype)
+    k, n = words2d.shape
+    tile = rows * LANES
+    assert n % tile == 0 and n > 0 and k > 0, (k, n)
+    w0, rinv, rpow = _tables(rows)
+    grid = (k, n // tile)
+    out = pl.pallas_call(
+        _checksum_many_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, rows, LANES), lambda i, j: (i, j, 0)),     # stream tile
+            pl.BlockSpec((NBASES, rows, LANES), lambda i, j: (0, 0, 0)),  # weights (pinned)
+            pl.BlockSpec((NBASES, 4), lambda i, j: (0, 0)),             # r^-k scalars
+            pl.BlockSpec((NBASES, 1), lambda i, j: (0, 0)),             # r^T scalar
+        ],
+        out_specs=pl.BlockSpec((1, NBASES), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, NBASES), jnp.int32),
+        interpret=interpret,
+        name="chunk_checksum_many",
+    )(words2d.reshape(k, -1, LANES), jnp.asarray(w0), jnp.asarray(rinv), jnp.asarray(rpow))
+    return out
+
+
 def checksum_copy_words(
     words: jax.Array, *, rows: int = ROWS, interpret: bool = True
 ) -> tuple[jax.Array, jax.Array]:

@@ -135,9 +135,13 @@ class Tracer:
     def chunk_chain(self, task: str, offset: int) -> List[Span]:
         """Every span belonging to the chunk at ``offset`` — its lifecycle
         chain (queue -> wire [-> stall/refetch] -> cksum -> journal), in
-        time order. This is what the flight recorder prints for a faulted
-        chunk."""
-        chain = [s for s in self.spans(task) if s.arg("offset") == offset]
+        time order. Stripe spans carry ``parent_offset`` pointing at their
+        parent chunk, so a striped chunk's chain includes every stripe's
+        sub-lifecycle. This is what the flight recorder prints for a
+        faulted chunk."""
+        chain = [s for s in self.spans(task)
+                 if s.arg("offset") == offset
+                 or s.arg("parent_offset") == offset]
         chain.sort(key=lambda s: (s.t0, s.sid))
         return chain
 

@@ -35,11 +35,13 @@ from typing import Any, Callable, Sequence
 import numpy as np
 
 from repro.core.chunker import (
+    Chunk,
     ChunkPlan,
     MiB,
     merge_regions,
     partition_regions,
     plan_chunks,
+    plan_stripes,
     subtract_regions,
 )
 from repro.core.integrity import (
@@ -102,6 +104,12 @@ from repro.tune.simtune import SimTuner
 TUNE_GID_BASE = 1 << 40
 TUNE_ITEM_STRIDE = 1 << 28
 
+# Stripe work items get their own band ABOVE the tuned band (the band test in
+# item_of_gidx must check this one first): each stripe is journaled as its own
+# custody record, so a restart re-moves only the stripes that never verified.
+STRIPE_GID_BASE = 1 << 50
+STRIPE_ITEM_STRIDE = 1 << 28
+
 
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
@@ -133,6 +141,9 @@ class ServiceConfig:
     pipeline: str = "serial"         # serial | single_pass | pipelined
     integrity_workers: int = 2       # per-task checksum workers (pipelined)
     stream_granule: int = DEFAULT_STREAM_GRANULE
+    # ---- intra-chunk striping (concurrent sub-streams per large chunk) ---
+    stripes: int = 1                 # stripe count per eligible chunk
+    stripe_min_bytes: int = 4 * MiB  # smallest stripe worth its overhead
 
     def __post_init__(self):
         if self.max_concurrent_tasks > self.mover_budget:
@@ -152,6 +163,11 @@ class ServiceConfig:
             )
         if self.integrity_workers < 1:
             raise ValueError("integrity_workers must be >= 1")
+        if self.stripes < 1:
+            raise ValueError(f"stripes must be >= 1, got {self.stripes}")
+        if self.stripe_min_bytes < 1:
+            raise ValueError(
+                f"stripe_min_bytes must be >= 1, got {self.stripe_min_bytes}")
 
 
 class _Task:
@@ -165,8 +181,10 @@ class _Task:
         self.controller: ChunkController | None = None
         self.replans = 0
         self.chunk_bytes_now = spec.chunk_bytes or chunk_bytes
-        # per-item sequence allocator for tuned-band journal ids
+        # per-item sequence allocators for tuned-band / stripe-band journal ids
         self.next_tune_seq = [0] * len(spec.items)
+        self.next_stripe_seq = [0] * len(spec.items)
+        self.striped_chunks = 0
         self.state = tk.PENDING
         self.error: str | None = None
         self.lock = threading.Lock()
@@ -225,7 +243,11 @@ class _Task:
 
     # -- journal-id bands ---------------------------------------------------
     def item_of_gidx(self, gidx: int) -> int:
-        """Which item a journaled chunk id belongs to (either band)."""
+        """Which item a journaled chunk id belongs to (any band). The stripe
+        band sits ABOVE the tuned band, so it must be tested first — the
+        tune-band test alone would assign a stripe gid a nonsense item."""
+        if gidx >= STRIPE_GID_BASE:
+            return (gidx - STRIPE_GID_BASE) // STRIPE_ITEM_STRIDE
         if gidx >= TUNE_GID_BASE:
             return (gidx - TUNE_GID_BASE) // TUNE_ITEM_STRIDE
         for i in reversed(range(len(self.chunk_base))):
@@ -235,6 +257,9 @@ class _Task:
 
     def tune_gidx(self, item_idx: int, seq: int) -> int:
         return TUNE_GID_BASE + item_idx * TUNE_ITEM_STRIDE + seq
+
+    def stripe_gidx(self, item_idx: int, seq: int) -> int:
+        return STRIPE_GID_BASE + item_idx * STRIPE_ITEM_STRIDE + seq
 
     def static_record_ok(self, gidx: int, rec) -> bool:
         """Does this journal record match the static plan byte-for-byte?"""
@@ -677,15 +702,25 @@ class TransferService:
             # subtracted per item and fresh tuned-band chunks are carved
             # from the gaps, so a journaled chunk is never re-moved.
             if all(t.static_record_ok(g, r) for g, r in recs.items()):
+                striped = False
                 for i, plan in enumerate(t.plans):
                     if plan.n_chunks == 0:
                         self._dest(t, i)    # zero-byte item: materialize the file
                         continue
                     base = t.chunk_base[i]
-                    for c in plan.chunks:
-                        if base + c.index not in recs:
-                            self._enq(t, work, (base + c.index, i, c))
-                            n_work += 1
+                    entries = [(base + c.index, i, c) for c in plan.chunks
+                               if base + c.index not in recs]
+                    with t.lock:
+                        expanded = self._expand_entries_locked(t, entries)
+                    striped = striped or len(expanded) != len(entries)
+                    for e in expanded:
+                        self._enq(t, work, e)
+                        n_work += 1
+                if striped:
+                    # stripe items outnumber their parent chunks: progress
+                    # accounting switches to work-item granularity
+                    with t.lock:
+                        t.chunks_total = len(recs) + n_work
             else:
                 per_item: dict[int, list] = {i: [] for i in range(len(t.spec.items))}
                 for g, r in recs.items():
@@ -697,7 +732,16 @@ class TransferService:
                     with t.lock:
                         t.next_tune_seq[i] = max(
                             ((g - TUNE_GID_BASE) % TUNE_ITEM_STRIDE
-                             for g in recs if g >= TUNE_GID_BASE
+                             for g in recs if TUNE_GID_BASE <= g < STRIPE_GID_BASE
+                             and t.item_of_gidx(g) == i),
+                            default=-1,
+                        ) + 1
+                        # resume the stripe allocator past journaled stripe
+                        # ids: reusing one would overwrite custody in the
+                        # journal's replay dict on the NEXT restart
+                        t.next_stripe_seq[i] = max(
+                            ((g - STRIPE_GID_BASE) % STRIPE_ITEM_STRIDE
+                             for g in recs if g >= STRIPE_GID_BASE
                              and t.item_of_gidx(g) == i),
                             default=-1,
                         ) + 1
@@ -710,8 +754,10 @@ class TransferService:
                             start_index=t.next_tune_seq[i],
                         )
                         t.next_tune_seq[i] += len(fresh)
-                    for c in fresh:
-                        self._enq(t, work, (t.tune_gidx(i, c.index), i, c))
+                        entries = self._expand_entries_locked(
+                            t, [(t.tune_gidx(i, c.index), i, c) for c in fresh])
+                    for e in entries:
+                        self._enq(t, work, e)
                         n_work += 1
                 with t.lock:
                     t.chunks_total = len(recs) + n_work
@@ -856,8 +902,16 @@ class TransferService:
                 break
         if not drained:
             return 0
+        # stripe work items keep their boundaries (their journaled siblings
+        # pin the partition) — only whole un-started plain chunks are re-cut
+        kept = [e for e in drained if e[0] >= STRIPE_GID_BASE]
+        plain = [e for e in drained if e[0] < STRIPE_GID_BASE]
+        if not plain:
+            for e in kept:
+                self._enq(t, work, e)
+            return 0
         by_item: dict[int, list[tuple[int, int]]] = {}
-        for _g, i, c in drained:
+        for _g, i, c in plain:
             by_item.setdefault(i, []).append((c.offset, c.length))
         entries: list[tuple[int, int, Any]] = []
         with t.lock:
@@ -867,11 +921,14 @@ class TransferService:
                     start_index=t.next_tune_seq[i],
                 )
                 t.next_tune_seq[i] += len(fresh)
-                entries.extend((t.tune_gidx(i, c.index), i, c) for c in fresh)
-            t.chunks_total += len(entries) - len(drained)
+                entries.extend(self._expand_entries_locked(
+                    t, [(t.tune_gidx(i, c.index), i, c) for c in fresh]))
+            t.chunks_total += len(entries) - len(plain)
             t.replans += 1
             old = t.chunk_bytes_now
             t.chunk_bytes_now = int(new_bytes)
+        for e in kept:
+            self._enq(t, work, e)
         for e in entries:
             self._enq(t, work, e)
         self.tracer.mark("replan", "plan", task=t.spec.task_id,
@@ -895,6 +952,34 @@ class TransferService:
         if new is not None and new != cur:
             self._replan_task(t, work, new, rate_Bps=sample.rate_Bps,
                               cksum_lag_s=sample.cksum_lag_s)
+
+    def _expand_entries_locked(self, t: _Task, entries):
+        """Split stripe-eligible work entries into stripe-band entries.
+
+        Caller holds ``t.lock`` (or is the single-threaded runner during
+        seeding). Each stripe is an independent work item with its own
+        stripe-band journal id: custody is per-stripe, so a restart re-moves
+        only the stripes whose verification never landed — the journaled
+        ones are subtracted as regions like any other custody record.
+        """
+        cfg = self.config
+        if cfg.stripes <= 1:
+            return entries
+        out = []
+        for gidx, i, c in entries:
+            sp = plan_stripes(c, cfg.stripes,
+                              stripe_min_bytes=cfg.stripe_min_bytes)
+            if sp.n_stripes <= 1:
+                out.append((gidx, i, c))
+                continue
+            t.striped_chunks += 1
+            for s in sp.stripes:
+                seq = t.next_stripe_seq[i]
+                t.next_stripe_seq[i] = seq + 1
+                out.append((t.stripe_gidx(i, seq), i,
+                            Chunk(index=seq, offset=s.offset,
+                                  length=s.length, mover=0)))
+        return out
 
     def _enq(self, t: _Task, work, entry) -> None:
         """Queue a work entry, timestamping it for the queue-wait span."""
@@ -1421,6 +1506,8 @@ class TransferService:
                 tuning=t.tuning,
                 replans=t.replans,
                 chunk_bytes_current=t.chunk_bytes_now,
+                stripes=self.config.stripes,
+                striped_chunks=t.striped_chunks,
                 pipeline=self.config.pipeline,
                 cksum_seconds=round(t.cksum_s, 6),
                 cksum_lag_s=round(t.cksum_lag_s, 6),

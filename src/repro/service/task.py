@@ -216,6 +216,9 @@ class TaskStatus:
     tuning: str = "static"    # effective policy this task ran under
     replans: int = 0          # mid-flight tail re-partitions
     chunk_bytes_current: int | None = None   # nominal tail chunk size now
+    # intra-chunk striping accounting (stripe-band work items):
+    stripes: int = 1          # configured stripe count per eligible chunk
+    striped_chunks: int = 0   # parent chunks that were split into stripes
     # data-plane accounting (pipelined integrity engine visibility):
     pipeline: str = "serial"  # serial | single_pass | pipelined
     cksum_seconds: float = 0.0   # checksum work on the mover path (cumulative)

@@ -49,6 +49,7 @@ KEEP = "keep"          # probe improved the rate: kept, climbing on
 REVERT = "revert"      # probe degraded the rate: rolled back, flipped
 FLAT = "flat"          # probe landed in the deadband: rolled back
 HOLD = "hold"          # nothing to do this epoch
+STRIPE = "stripe"      # stripe-ladder move (direction +1 escalate, -1 back off)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +84,7 @@ class ChunkController:
         long_hold_epochs: int = 8,
         max_replans: int = 64,
         fast_md_streak: int = 2,
+        stripe_ladder: tuple[int, ...] = (1,),
     ):
         if not (0 < md_factor < 1):
             raise ValueError("md_factor must be in (0, 1)")
@@ -111,6 +113,12 @@ class ChunkController:
         if fast_md_streak < 1:
             raise ValueError("fast_md_streak must be >= 1")
         self.fast_md_streak = fast_md_streak
+        ladder = tuple(int(s) for s in stripe_ladder)
+        if not ladder or any(s < 1 for s in ladder) or list(ladder) != sorted(set(ladder)):
+            raise ValueError(
+                f"stripe_ladder must be strictly ascending ints >= 1, got {ladder!r}")
+        self.stripe_ladder = ladder
+        self._stripe_rung = 0
 
         self.probe = TransferProbe()
         self._target = self._clamp(chunk_bytes)
@@ -133,6 +141,31 @@ class ChunkController:
     def target(self) -> int:
         """The currently recommended nominal chunk size."""
         return self._target
+
+    def target_stripes(self) -> int:
+        """The currently recommended intra-chunk stripe count.
+
+        The ladder is a second, coarser actuator on top of chunk size: the
+        controller only climbs it when a GROW probe is already pinned at
+        ``max_chunk`` — i.e. per-chunk overhead amortization is exhausted and
+        the remaining lever is intra-chunk wire parallelism — and steps back
+        down one rung per multiplicative-decrease event (the collapse may BE
+        the stripe overhead; shedding one rung per MD keeps the response
+        proportional and deterministic).
+        """
+        return self.stripe_ladder[self._stripe_rung]
+
+    def _escalate_stripes(self, rate: float) -> bool:
+        if self._stripe_rung + 1 >= len(self.stripe_ladder):
+            return False
+        self._stripe_rung += 1
+        self._decide(STRIPE, rate, +1)
+        return True
+
+    def _deescalate_stripes(self, rate: float) -> None:
+        if self._stripe_rung > 0:
+            self._stripe_rung -= 1
+            self._decide(STRIPE, rate, -1)
 
     def _decide(self, action: str, rate: float, direction: int = 0) -> None:
         self.decisions.append(TuneDecision(
@@ -210,6 +243,10 @@ class ChunkController:
             self._flat_probes = 0
             grow = ck_frac > 0.5
             self._dir = 1 if grow else -1       # keep refining that way
+            if not grow:
+                # per-byte path degraded: stripe fan-out may be the cause —
+                # shed one rung alongside the chunk-size decrease
+                self._deescalate_stripes(rate)
             factor = (1.0 / self.md_factor) if grow else self.md_factor
             return self._move(self._clamp(int(self._target * factor)),
                               MD, rate, self._dir)
@@ -256,6 +293,12 @@ class ChunkController:
                 else self._target / self.climb_factor)
         new = self._clamp(int(step))
         if new == self._target:
+            if self._dir > 0 and self._escalate_stripes(rate):
+                # grow probe pinned at max_chunk: chunk-size amortization is
+                # exhausted — climb the stripe ladder instead of turning
+                # around (one rung per probe window, so rate feedback lands
+                # between rungs)
+                return None
             self._dir = -self._dir              # pinned at a bound: turn around
             step = (self._target * self.climb_factor if self._dir > 0
                     else self._target / self.climb_factor)
