@@ -63,7 +63,8 @@ def _payload(seed: int, nbytes: int) -> bytes:
     return np.random.default_rng(seed).integers(0, 256, nbytes, dtype=np.uint8).tobytes()
 
 
-def _engine_run(payload, plan, campaign, jpath, *, injector=None, max_retries=3):
+def _engine_run(payload, plan, campaign, jpath, *, injector=None, max_retries=3,
+                dedup_index=None):
     dst = FileDest(jpath + ".out", len(payload))
     journal = ChunkJournal(jpath)
     try:
@@ -74,6 +75,8 @@ def _engine_run(payload, plan, campaign, jpath, *, injector=None, max_retries=3)
             journal=journal,
             max_retries=max_retries,
             fault_injector=injector,
+            dedup_index=dedup_index,
+            dedup_target=(jpath + ".out") if dedup_index is not None else "",
         )
         report = eng.run()
     finally:
@@ -89,7 +92,8 @@ def engine_campaign(expr: str, seed: int, *, nbytes: int, chunk: int, movers: in
     payload = _payload(seed, nbytes)
     plan = plan_chunks(nbytes, movers, chunk_bytes=chunk, min_chunk=1, max_chunk=1 << 50)
     out = dict(escapes=0, re_moved_journaled=0, corrupt_writes=0, healed=0,
-               mover_deaths=0, outage_rejections=0, amplification=1.0, retention=1.0)
+               mover_deaths=0, outage_rejections=0, stale_demotions=0,
+               amplification=1.0, retention=1.0)
 
     # ---- leg A: full faulted transfer (no crash): escapes + healed + timing
     camp = FaultCampaign(scenario, total_bytes=nbytes, seed=seed, movers=movers)
@@ -100,10 +104,31 @@ def engine_campaign(expr: str, seed: int, *, nbytes: int, chunk: int, movers: in
         with lock:
             attempts[0] += 1
 
+    # stale-index leg setup: a clean pre-pass populates a chunk index, then
+    # seeded victim entries get their backing bytes corrupted — leg A runs
+    # its dedup negotiation against an index that lies about what it holds
+    dedup_index = None
+    if scenario.stale_index:
+        from repro.cas import ChunkIndex
+        from repro.faults import corrupt_index_backing
+
+        donor = os.path.join(tmpdir, f"donor-{expr.replace('+', '_')}-{seed}")
+        dedup_index = ChunkIndex(donor + ".idx")
+        camp_pre = FaultCampaign(parse_scenario("clean"),
+                                 total_bytes=nbytes, seed=seed)
+        _engine_run(payload, plan, camp_pre, donor + ".journal",
+                    dedup_index=dedup_index)
+        corrupt_index_backing(dedup_index, count=scenario.stale_index,
+                              seed=seed, stats=camp.stats)
+
     ja = os.path.join(tmpdir, f"A-{expr.replace('+', '_')}-{seed}.journal")
     t0 = time.perf_counter()
-    report, final = _engine_run(payload, plan, camp, ja, injector=count)
+    report, final = _engine_run(payload, plan, camp, ja, injector=count,
+                                dedup_index=dedup_index)
     secs = time.perf_counter() - t0
+    if dedup_index is not None:
+        out["stale_demotions"] += report.dedup_demoted
+        dedup_index.close()
     out["escapes"] += int(final != payload)
     out["corrupt_writes"] += camp.stats.corrupt_writes
     out["healed"] += report.refetches
@@ -333,10 +358,15 @@ def main(argv=None) -> int:
             rows.append((f"{pre}/corrupt_writes", agg["corrupt_writes"], "events"))
             rows.append((f"{pre}/healed_by_refetch", agg["healed"], "events"))
             rows.append((f"{pre}/mover_deaths", agg["mover_deaths"], "movers"))
+            rows.append((f"{pre}/stale_demotions", agg.get("stale_demotions", 0), "chunks"))
             rows.append((f"{pre}/retry_amplification", round(sum(amps) / len(amps), 3), "x"))
             rows.append((f"{pre}/goodput_retention", round(sum(rets) / len(rets), 3), "frac"))
             if agg["escapes"]:
                 violations.append(f"engine/{expr}: {agg['escapes']} integrity escapes")
+            if parse_scenario(expr).stale_index and not agg.get("stale_demotions"):
+                violations.append(
+                    f"engine/{expr}: stale index entries were never demoted to "
+                    f"wire moves (the lying index went unprobed)")
             if agg["re_moved_journaled"]:
                 violations.append(
                     f"engine/{expr}: {agg['re_moved_journaled']} journaled chunks re-moved")

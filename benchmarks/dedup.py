@@ -1,0 +1,405 @@
+"""Dedup conformance benchmark: content-addressed store wire-byte gates.
+
+Measures the chunk-index dedup path (``repro.cas``) end to end and GATES the
+properties the content plane promises:
+
+  * **mutate-10%-republish** — publish a dataset through the service, mutate
+    ~10% of its chunks, publish again with ``dedup="on"``: the unchanged 90%
+    must be satisfied from the index (local copy, no wire move). Gate:
+    wire-byte reduction >= 5x, final bytes identical to the mutated source.
+  * **repeat-checkpoint**   — a delta re-save of an UNCHANGED training state
+    (``submit_checkpoint(..., delta=True)``) must move near-zero bytes, and a
+    one-leaf mutation delta-save must restore bit-identical to a full save.
+  * **kill+restart mid-delta** — deduped chunks journal custody at
+    negotiation time: after a crash mid-run and a restart, no journaled
+    chunk (deduped or moved) may be moved again. Gate: 0 re-moves, 0 escapes.
+  * **stale-index demotion** — corrupt the backing bytes behind seeded index
+    entries (``faults.corrupt_index_backing``): every poisoned hit must
+    re-verify, demote to a wire move, and leave a quarantine record. Gate:
+    demotions == quarantines >= victims probed, 0 escapes.
+
+Prints ``name,value,unit`` CSV, writes ``BENCH_dedup.json`` (schema v2), and
+exits non-zero on any gate violation so CI can block on it.
+
+Run: PYTHONPATH=src python -m benchmarks.dedup [--seeds N] [--quick] [--force]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from benchmarks._results import emit
+from repro.cas import ChunkIndex
+from repro.core import (
+    BufferSource,
+    ChunkJournal,
+    ChunkedTransfer,
+    FileDest,
+    plan_chunks,
+)
+from repro.faults import corrupt_index_backing
+
+
+class _HostCrash(Exception):
+    """Crash bomb: the host dies mid-transfer (kill+restart leg)."""
+
+
+def _payload(seed: int, nbytes: int) -> bytes:
+    return np.random.default_rng(seed).integers(
+        0, 256, nbytes, dtype=np.uint8).tobytes()
+
+
+def _mutate_chunks(payload: bytes, chunk: int, frac: float, seed: int) -> bytes:
+    """Rewrite ~``frac`` of the payload's chunks with fresh random bytes."""
+    rng = np.random.default_rng(seed + 1)
+    buf = bytearray(payload)
+    n_chunks = (len(payload) + chunk - 1) // chunk
+    n_mut = max(1, round(n_chunks * frac))
+    victims = rng.choice(n_chunks, size=n_mut, replace=False)
+    for ci in victims:
+        lo = int(ci) * chunk
+        hi = min(lo + chunk, len(payload))
+        buf[lo:hi] = rng.integers(0, 256, hi - lo, dtype=np.uint8).tobytes()
+    return bytes(buf)
+
+
+def _engine_run(payload, plan, jpath, *, index=None, injector=None,
+                max_retries=3):
+    dst = FileDest(jpath + ".out", len(payload))
+    journal = ChunkJournal(jpath)
+    try:
+        eng = ChunkedTransfer(
+            BufferSource(payload), dst, plan,
+            journal=journal, max_retries=max_retries,
+            fault_injector=injector,
+            dedup_index=index,
+            dedup_target=(jpath + ".out") if index is not None else "",
+        )
+        report = eng.run()
+    finally:
+        journal.close()
+    with open(jpath + ".out", "rb") as fh:
+        final = fh.read()
+    return report, final
+
+
+# ---------------------------------------------------------------------------
+# leg 1: mutate-10%-republish through the real service
+# ---------------------------------------------------------------------------
+def republish_leg(seed: int, *, nbytes: int, chunk: int, tmpdir: str) -> dict:
+    from repro.service import BatchConfig, ServiceConfig, TransferService
+
+    root = os.path.join(tmpdir, f"pub-{seed}")
+    os.makedirs(root, exist_ok=True)
+    src = os.path.join(root, "data.bin")
+    payload = _payload(seed, nbytes)
+    with open(src, "wb") as fh:
+        fh.write(payload)
+    svc = TransferService(os.path.join(root, "svc"), ServiceConfig(
+        mover_budget=4, max_concurrent_tasks=2, chunk_bytes=chunk,
+        tick_s=0.002, dedup="on",
+        batch=BatchConfig(direct_bytes=1 << 30, batch_files=64),
+    ))
+    try:
+        [t1] = svc.submit([(src, src + ".v1")], batch=False)
+        st1 = svc.wait(t1, timeout=120)
+        mutated = _mutate_chunks(payload, chunk, 0.10, seed)
+        with open(src, "wb") as fh:
+            fh.write(mutated)
+        [t2] = svc.submit([(src, src + ".v2")], batch=False)
+        st2 = svc.wait(t2, timeout=120)
+        with open(src + ".v2", "rb") as fh:
+            escapes = int(fh.read() != mutated)
+        total = st2.bytes_total
+        wire = total - st2.wire_bytes_saved
+        return dict(
+            escapes=escapes + int(st1.state != "SUCCEEDED")
+            + int(st2.state != "SUCCEEDED"),
+            bytes_total=total, wire_bytes=wire,
+            chunks_deduped=st2.chunks_deduped,
+            chunks_total=st2.chunks_total,
+        )
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# leg 2: repeat-checkpoint (delta saves)
+# ---------------------------------------------------------------------------
+def checkpoint_leg(seed: int, *, leaf_kb: int, tmpdir: str) -> dict:
+    from repro.ckpt.checkpoint import (
+        _flatten,
+        restore_checkpoint,
+        save_checkpoint,
+    )
+    from repro.service import BatchConfig, ServiceConfig, TransferService
+    from repro.service.ckpt_bridge import submit_checkpoint
+
+    root = os.path.join(tmpdir, f"ckpt-{seed}")
+    ck = os.path.join(root, "saves")
+    os.makedirs(ck, exist_ok=True)
+    rng = np.random.default_rng(seed)
+    tree = {
+        "layer0/w": rng.standard_normal((leaf_kb * 64,)).astype(np.float32),
+        "layer0/b": rng.standard_normal((leaf_kb * 16,)).astype(np.float32),
+        "emb": rng.integers(0, 255, (leaf_kb * 32,)).astype(np.int32),
+    }
+    svc = TransferService(os.path.join(root, "svc"), ServiceConfig(
+        mover_budget=4, max_concurrent_tasks=2, tick_s=0.002,
+        batch=BatchConfig(direct_bytes=1 << 30, batch_files=64),
+    ))
+    try:
+        submit_checkpoint(svc, ck, 1, tree, chunk_bytes=16 * 1024).wait(120)
+        # unchanged re-save: the delta must move (near) nothing
+        sub2 = submit_checkpoint(svc, ck, 2, tree, delta=True)
+        sub2.wait(120)
+        st2 = sub2.status()
+        repeat_total = st2.bytes_total
+        repeat_wire = repeat_total - st2.wire_bytes_saved
+        # one-leaf mutation: delta save, then restore must be bit-identical
+        # to a plain full save of the same tree
+        tree2 = dict(tree)
+        tree2["layer0/b"] = tree["layer0/b"] + 1.0
+        sub3 = submit_checkpoint(svc, ck, 3, tree2, delta=True)
+        rep3 = sub3.wait(120)
+        st3 = sub3.status()
+        full_dir = os.path.join(root, "full")
+        os.makedirs(full_dir, exist_ok=True)
+        repf = save_checkpoint(full_dir, 3, tree2, chunk_bytes=16 * 1024)
+        td, sd = restore_checkpoint(rep3.path)
+        tf, sf = restore_checkpoint(repf.path)
+        td, tf = _flatten(td), _flatten(tf)
+        escapes = int(sd != 3 or sf != 3)
+        for k in tree2:
+            if not (np.array_equal(td[k], tree2[k])
+                    and np.array_equal(td[k], tf[k])):
+                escapes += 1
+        return dict(
+            escapes=escapes,
+            repeat_total=repeat_total, repeat_wire=repeat_wire,
+            delta_total=st3.bytes_total,
+            delta_wire=st3.bytes_total - st3.wire_bytes_saved,
+            delta_deduped=st3.chunks_deduped,
+        )
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# leg 3: kill + restart mid-delta (engine-level custody)
+# ---------------------------------------------------------------------------
+def restart_leg(seed: int, *, nbytes: int, chunk: int, movers: int,
+                tmpdir: str) -> dict:
+    plan = plan_chunks(nbytes, movers, chunk_bytes=chunk,
+                       min_chunk=1, max_chunk=1 << 50)
+    payload = _payload(seed, nbytes)
+    base = os.path.join(tmpdir, f"restart-{seed}")
+    # donor pass populates the index for ~half the (mutated) republish
+    index = ChunkIndex(base + ".idx")
+    _engine_run(payload, plan, base + "-donor.journal", index=index)
+    mutated = _mutate_chunks(payload, chunk, 0.5, seed)
+
+    lock = threading.Lock()
+    calls = [0]
+
+    def bomb(_chunk, _attempt):
+        with lock:
+            calls[0] += 1
+            if calls[0] > 1:           # die after the first wire move lands
+                raise _HostCrash("host died mid-delta")
+
+    jb = base + "-B.journal"
+    try:
+        _engine_run(mutated, plan, jb, index=index, injector=bomb,
+                    max_retries=0)
+        crashed = 0
+    except (_HostCrash, RuntimeError):
+        crashed = 1
+    probe = ChunkJournal(jb)           # deduped chunks journaled custody at
+    journaled = set(probe.records)     # negotiation; landed wire chunks too
+    probe.close()
+
+    moved2: list[int] = []
+
+    def record(c, _attempt):
+        with lock:
+            moved2.append(c.index)
+
+    report2, final2 = _engine_run(mutated, plan, jb, index=index,
+                                  injector=record)
+    index.close()
+    return dict(
+        escapes=int(final2 != mutated),
+        crashed=crashed,
+        journaled_at_crash=len(journaled),
+        re_moved_journaled=len(set(moved2) & journaled),
+        resumed=report2.skipped_chunks,
+    )
+
+
+# ---------------------------------------------------------------------------
+# leg 4: stale-index demotion + quarantine
+# ---------------------------------------------------------------------------
+def stale_leg(seed: int, *, nbytes: int, chunk: int, movers: int,
+              tmpdir: str) -> dict:
+    plan = plan_chunks(nbytes, movers, chunk_bytes=chunk,
+                       min_chunk=1, max_chunk=1 << 50)
+    payload = _payload(seed, nbytes)
+    base = os.path.join(tmpdir, f"stale-{seed}")
+    index = ChunkIndex(base + ".idx")
+    _engine_run(payload, plan, base + "-donor.journal", index=index)
+    victims = corrupt_index_backing(index, count=2, seed=seed)
+    report, final = _engine_run(payload, plan, base + "-B.journal", index=index)
+    index.close()
+    return dict(
+        escapes=int(final != payload),
+        victims=len(victims),
+        demoted=report.dedup_demoted,
+        quarantined=len(report.quarantined),
+        deduped=report.deduped_chunks,
+    )
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def _merge(agg: dict, one: dict) -> None:
+    for k, v in one.items():
+        agg[k] = agg.get(k, 0) + v
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="overwrite a BENCH result from a different git rev")
+    args = ap.parse_args(argv)
+    t_start = time.perf_counter()
+
+    nbytes = (512 * 1024 + 4093) if args.quick else (2 * 1024 * 1024 + 4093)
+    chunk, movers = 32 * 1024, 8
+    leaf_kb = 2 if args.quick else 8
+    seeds = 1 if args.quick else args.seeds
+    rows: list[tuple[str, float, str]] = []
+    violations: list[str] = []
+
+    with tempfile.TemporaryDirectory(prefix="dedup-") as tmpdir:
+        # ---- leg 1: mutate-10% republish
+        agg: dict = {}
+        for seed in range(seeds):
+            _merge(agg, republish_leg(seed, nbytes=nbytes, chunk=chunk,
+                                      tmpdir=tmpdir))
+        ratio = (agg["bytes_total"] / agg["wire_bytes"]
+                 if agg["wire_bytes"] else float(agg["bytes_total"] or 1))
+        rows += [
+            ("dedup/republish/escapes", agg["escapes"], "tasks"),
+            ("dedup/republish/chunks_deduped", agg["chunks_deduped"], "chunks"),
+            ("dedup/republish/chunks_total", agg["chunks_total"], "chunks"),
+            ("dedup/republish/wire_bytes", agg["wire_bytes"], "bytes"),
+            ("dedup/republish/bytes_total", agg["bytes_total"], "bytes"),
+            ("dedup/republish/wire_reduction", round(ratio, 2), "x"),
+        ]
+        if agg["escapes"]:
+            violations.append(f"republish: {agg['escapes']} integrity escapes")
+        if ratio < 5.0:
+            violations.append(
+                f"republish: wire reduction {ratio:.2f}x < 5x gate "
+                f"(mutate-10% must dedup the unchanged 90%)")
+
+        # ---- leg 2: repeat checkpoint (delta saves)
+        agg = {}
+        for seed in range(seeds):
+            _merge(agg, checkpoint_leg(seed, leaf_kb=leaf_kb, tmpdir=tmpdir))
+        repeat_frac = (agg["repeat_wire"] / agg["repeat_total"]
+                       if agg["repeat_total"] else 0.0)
+        rows += [
+            ("dedup/checkpoint/escapes", agg["escapes"], "leaves"),
+            ("dedup/checkpoint/repeat_wire_bytes", agg["repeat_wire"], "bytes"),
+            ("dedup/checkpoint/repeat_total_bytes", agg["repeat_total"], "bytes"),
+            ("dedup/checkpoint/repeat_wire_frac", round(repeat_frac, 4), "frac"),
+            ("dedup/checkpoint/delta_wire_bytes", agg["delta_wire"], "bytes"),
+            ("dedup/checkpoint/delta_deduped", agg["delta_deduped"], "chunks"),
+        ]
+        if agg["escapes"]:
+            violations.append(
+                f"checkpoint: {agg['escapes']} restore mismatches "
+                f"(delta save must restore bit-identical to a full save)")
+        if repeat_frac > 0.01:
+            violations.append(
+                f"checkpoint: repeat-save moved {repeat_frac:.1%} of its "
+                f"bytes (an unchanged delta re-save must be near-zero wire)")
+
+        # ---- leg 3: kill + restart mid-delta
+        agg = {}
+        for seed in range(seeds):
+            _merge(agg, restart_leg(seed, nbytes=nbytes, chunk=chunk,
+                                    movers=movers, tmpdir=tmpdir))
+        rows += [
+            ("dedup/restart/escapes", agg["escapes"], "runs"),
+            ("dedup/restart/crashed_runs", agg["crashed"], "runs"),
+            ("dedup/restart/journaled_at_crash", agg["journaled_at_crash"], "chunks"),
+            ("dedup/restart/re_moved_journaled", agg["re_moved_journaled"], "chunks"),
+            ("dedup/restart/resumed_chunks", agg["resumed"], "chunks"),
+        ]
+        if agg["escapes"]:
+            violations.append(f"restart: {agg['escapes']} integrity escapes")
+        if agg["re_moved_journaled"]:
+            violations.append(
+                f"restart: {agg['re_moved_journaled']} journaled chunks moved "
+                f"again after restart (deduped custody must survive a crash)")
+
+        # ---- leg 4: stale index demotion
+        agg = {}
+        for seed in range(seeds):
+            _merge(agg, stale_leg(seed, nbytes=nbytes, chunk=chunk,
+                                  movers=movers, tmpdir=tmpdir))
+        rows += [
+            ("dedup/stale/escapes", agg["escapes"], "runs"),
+            ("dedup/stale/victim_entries", agg["victims"], "entries"),
+            ("dedup/stale/demoted_to_wire", agg["demoted"], "chunks"),
+            ("dedup/stale/quarantined", agg["quarantined"], "records"),
+            ("dedup/stale/still_deduped", agg["deduped"], "chunks"),
+        ]
+        if agg["escapes"]:
+            violations.append(
+                f"stale: {agg['escapes']} integrity escapes (a lying index "
+                f"served bytes that differ from the source)")
+        if agg["demoted"] < agg["victims"]:
+            violations.append(
+                f"stale: only {agg['demoted']} demotions for "
+                f"{agg['victims']} poisoned entries (stale hits must "
+                f"re-verify and fall back to the wire)")
+        if agg["quarantined"] != agg["demoted"]:
+            violations.append(
+                f"stale: {agg['demoted']} demotions but {agg['quarantined']} "
+                f"quarantine records (every demotion must leave evidence)")
+
+    total_escapes = sum(v for n, v, _u in rows if n.endswith("/escapes"))
+    rows.append(("dedup/total_escapes", total_escapes, "chunks"))
+    rows.append(("dedup/seeds", seeds, "seeds"))
+
+    print("name,value,unit")
+    for name, val, unit in rows:
+        print(f"{name},{val},{unit}")
+    path = emit("dedup", rows,
+                args={"quick": args.quick, "seeds": list(range(seeds))},
+                elapsed_s=round(time.perf_counter() - t_start, 3),
+                force=args.force)
+    print(f"# wrote {path}")
+    if violations:
+        print("\nDEDUP GATE VIOLATIONS:", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

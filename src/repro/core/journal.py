@@ -41,6 +41,17 @@ def _self_check(payload: str) -> str:
     return fingerprint_bytes(payload.encode()).hexdigest()[:16]
 
 
+def checked_line(body: dict) -> str:
+    """Serialise one self-checksummed JSONL record (no trailing newline).
+
+    Shared by every append-log in the repo (chunk journal, task log, CAS
+    chunk index) so compaction and replay agree on the byte format.
+    """
+    return json.dumps(
+        {"body": body, "check": _self_check(json.dumps(body, sort_keys=True))}
+    )
+
+
 def replay_checked_lines(path: str, apply) -> tuple[bytes, int]:
     """Replay a self-checksummed JSONL file with crash-consistent repair.
 
@@ -131,10 +142,7 @@ class ChunkJournal:
             self.records.pop(rec.chunk_index, None)
 
     def append(self, rec: JournalRecord) -> None:
-        body = dataclasses.asdict(rec)
-        line = json.dumps(
-            {"body": body, "check": _self_check(json.dumps(body, sort_keys=True))}
-        )
+        line = checked_line(dataclasses.asdict(rec))
         with self._append_lock:
             assert self._fh is not None
             self._fh.write(line + "\n")
@@ -144,6 +152,34 @@ class ChunkJournal:
                 self.records[rec.chunk_index] = rec
             else:
                 self.records.pop(rec.chunk_index, None)
+
+    def compact(self) -> dict:
+        """Rewrite the log to live records only; atomic replace.
+
+        Journals grow without bound across repeated saves: every "failed"
+        record and every superseded append stays on disk forever. Compaction
+        rewrites the current live-record set (sorted by chunk id) into a
+        temp file, fsyncs it, and atomically renames it over the log, then
+        reopens the append handle — a crash at any point leaves either the
+        old log or the complete new one, never a mix. Returns
+        ``{"records", "bytes_before", "bytes_after"}``.
+        """
+        with self._append_lock:
+            before = os.path.getsize(self.path) if os.path.exists(self.path) else 0
+            tmp = self.path + ".compact.tmp"
+            with open(tmp, "w", encoding="utf-8") as fh:
+                for idx in sorted(self.records):
+                    fh.write(checked_line(dataclasses.asdict(self.records[idx])) + "\n")
+                fh.flush()
+                os.fsync(fh.fileno())
+            if self._fh is not None:
+                self._fh.close()
+            os.replace(tmp, self.path)
+            self._fh = open(self.path, "a", encoding="utf-8")
+            self.torn_tail_bytes = 0
+            after = os.path.getsize(self.path)
+        return {"records": len(self.records), "bytes_before": before,
+                "bytes_after": after}
 
     # ------------------------------------------------------------------
     def completed(self) -> set[int]:

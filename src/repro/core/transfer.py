@@ -406,6 +406,9 @@ class TransferReport:
     stripes: int = 1               # stripe fan-out at completion (tuner-led)
     striped_chunks: int = 0        # parent chunks that were striped
     stripe_replans: int = 0        # mid-flight stripe-count changes (tuner)
+    deduped_chunks: int = 0        # chunks satisfied from the chunk index
+    dedup_bytes_saved: int = 0     # wire bytes those chunks would have cost
+    dedup_demoted: int = 0         # stale/corrupt index hits demoted to wire
 
     @property
     def gbps(self) -> float:
@@ -441,6 +444,8 @@ class ChunkedTransfer:
         stripes: int = 1,                  # >1 splits big chunks across movers
         stripe_min_bytes: int = 4 * 1024 * 1024,
         iov_batch: int = 1,                # granules per vectored I/O syscall
+        dedup_index=None,                  # cas.ChunkIndex of the dest endpoint
+        dedup_target: str = "",            # dest's canonical path in that index
     ):
         if source.nbytes != plan.total_bytes:
             raise ValueError(f"source has {source.nbytes} bytes, plan expects {plan.total_bytes}")
@@ -504,6 +509,12 @@ class ChunkedTransfer:
         self._m_wire = obsmetrics.REGISTRY.histogram(
             "chunk_wire_seconds", "fault-excluded per-chunk mover time",
             ("task",), scale=1e-4)
+        self._m_dedup = obsmetrics.REGISTRY.counter(
+            "dedup_chunks_total", "chunks satisfied from the chunk index",
+            ("task",))
+        self._m_dedup_bytes = obsmetrics.REGISTRY.counter(
+            "dedup_bytes_saved_total", "wire bytes saved by dedup hits",
+            ("task",))
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)   # completion/error/death
         self._outcomes: dict[int, ChunkOutcome] = {}
@@ -539,6 +550,18 @@ class ChunkedTransfer:
         self._next_stripe_index = STRIPE_INDEX_BASE
         self._striped_chunks = 0
         self._stripe_replans = 0
+        # content plane: the destination endpoint's chunk index. Probed
+        # before movers start (_negotiate_dedup); populated as verified
+        # chunks commit so the NEXT transfer can skip them. Deduped chunks
+        # never reach _move_chunk, so they feed neither the tuner's
+        # congestion signal nor the wire metrics — by construction.
+        self.dedup_index = dedup_index
+        self.dedup_target = os.path.abspath(str(dedup_target)) if dedup_target else ""
+        self._deduped_parts: list[tuple[int, Digest]] = []
+        self._dedup_skip: set[int] = set()   # deduped plan-chunk ids
+        self._deduped_chunks = 0
+        self._dedup_bytes_saved = 0
+        self._dedup_demoted = 0
         # zero-copy buffer pool: movers stream through granule-sized views,
         # serial verification and the integrity engine read back into
         # chunk-sized ones. Oversize requests (jumbo re-planned tails) fall
@@ -593,6 +616,110 @@ class ChunkedTransfer:
             pool=self._pool, granule=self.stream_granule,
             digest=not defer_src, iov_batch=self.iov_batch,
         )
+
+    # -- dedup negotiation (content plane) ---------------------------------
+    def _negotiate_dedup(self, pending: list[Chunk]) -> list[Chunk]:
+        """Probe pending chunks against the destination's chunk index and
+        satisfy hits locally; returns the chunks that still need the wire.
+
+        Runs once, before movers start. Each pending chunk's source bytes
+        are fingerprinted (the source-side read the engine pays anyway for
+        end-to-end integrity) and the digest probed against the index. A
+        hit is satisfied WITHOUT a wire move: an alias entry (same target
+        path + offset — the bytes are already in place) needs only its
+        read-back verification; any other entry's backing bytes are
+        re-verified, copied locally into the destination, and verified
+        again after landing. Every satisfied chunk commits journal custody
+        and folds into the whole-file digest chain exactly like a moved
+        chunk, so the 0-escape guarantee is unconditional. A stale entry
+        (missing, truncated, or rotted backing) is discarded with a
+        quarantine record; if no live entry satisfies the chunk it demotes
+        to a normal wire move — correctness never rests on the index.
+        """
+        index = self.dedup_index
+        keep: list[Chunk] = []
+        for c in pending:
+            t_p = time.perf_counter()
+            try:
+                data = self.source.read(c.offset, c.length)
+            except Exception:     # noqa: BLE001 — probe failure = wire move
+                keep.append(c)
+                continue
+            if len(data) != c.length:
+                keep.append(c)
+                continue
+            want = fingerprint_bytes(data)
+            del data
+            satisfied = False
+            demoted_here = False
+            aliased = False
+            for e in index.lookup(want.hexdigest(), c.length):
+                alias = bool(self.dedup_target) \
+                    and os.path.abspath(e.path) == self.dedup_target \
+                    and e.offset == c.offset
+                backing = index.verify_entry(e)
+                if backing is None:
+                    # stale: drop the entry, record the event, keep
+                    # probing other locations of the same content
+                    index.discard(e.digest_hex, e.length, e.path, e.offset)
+                    index.note_stale()
+                    demoted_here = True
+                    with self._lock:
+                        self._quarantined.append(QuarantineRecord(
+                            c.index, c.offset, c.length, 0,
+                            e.digest_hex, "",
+                            f"stale index entry {e.path}@{e.offset}: "
+                            f"backing bytes failed re-verification",
+                        ))
+                    continue
+                try:
+                    if not alias:
+                        self.dest.write(c.offset, backing)
+                    back = self.dest.read_back(c.offset, c.length)
+                except Exception:  # noqa: BLE001 — local copy failed
+                    demoted_here = True
+                    continue
+                if not verify(want, fingerprint_bytes(back)):
+                    # the local copy landed corrupt — wire move instead
+                    demoted_here = True
+                    continue
+                satisfied, aliased = True, alias
+                break
+            now = time.perf_counter()
+            if not satisfied:
+                if demoted_here:
+                    with self._lock:
+                        self._dedup_demoted += 1
+                    self._m_retry.inc(1, task=self.task, kind="dedup_demote")
+                    self.tracer.add("dedup_demote", "dedup", t_p, now,
+                                    task=self.task, lane="dedup",
+                                    offset=c.offset, index=c.index)
+                else:
+                    self.tracer.add("dedup_probe", "dedup", t_p, now,
+                                    task=self.task, lane="dedup",
+                                    offset=c.offset, index=c.index)
+                keep.append(c)
+                continue
+            # custody: the journal record is what makes a deduped chunk
+            # indistinguishable from a moved one on restart — kill+restart
+            # must never re-move it (same rule as wire custody)
+            if self.journal is not None:
+                self.journal.append(JournalRecord(
+                    c.index, c.offset, c.length, want.hexdigest()))
+            if self.dedup_target and not aliased:
+                index.put(want.hexdigest(), c.length,
+                          self.dedup_target, c.offset)
+            self._deduped_parts.append((c.offset, want))
+            self._dedup_skip.add(c.index)
+            self._deduped_chunks += 1
+            self._dedup_bytes_saved += c.length
+            self._m_dedup.inc(1, task=self.task)
+            self._m_dedup_bytes.inc(c.length, task=self.task)
+            self.tracer.add("dedup_hit", "dedup", t_p, now,
+                            task=self.task, lane="dedup",
+                            offset=c.offset, index=c.index,
+                            alias=int(aliased))
+        return keep
 
     # -- intra-chunk striping ----------------------------------------------
     def _expand_work(self, chunks: list[Chunk]) -> list[Chunk]:
@@ -854,6 +981,16 @@ class ChunkedTransfer:
             self._m_chunks.inc(1, task=self.task, pipeline=self.pipeline)
             self._m_bytes.inc(chunk.length, task=self.task,
                               pipeline=self.pipeline)
+            # index population: a verified, journaled chunk is exactly what
+            # a future transfer may dedup against (stripes index at the
+            # parent level in _finish_stripe — probe keys are chunk-sized)
+            if (self.dedup_index is not None and self.dedup_target
+                    and chunk.index not in self._stripe_parent):
+                try:
+                    self.dedup_index.put(out.digest.hexdigest(), chunk.length,
+                                         self.dedup_target, chunk.offset)
+                except Exception:  # noqa: BLE001 — cache: failed put = miss
+                    pass
         if not first:
             return True
         parent = self._stripe_parent.get(chunk.index)
@@ -887,6 +1024,12 @@ class ChunkedTransfer:
         self.tracer.mark("stripe_commit", "journal", task=self.task,
                          offset=parent.offset, index=parent.index,
                          stripes=st.n)
+        if self.dedup_index is not None and self.dedup_target:
+            try:
+                self.dedup_index.put(digest.hexdigest(), parent.length,
+                                     self.dedup_target, parent.offset)
+            except Exception:  # noqa: BLE001 — cache: failed put = miss
+                pass
         parent_out = ChunkOutcome(
             parent, digest, st.attempts, -1, st.seconds,
             attempt_seconds=st.attempt_seconds,
@@ -1072,6 +1215,10 @@ class ChunkedTransfer:
             max((i + 1 for i in recs if i >= STRIPE_INDEX_BASE),
                 default=STRIPE_INDEX_BASE),
         )
+        # content plane: satisfy index hits locally before any mover starts
+        # (deduped chunks journal custody and leave pending entirely)
+        if self.dedup_index is not None and pending:
+            pending = self._negotiate_dedup(pending)
         pending = self._expand_work(pending)
         q: "queue.Queue[Chunk]" = queue.Queue()
         for c in pending:
@@ -1116,7 +1263,8 @@ class ChunkedTransfer:
         # plan does not know about (and tuner+speculation is rejected above).
         if self.speculative_factor > 0 and pending and static_resume:
             watcher = threading.Thread(
-                target=self._speculate, args=(q, movers, set(recs)), daemon=True
+                target=self._speculate,
+                args=(q, movers, set(recs) | self._dedup_skip), daemon=True
             )
             watcher.start()
         # Supervise: the transfer outlives its movers. If every worker died
@@ -1153,6 +1301,7 @@ class ChunkedTransfer:
         # original plan (partition refinement keeps digests composable)
         parts = [(out.chunk.offset, out.digest) for out in self._outcomes.values()]
         parts += resumed_parts
+        parts += self._deduped_parts
         file_digest = combine_at_offsets(parts, self.plan.total_bytes)
         return TransferReport(
             total_bytes=self.plan.total_bytes,
@@ -1173,6 +1322,9 @@ class ChunkedTransfer:
             stripes=self.stripes,
             striped_chunks=self._striped_chunks,
             stripe_replans=self._stripe_replans,
+            deduped_chunks=self._deduped_chunks,
+            dedup_bytes_saved=self._dedup_bytes_saved,
+            dedup_demoted=self._dedup_demoted,
         )
 
     def _speculate(self, q: "queue.Queue[Chunk]", movers: int, skip: set[int]) -> None:

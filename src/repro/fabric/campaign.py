@@ -31,12 +31,18 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from typing import Sequence
+from typing import Any, Sequence
 
+from repro.cas import ChunkIndex
+from repro.core.integrity import combine_at_offsets, fingerprint_bytes, verify
 from repro.fabric.topology import RoutePlanner, Topology
 from repro.service import task as tk
 from repro.service.service import TransferService
 from repro.service.task import TaskStatus, TransferItem
+
+# edge_states value for a tree edge satisfied from the replica's chunk index
+# (no service task was submitted; custody came from verified local bytes)
+DEDUPED = "DEDUPED"
 
 
 # ---------------------------------------------------------------------------
@@ -168,6 +174,10 @@ class CampaignReport:
     naive_wire_bytes: int                    # what N independent routes cost
     resumed_chunks: int
     seconds: float
+    # replica-aware dedup: edges whose destination replica already held the
+    # content (per-replica chunk index) and were satisfied without a task
+    edges_deduped: int = 0
+    dedup_wire_bytes_saved: int = 0
     error: str | None = None
 
     @property
@@ -194,6 +204,7 @@ class CampaignRunner:
         endpoint_dirs: dict[str, str | os.PathLike],
         *,
         planner: RoutePlanner | None = None,
+        indexes: dict[str, ChunkIndex] | None = None,
     ):
         self.service = service
         self.topo = topo
@@ -201,6 +212,12 @@ class CampaignRunner:
         self.dirs = {name: str(p) for name, p in endpoint_dirs.items()}
         for name in self.dirs:
             topo.endpoint(name)              # validate against the registry
+        # per-replica chunk indexes: an edge whose destination endpoint has
+        # one is probed before submission — if the replica already holds every
+        # chunk, the edge is satisfied by verified local copies (no task)
+        self.indexes: dict[str, ChunkIndex] = dict(indexes or {})
+        for name in self.indexes:
+            topo.endpoint(name)
 
     def _path(self, endpoint: str, relpath: str) -> str:
         try:
@@ -208,6 +225,99 @@ class CampaignRunner:
         except KeyError:
             raise CampaignError(
                 f"endpoint {endpoint!r} has no staging directory") from None
+
+    def _dedup_edge(
+        self, u: str, v: str, relpath: str, nbytes: int,
+        chunk_bytes: int | None,
+    ) -> str | None:
+        """Try to satisfy edge ``(u, v)`` entirely from ``v``'s chunk index.
+
+        Probes each chunk of the custody file at ``u`` against the replica's
+        index; a hit is satisfied by a verified local copy at ``v`` (or pure
+        verification when the index already points at the destination path).
+        All-or-nothing: any miss, stale entry, or verify failure demotes the
+        whole edge to an ordinary wire task. Returns the merge-law whole-file
+        digest hex on success (folded from the freshly fingerprinted source
+        bytes, so the campaign's custody chain still anchors at the origin),
+        or None to demote.
+        """
+        index = self.indexes.get(v)
+        if index is None or nbytes == 0:
+            return None
+        cb = chunk_bytes or self.service.config.chunk_bytes
+        src_path = self._path(u, relpath)
+        dst_path = os.path.abspath(self._path(v, relpath))
+        parts: list[tuple[int, Any]] = []
+        pending_puts: list[tuple[str, int, int]] = []
+        out = None
+        try:
+            with open(src_path, "rb") as fh:
+                offset = 0
+                while offset < nbytes:
+                    length = min(cb, nbytes - offset)
+                    data = fh.read(length)
+                    if len(data) != length:
+                        return None
+                    want = fingerprint_bytes(data)
+                    satisfied = False
+                    for e in index.lookup(want.hexdigest(), length):
+                        aliased = (os.path.abspath(e.path) == dst_path
+                                   and e.offset == offset)
+                        backing = index.verify_entry(e)
+                        if backing is None:
+                            # stale entry: the bytes behind it changed — drop
+                            # it so no later probe trusts it again
+                            index.discard(e.digest_hex, e.length, e.path, e.offset)
+                            index.note_stale()
+                            continue
+                        if not aliased:
+                            if out is None:
+                                mode = "r+b" if os.path.exists(dst_path) else "w+b"
+                                os.makedirs(os.path.dirname(dst_path) or ".",
+                                            exist_ok=True)
+                                out = open(dst_path, mode)
+                            out.seek(offset)
+                            out.write(backing)
+                            out.flush()
+                        with open(dst_path, "rb") as back_fh:
+                            back_fh.seek(offset)
+                            back = back_fh.read(length)
+                        if len(back) == length and verify(want, fingerprint_bytes(back)):
+                            satisfied = True
+                            if not aliased:
+                                pending_puts.append(
+                                    (want.hexdigest(), length, offset))
+                            break
+                    if not satisfied:
+                        return None
+                    parts.append((offset, want))
+                    offset += length
+        except OSError:
+            return None
+        finally:
+            if out is not None:
+                out.close()
+        for hexd, length, off in pending_puts:
+            try:
+                index.put(hexd, length, dst_path, off)
+            except Exception:
+                pass
+        return combine_at_offsets(parts, nbytes).hexdigest()
+
+    def _index_landed(self, v: str, relpath: str, st: TaskStatus) -> None:
+        """Register a succeeded edge's verified chunks in ``v``'s index."""
+        index = self.indexes.get(v)
+        if index is None or not st.item_reports:
+            return
+        dst_path = os.path.abspath(self._path(v, relpath))
+        for c in st.item_reports[0].chunks:
+            if not c.get("digest"):
+                continue
+            try:
+                index.put(c["digest"], int(c["length"]), dst_path,
+                          int(c["offset"]))
+            except Exception:
+                pass
 
     def replicate(
         self,
@@ -240,12 +350,23 @@ class CampaignRunner:
 
         edge_tasks: dict[tuple[str, str], str] = {}
         statuses: dict[tuple[str, str], TaskStatus] = {}
+        dedup_digests: dict[tuple[str, str], str] = {}
         ready = [e for e in tree.edges if e[0] == source]
         blocked = [e for e in tree.edges if e[0] != source]
         inflight: dict[tuple[str, str], tuple[str, float | None]] = {}
         failed: str | None = None
         while ready or inflight:
             for u, v in ready:
+                # replica-aware dedup: probe v's chunk index before paying
+                # for the wire — a full hit grants custody immediately and
+                # unlocks the subtree below v in the same scheduling pass
+                digest_hex = self._dedup_edge(u, v, relpath, nbytes, chunk_bytes)
+                if digest_hex is not None:
+                    dedup_digests[(u, v)] = digest_hex
+                    unlocked = [e for e in blocked if e[0] == v]
+                    blocked = [e for e in blocked if e[0] != v]
+                    ready.extend(unlocked)
+                    continue
                 item = TransferItem(
                     self._path(u, relpath), self._path(v, relpath), nbytes)
                 [tid] = self.service.submit(
@@ -263,6 +384,7 @@ class CampaignRunner:
                     inflight.pop(edge)
                     statuses[edge] = st
                     if st.state == tk.SUCCEEDED:
+                        self._index_landed(edge[1], relpath, st)
                         unlocked = [e for e in blocked if e[0] == edge[1]]
                         blocked = [e for e in blocked if e[0] != edge[1]]
                         ready.extend(unlocked)
@@ -287,10 +409,13 @@ class CampaignRunner:
         escapes = 0
         verified = 0
         for u, v in tree.edges:
-            st = statuses.get((u, v))
-            if st is None or st.state != tk.SUCCEEDED or not st.item_reports:
-                continue
-            digest = st.item_reports[0].digest_hex
+            if (u, v) in dedup_digests:
+                digest = dedup_digests[(u, v)]
+            else:
+                st = statuses.get((u, v))
+                if st is None or st.state != tk.SUCCEEDED or not st.item_reports:
+                    continue
+                digest = st.item_reports[0].digest_hex
             replica_digests[v] = digest
             if u == tree.source:
                 if not origin_digest:
@@ -308,20 +433,24 @@ class CampaignRunner:
             state = tk.FAILED
         if escapes:
             state = tk.FAILED
+        edge_states = {e: s.state for e, s in statuses.items()}
+        edge_states.update({e: DEDUPED for e in dedup_digests})
         return CampaignReport(
             tree=tree,
             relpath=relpath,
             total_bytes=nbytes,
             state=state,
             edge_tasks=edge_tasks,
-            edge_states={e: s.state for e, s in statuses.items()},
+            edge_states=edge_states,
             replica_digests=replica_digests,
             origin_digest=origin_digest,
             replicas_verified=verified,
             integrity_escapes=escapes,
-            wire_bytes=tree.wire_bytes(nbytes),
+            wire_bytes=nbytes * (len(tree.edges) - len(dedup_digests)),
             naive_wire_bytes=nbytes * naive,
             resumed_chunks=sum(s.resumed_chunks for s in statuses.values()),
             seconds=time.perf_counter() - t0,
+            edges_deduped=len(dedup_digests),
+            dedup_wire_bytes_saved=nbytes * len(dedup_digests),
             error=failed,
         )

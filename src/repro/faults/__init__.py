@@ -22,6 +22,7 @@ from repro.faults.injectors import (
     FaultStats,
     FaultyDest,
     FaultySource,
+    corrupt_index_backing,
     tear_journal_tail,
 )
 from repro.faults.scenarios import (
@@ -37,5 +38,5 @@ from repro.faults.scenarios import (
 __all__ = [
     "CLEAN", "FABRIC_MATRIX", "FULL_MATRIX", "FaultCampaign", "FaultStats",
     "FaultyDest", "FaultySource", "PAPER_BYTES_PER_ERROR", "SCENARIOS",
-    "Scenario", "parse_scenario", "tear_journal_tail",
+    "Scenario", "corrupt_index_backing", "parse_scenario", "tear_journal_tail",
 ]

@@ -56,6 +56,8 @@ class FaultStats:
     outage_rejections: int = 0
     stalls: int = 0
     torn_tail_bytes: int = 0
+    stale_index_corruptions: int = 0  # chunk-index entries whose backing
+                                      # bytes were corrupted under them
 
 
 class FaultCampaign:
@@ -272,3 +274,41 @@ def tear_journal_tail(path: str | os.PathLike, *, seed: int = 0,
     with open(path, "r+b") as fh:
         fh.truncate(cut_at)
     return len(data) - cut_at
+
+
+# ---------------------------------------------------------------------------
+# stale chunk-index entries
+# ---------------------------------------------------------------------------
+def corrupt_index_backing(index, *, count: int, seed: int = 0,
+                          stats: FaultStats | None = None) -> list:
+    """Flip one byte behind each of ``count`` seeded victim chunk-index
+    entries — the on-disk state an overwrite/bit-rot leaves behind: the index
+    still promises content its backing path no longer holds.
+
+    Victims are drawn deterministically from the index's live entries (seeded
+    through SHA-256, one flipped bit at a seeded offset inside the entry's
+    byte region). Returns the victim entries. The dedup path's contract under
+    this fault: every probe that hits a victim must re-verify the backing
+    bytes, demote the chunk to a wire move, and quarantine the entry — a
+    lying index must never become an integrity escape.
+    """
+    entries = sorted(index.entries(),
+                     key=lambda e: (e.path, e.offset, e.digest_hex))
+    entries = [e for e in entries if e.length > 0 and os.path.exists(e.path)]
+    if not entries or count <= 0:
+        return []
+    rng = random.Random(_seed_int(seed, "stale_index", len(entries)))
+    victims = rng.sample(entries, min(count, len(entries)))
+    for e in victims:
+        flip_at = e.offset + rng.randrange(e.length)
+        mask = 1 << rng.randrange(8)
+        with open(e.path, "r+b") as fh:
+            fh.seek(flip_at)
+            byte = fh.read(1)
+            if not byte:
+                continue
+            fh.seek(flip_at)
+            fh.write(bytes([byte[0] ^ mask]))
+        if stats is not None:
+            stats.stale_index_corruptions += 1
+    return victims

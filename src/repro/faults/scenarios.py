@@ -66,6 +66,13 @@ class Scenario:
     # by ``degrade_factor`` (fabric.virtual).
     degrade_hops: int = 0
     degrade_factor: float = 0.25
+    # --- content-plane faults (dedup against chunk indexes) ----------------
+    # stale index entries: corrupt the backing bytes behind this many seeded
+    # victim entries in the pre-populated chunk index before the dedup pass —
+    # the lookup hit re-verifies, demotes the chunk to a wire move, and
+    # quarantines the entry (the 0-escape invariant must survive a lying
+    # index).
+    stale_index: int = 0
 
     def __post_init__(self):
         if self.bytes_per_error is not None and self.bytes_per_error <= 0:
@@ -116,6 +123,7 @@ class Scenario:
             and self.outage_at_frac is None and self.stall_movers == 0
             and not self.torn_journal
             and self.link_outage_at_frac is None and self.degrade_hops == 0
+            and self.stale_index == 0
         )
 
 
@@ -139,6 +147,8 @@ SCENARIOS: dict[str, Scenario] = {
     "link_outage_at_50pct": Scenario(name="link_outage_at_50pct",
                                      link_outage_at_frac=0.5),
     "degrade_hop": Scenario(name="degrade_hop", degrade_hops=1),
+    # content-plane fault: the chunk index promises bytes it no longer has
+    "stale_index": Scenario(name="stale_index", stale_index=2),
 }
 
 
@@ -167,6 +177,7 @@ FULL_MATRIX: tuple[str, ...] = (
     "corrupt_1_per_TiB+kill_2_movers+outage_at_50pct",
     "torn_journal_tail",
     "corrupt_1_per_TiB+torn_journal_tail",
+    "stale_index",
 )
 
 

@@ -32,6 +32,18 @@ Observability modes (``transferd top`` / ``transferd trace``):
         ... transferd trace --export /tmp/testbed.trace.json           # virtual
         ... transferd trace --export /tmp/real.trace.json --real DIR   # real
 
+Content-addressed store (``transferd cas <cmd>``, the dedup chunk index):
+
+  * ``cas stats`` — entry/byte counts and hit/miss/stale counters of an
+    endpoint's chunk-index log:
+
+        ... transferd cas stats --index /tmp/transferd/state/cas/index.log
+
+  * ``cas gc``    — compact the index log (drop superseded/discarded records
+    and the torn tail, atomically rewrite):
+
+        ... transferd cas gc --index /tmp/transferd/state/cas/index.log
+
 Fabric modes (``transferd fabric <cmd>``, the multi-endpoint WAN layer):
 
   * ``fabric plan``      — k-shortest routes between two endpoints:
@@ -423,6 +435,52 @@ def fabric_replicate(args) -> None:
         raise SystemExit(1)
 
 
+# ---------------------------------------------------------------------------
+# content-addressed store subcommands
+# ---------------------------------------------------------------------------
+def cas_stats(args) -> None:
+    from repro.cas import ChunkIndex
+
+    with ChunkIndex(args.index) as idx:
+        s = idx.stats()
+        print(f"# chunk index {os.path.abspath(args.index)}")
+        print(f"digests        {s['digests']}")
+        print(f"locations      {s['locations']}")
+        print(f"indexed bytes  {s['indexed_bytes']}")
+        print(f"log bytes      {s['log_bytes']}")
+        print(f"hits / misses  {int(s['hits'])} / {int(s['misses'])}")
+        print(f"stale entries  {int(s['stale'])}")
+
+
+def cas_gc(args) -> None:
+    from repro.cas import ChunkIndex
+
+    with ChunkIndex(args.index) as idx:
+        rep = idx.compact()
+    saved = rep["bytes_before"] - rep["bytes_after"]
+    print(f"compacted {os.path.abspath(args.index)}: "
+          f"{rep['records']} live records, "
+          f"{rep['bytes_before']} -> {rep['bytes_after']} bytes "
+          f"({saved} reclaimed)")
+
+
+def cas_main(argv) -> None:
+    ap = argparse.ArgumentParser(prog="transferd cas",
+                                 description="content-addressed chunk store")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("stats", help="entry counts + hit/miss/stale counters")
+    p.add_argument("--index", required=True, help="chunk-index log path")
+    p.set_defaults(fn=cas_stats)
+
+    p = sub.add_parser("gc", help="compact the index log")
+    p.add_argument("--index", required=True, help="chunk-index log path")
+    p.set_defaults(fn=cas_gc)
+
+    args = ap.parse_args(argv)
+    args.fn(args)
+
+
 def fabric_main(argv) -> None:
     ap = argparse.ArgumentParser(prog="transferd fabric",
                                  description="multi-endpoint WAN fabric tools")
@@ -467,6 +525,9 @@ def main(argv=None):
         argv = sys.argv[1:]
     if argv and argv[0] == "fabric":
         fabric_main(argv[1:])
+        return None
+    if argv and argv[0] == "cas":
+        cas_main(argv[1:])
         return None
     if argv and argv[0] == "top":
         top_main(argv[1:])

@@ -22,11 +22,14 @@ fault-excluded accounting (``tune.probe``):
     data plane is for, and attribution must give it credit.
   * ``wire``   — a mover was moving bytes (fault-excluded attempt time).
   * ``journal``— custody record appends.
+  * ``dedup``  — content-plane negotiation: index probes, hit
+    re-verification, local-copy satisfaction (time the transfer spent
+    skipping wire moves instead of making them).
   * ``queue``  — chunks waited for a mover with nothing else happening.
   * ``idle``   — no span active (scheduler gaps, thread wakeup latency).
 
 Priority when several are active: stall > cksum_wait > wire > cksum >
-journal > queue. The report also slices per lane-group (relay hops) via
+journal > dedup > queue. The report also slices per lane-group (relay hops) via
 span args, so a routed transfer shows which hop's wire or checksum pool is
 the bottleneck.
 """
@@ -38,10 +41,10 @@ from typing import Dict, Iterable, List, Optional
 from .trace import Span
 
 #: classification priority, highest first (idle = nothing active)
-PRIORITY = ("stall", "cksum_wait", "wire", "cksum", "journal", "queue")
+PRIORITY = ("stall", "cksum_wait", "wire", "cksum", "journal", "dedup", "queue")
 #: report buckets: cksum_wait folds into cksum ("checksum-bound" either way)
 _FOLD = {"cksum_wait": "cksum"}
-PHASES = ("stall", "cksum", "wire", "journal", "queue", "idle")
+PHASES = ("stall", "cksum", "wire", "journal", "dedup", "queue", "idle")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -18,6 +18,8 @@ exactly one of:
     cksum     checksum work (source fingerprint, read-back verify)
     cksum_wait  a landed chunk waited for a free verify worker
     journal   custody record append
+    dedup     content-plane work: index probes, local-copy satisfaction,
+              hit re-verification (cas.ChunkIndex negotiation)
     stall     fault recovery: corruption re-fetch, outage wait, backoff
     task      per-task root spans and service-level intervals
 
@@ -43,7 +45,7 @@ from .clock import Clock
 
 # the closed category vocabulary (attr.py folds over these)
 CATEGORIES = ("plan", "queue", "wire", "cksum", "cksum_wait", "journal",
-              "stall", "task")
+              "dedup", "stall", "task")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -12,6 +12,16 @@ the task completes, recovery marks the task FAILED, the ``.tmp`` directory
 keeps its journaled chunks, and a re-submission after restart skips every
 chunk that already landed (the destination files and service journals are
 both keyed by the same deterministic chunk plan).
+
+Delta checkpoints (``delta=True``): successive saves of a training state
+differ by a few percent, yet every save re-moves every byte. The previous
+save's MANIFEST.json already catalogs each leaf's chunks with their
+merge-law digests — it IS a content index of that directory. Seeding the
+service's chunk index from it and submitting with ``dedup="on"`` turns the
+save into a delta: unchanged chunks are satisfied by a local copy from the
+previous save's files, only changed chunks ride the wire, and the landed
+directory stays byte- and manifest-compatible with a full save (restore
+cannot tell the difference).
 """
 from __future__ import annotations
 
@@ -22,6 +32,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.cas import seed_index_from_manifest
 from repro.ckpt.checkpoint import SaveReport, _flatten
 from repro.obs.clock import mono_s, wall_s
 from repro.service.task import SUCCEEDED, TaskStatus
@@ -82,6 +93,31 @@ class CheckpointSubmission:
         )
 
 
+def _previous_save(root: str, step: int) -> tuple[str, dict] | None:
+    """The newest completed save below ``step``: (dir, manifest) or None."""
+    best: tuple[int, str] | None = None
+    try:
+        names = os.listdir(root)
+    except OSError:
+        return None
+    for name in names:
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        try:
+            s = int(name[len("step_"):])
+        except ValueError:
+            continue
+        if s < step and (best is None or s > best[0]):
+            best = (s, os.path.join(root, name))
+    if best is None:
+        return None
+    try:
+        with open(os.path.join(best[1], "MANIFEST.json")) as fh:
+            return best[1], json.load(fh)
+    except (OSError, ValueError):
+        return None
+
+
 def submit_checkpoint(
     service,
     root: str | os.PathLike,
@@ -90,15 +126,45 @@ def submit_checkpoint(
     *,
     tenant: str = "ckpt",
     chunk_bytes: int | None = None,
+    delta: bool = False,
 ) -> CheckpointSubmission:
     """Submit one checkpoint save as a single service task; returns a handle.
 
     The caller keeps training while the service's movers drain the task; call
     ``.wait()`` (or poll ``.status()``) before relying on the checkpoint.
+
+    ``delta=True`` fingerprints this save against the newest previous save
+    under ``root``: the previous MANIFEST seeds the service's chunk index and
+    the task submits with ``dedup="on"``, so only changed chunks are moved
+    (unchanged ones are locally copied from the previous save's files). The
+    chunk size is pinned to the previous save's unless the caller overrides
+    it — dedup matches whole chunks, so boundaries must line up. With no
+    previous save, delta degrades to a normal full save.
     """
     final = os.path.join(str(root), f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
+
+    dedup: str | None = None
+    if delta:
+        prev = _previous_save(str(root), step)
+        if prev is not None:
+            prev_dir, manifest = prev
+            seed_index_from_manifest(service.cas_index(), manifest, prev_dir)
+            dedup = "on"
+            if chunk_bytes is None:
+                # Leaves smaller than the plan's chunk size record a clamped
+                # per-leaf chunk_bytes (== nbytes), so the true plan size is
+                # the one multi-chunk leaves agree on; fall back to the max
+                # when every leaf fit in a single chunk.
+                leaves_meta = manifest.get("leaves", {}).values()
+                sizes = {int(lv["chunk_bytes"]) for lv in leaves_meta
+                         if lv.get("chunk_bytes") and len(lv.get("chunks", ())) > 1}
+                if not sizes:
+                    sizes = {int(lv["chunk_bytes"]) for lv in leaves_meta
+                             if lv.get("chunk_bytes")}
+                if sizes:
+                    chunk_bytes = max(sizes)
 
     leaves = _flatten(tree)
     buffers: list[tuple[np.ndarray, str]] = []
@@ -111,6 +177,7 @@ def submit_checkpoint(
 
     task_id = service.submit_buffers(
         buffers, tenant=tenant, label=f"ckpt-step{step}", chunk_bytes=chunk_bytes,
+        dedup=dedup,
     )
     return CheckpointSubmission(
         service=service,

@@ -30,6 +30,10 @@ FAULT = "FAULT"
 # autotuner re-plan: the task's untransferred tail was re-partitioned.
 # Payload: old_chunk_bytes, chunk_bytes (new), drained, requeued, rate_Bps.
 TUNE = "TUNE"
+# content-plane dedup: chunks satisfied from the endpoint's chunk index
+# instead of wire moves. Payload: item, chunks (deduped count), bytes_saved,
+# demoted (stale hits demoted back to wire moves).
+DEDUP = "DEDUP"
 REALLOC = "REALLOC"
 PAUSED = "PAUSED"
 RESUMED = "RESUMED"

@@ -57,6 +57,7 @@ from repro.core.dataplane import (
     VerifyJob,
     stream_chunk,
 )
+from repro.cas import ChunkIndex
 from repro.core.journal import ChunkJournal, JournalRecord
 from repro.core.scheduler import TransferRequest
 from repro.obs import metrics as obsmetrics
@@ -144,6 +145,8 @@ class ServiceConfig:
     # ---- intra-chunk striping (concurrent sub-streams per large chunk) ---
     stripes: int = 1                 # stripe count per eligible chunk
     stripe_min_bytes: int = 4 * MiB  # smallest stripe worth its overhead
+    # ---- content plane (dedup against the endpoint chunk index) ----------
+    dedup: str = "off"               # default per-task policy: off | on
 
     def __post_init__(self):
         if self.max_concurrent_tasks > self.mover_budget:
@@ -168,16 +171,22 @@ class ServiceConfig:
         if self.stripe_min_bytes < 1:
             raise ValueError(
                 f"stripe_min_bytes must be >= 1, got {self.stripe_min_bytes}")
+        if self.dedup not in ("off", "on"):
+            raise ValueError(f"dedup must be 'off' or 'on', got {self.dedup!r}")
 
 
 class _Task:
     """Service-internal mutable task state (specs stay frozen)."""
 
     def __init__(self, spec: TaskSpec, seq: int, chunk_bytes: int,
-                 tuning: str = "static"):
+                 tuning: str = "static", dedup: str = "off"):
         self.spec = spec
         self.seq = seq
         self.tuning = tuning                     # effective policy (spec or default)
+        self.dedup = dedup                       # content-plane policy (spec or default)
+        self.chunks_deduped = 0
+        self.wire_bytes_saved = 0
+        self.dedup_demoted = 0
         self.controller: ChunkController | None = None
         self.replans = 0
         self.chunk_bytes_now = spec.chunk_bytes or chunk_bytes
@@ -338,6 +347,12 @@ class TransferService:
         self._alloc_dirty = True
         self._served: dict[str, int] = {}    # per-tenant activation history
         self.moved_chunks = 0        # chunks physically moved by THIS incarnation
+        # content plane: the service root's endpoint chunk index, opened
+        # lazily (first dedup-enabled task) or eagerly when the configured
+        # default is "on" — non-dedup services never pay index appends
+        self.cas: ChunkIndex | None = None
+        if self.config.dedup == "on":
+            self.cas_index()
 
         self._recover()
         self._scheduler = threading.Thread(
@@ -346,13 +361,32 @@ class TransferService:
         self._scheduler.start()
 
     # ------------------------------------------------------------------
+    # content plane
+    # ------------------------------------------------------------------
+    def cas_index(self) -> ChunkIndex:
+        """This service root's endpoint chunk index (lazily opened).
+
+        Lives at ``<root>/cas/index.log`` — a self-checksummed append log
+        with torn-tail repair and compaction, surviving service restarts the
+        same way journals do. Populated as verified chunks commit; probed by
+        dedup-enabled tasks before their movers start.
+        """
+        with self._lock:
+            if self.cas is None:
+                self.cas = ChunkIndex(
+                    os.path.join(str(self.store.root), "cas", "index.log"),
+                    scope="service")
+            return self.cas
+
+    # ------------------------------------------------------------------
     # recovery
     # ------------------------------------------------------------------
     def _recover(self) -> None:
         """Rebuild tasks from the log; re-queue durable non-terminal tasks."""
         for task_id, rec in sorted(self.store.records.items(), key=lambda kv: kv[1].seq):
             t = _Task(rec.spec, rec.seq, self.config.chunk_bytes,
-                      tuning=rec.spec.tuning or self.config.tuning)
+                      tuning=rec.spec.tuning or self.config.tuning,
+                      dedup=rec.spec.dedup or self.config.dedup)
             t.state = rec.state
             t.error = rec.error
             if rec.state in tk.TERMINAL:
@@ -392,6 +426,7 @@ class TransferService:
         chunk_bytes: int | None = None,
         batch: bool = True,
         tuning: str | None = None,
+        dedup: str | None = None,
     ) -> list[str]:
         """Submit a transfer request; returns the task ids it was split into.
 
@@ -400,15 +435,20 @@ class TransferService:
         routes large files to dedicated chunked tasks; ``batch=False`` forces
         a single task for the whole request. ``tuning="auto"`` closes the
         chunk-size loop over these tasks ("static" pins the plan; None defers
-        to ``ServiceConfig.tuning``).
+        to ``ServiceConfig.tuning``). ``dedup="on"`` probes the endpoint's
+        chunk index before moving — chunks the destination already holds are
+        satisfied by a local copy instead of wire moves ("off" bypasses the
+        index; None defers to ``ServiceConfig.dedup``).
         """
         norm = [self._norm_item(it) for it in items]
         if not norm:
             raise ValueError("empty submission")
         if tuning not in (None, "static", "auto"):
             raise ValueError(f"tuning must be 'static', 'auto' or None, got {tuning!r}")
+        if dedup not in (None, "off", "on"):
+            raise ValueError(f"dedup must be 'off', 'on' or None, got {dedup!r}")
         groups = self.batcher.split(norm) if batch else [list(norm)]
-        return [self._submit_group(g, tenant, label, chunk_bytes, tuning)
+        return [self._submit_group(g, tenant, label, chunk_bytes, tuning, dedup)
                 for g in groups]
 
     def submit_buffers(
@@ -419,6 +459,7 @@ class TransferService:
         label: str = "",
         chunk_bytes: int | None = None,
         tuning: str | None = None,
+        dedup: str | None = None,
     ) -> str:
         """Submit in-memory payloads (e.g. checkpoint arrays) as ONE task.
 
@@ -427,13 +468,19 @@ class TransferService:
         a higher level (repro.ckpt) re-submit and the destination journals
         still prevent re-moving landed chunks.
         """
+        if dedup not in (None, "off", "on"):
+            raise ValueError(f"dedup must be 'off', 'on' or None, got {dedup!r}")
         items, sources = [], []
         for i, (payload, dst) in enumerate(buffers):
             src = payload if hasattr(payload, "read") else BufferSource(payload)
             items.append(TransferItem(f"mem:{i}", str(dst), src.nbytes, mem=True))
             sources.append(src)
-        task_id = self._submit_group(items, tenant, label, chunk_bytes, tuning)
+        # register the sources under the SAME lock hold that publishes the
+        # task: the scheduler may activate it the instant the lock drops,
+        # and a dedup-enabled runner reads the source at seeding time
         with self._lock:
+            task_id = self._submit_group(items, tenant, label, chunk_bytes,
+                                         tuning, dedup)
             for i, src in enumerate(sources):
                 self._mem_sources[(task_id, i)] = src
         return task_id
@@ -450,24 +497,27 @@ class TransferService:
     def _submit_group(
         self, items: Sequence[TransferItem], tenant: str, label: str,
         chunk_bytes: int | None, tuning: str | None = None,
+        dedup: str | None = None,
     ) -> str:
         with self._cond:
             if self._stop_evt.is_set():
                 raise RuntimeError("service is shut down")
             task_id = self.store.next_task_id(tenant)
-            # pin the EFFECTIVE chunk size (and tuning policy) into the
-            # persisted spec: chunk plans (and so the journal's global chunk
-            # ids) must mean the same byte ranges even if the service
+            # pin the EFFECTIVE chunk size (and tuning/dedup policies) into
+            # the persisted spec: chunk plans (and so the journal's global
+            # chunk ids) must mean the same byte ranges even if the service
             # restarts with a different configured default
             spec = TaskSpec(
                 task_id=task_id, tenant=tenant, label=label,
                 items=tuple(items),
                 chunk_bytes=chunk_bytes or self.config.chunk_bytes,
                 tuning=tuning or self.config.tuning,
+                dedup=dedup or self.config.dedup,
             )
             rec = self.store.append_submit(spec)
             self._tasks[task_id] = _Task(spec, rec.seq, self.config.chunk_bytes,
-                                         tuning=spec.tuning or self.config.tuning)
+                                         tuning=spec.tuning or self.config.tuning,
+                                         dedup=spec.dedup or self.config.dedup)
             self._cond.notify_all()
         self.events.emit(
             ev.SUBMITTED, task_id, tenant,
@@ -574,6 +624,8 @@ class TransferService:
         for r in list(self._runners.values()):
             r.join(timeout=5.0)
         self.store.close()
+        if self.cas is not None:
+            self.cas.close()
 
     def kill(self) -> None:
         """Crash simulation: abandon all threads mid-flight, record nothing.
@@ -702,7 +754,6 @@ class TransferService:
             # subtracted per item and fresh tuned-band chunks are carved
             # from the gaps, so a journaled chunk is never re-moved.
             if all(t.static_record_ok(g, r) for g, r in recs.items()):
-                striped = False
                 for i, plan in enumerate(t.plans):
                     if plan.n_chunks == 0:
                         self._dest(t, i)    # zero-byte item: materialize the file
@@ -710,17 +761,17 @@ class TransferService:
                     base = t.chunk_base[i]
                     entries = [(base + c.index, i, c) for c in plan.chunks
                                if base + c.index not in recs]
+                    # content plane: satisfy index hits locally before any
+                    # mover starts (deduped chunks journal custody and are
+                    # counted done; only misses become wire work items)
+                    if t.dedup == "on":
+                        entries = self._dedup_entries(t, journal, jlock, i,
+                                                      entries)
                     with t.lock:
                         expanded = self._expand_entries_locked(t, entries)
-                    striped = striped or len(expanded) != len(entries)
                     for e in expanded:
                         self._enq(t, work, e)
                         n_work += 1
-                if striped:
-                    # stripe items outnumber their parent chunks: progress
-                    # accounting switches to work-item granularity
-                    with t.lock:
-                        t.chunks_total = len(recs) + n_work
             else:
                 per_item: dict[int, list] = {i: [] for i in range(len(t.spec.items))}
                 for g, r in recs.items():
@@ -754,13 +805,22 @@ class TransferService:
                             start_index=t.next_tune_seq[i],
                         )
                         t.next_tune_seq[i] += len(fresh)
-                        entries = self._expand_entries_locked(
-                            t, [(t.tune_gidx(i, c.index), i, c) for c in fresh])
+                    raw = [(t.tune_gidx(i, c.index), i, c) for c in fresh]
+                    if t.dedup == "on":
+                        # dedup runs OUTSIDE t.lock: it opens endpoints
+                        # (_source/_dest take the lock) and probes the index
+                        raw = self._dedup_entries(t, journal, jlock, i, raw)
+                    with t.lock:
+                        entries = self._expand_entries_locked(t, raw)
                     for e in entries:
                         self._enq(t, work, e)
                         n_work += 1
-                with t.lock:
-                    t.chunks_total = len(recs) + n_work
+            # total = done so far (resumed + deduped) + queued work items:
+            # stripe expansion and dedup both change the count, so it is
+            # recomputed here for every seeding path (for the plain static
+            # case this equals the plans' chunk total exactly)
+            with t.lock:
+                t.chunks_total = t.chunks_done + n_work
             if t.tuning == "auto":
                 self._arm_tuner(t, work)
             if self.config.pipeline != "serial":
@@ -986,6 +1046,120 @@ class TransferService:
         t.enq_t[entry[0]] = mono_s()
         work.put(entry)
 
+    # ------------------------------------------------------------------
+    # content plane (dedup negotiation during task seeding)
+    # ------------------------------------------------------------------
+    def _dedup_entries(self, t: _Task, journal, jlock, item_idx: int,
+                       entries):
+        """Probe one item's pending work entries against the chunk index;
+        returns the entries that still need wire moves.
+
+        Runs during seeding, before any mover spawns (and outside
+        ``t.lock``). Each pending chunk's source bytes are fingerprinted and
+        probed; a hit is satisfied locally — alias entries (the destination
+        already holds the bytes at the right offset) need only read-back
+        verification, other entries' backing bytes are re-verified, copied
+        in, and verified again after landing. Satisfied chunks journal
+        custody immediately and count as done; a stale entry is discarded
+        (demotion to wire, ``stale_index`` fault metric), so a wrong index
+        can cost a wire move but never an integrity escape. Deduped chunks
+        never reach ``_move_chunk``: they feed neither the tuner's
+        congestion signal nor ``moved_chunks`` (the chaos re-move counter).
+        """
+        index = self.cas_index()
+        item = t.spec.items[item_idx]
+        dst_path = os.path.abspath(item.dst)
+        src = self._source(t, item_idx)
+        dst = self._dest(t, item_idx)
+        tid = t.spec.task_id
+        keep = []
+        hits = saved = demoted = 0
+        for gidx, i, chunk in entries:
+            t_p = mono_s()
+            try:
+                data = src.read(chunk.offset, chunk.length)
+            except Exception:  # noqa: BLE001 — probe failure = wire move
+                keep.append((gidx, i, chunk))
+                continue
+            if len(data) != chunk.length:
+                keep.append((gidx, i, chunk))
+                continue
+            want = fingerprint_bytes(data)
+            del data
+            satisfied = aliased = stale_here = False
+            for e in index.lookup(want.hexdigest(), chunk.length):
+                alias = (os.path.abspath(e.path) == dst_path
+                         and e.offset == chunk.offset)
+                backing = index.verify_entry(e)
+                if backing is None:
+                    # stale: backing bytes vanished or rotted — drop the
+                    # entry and keep probing other locations
+                    index.discard(e.digest_hex, e.length, e.path, e.offset)
+                    index.note_stale()
+                    stale_here = True
+                    continue
+                try:
+                    if not alias:
+                        dst.write(chunk.offset, backing)
+                    back = dst.read_back(chunk.offset, chunk.length)
+                except Exception:  # noqa: BLE001 — local copy failed
+                    stale_here = True
+                    continue
+                if not verify(want, fingerprint_bytes(back)):
+                    stale_here = True     # copy landed corrupt: wire instead
+                    continue
+                satisfied, aliased = True, alias
+                break
+            now = mono_s()
+            if not satisfied:
+                if stale_here:
+                    demoted += 1
+                    with t.lock:
+                        t.dedup_demoted += 1
+                    self._m_faults.inc(1, tenant=t.spec.tenant, task=tid,
+                                       kind="stale_index")
+                    self.tracer.add("dedup_demote", "dedup", t_p, now,
+                                    task=tid, lane="dedup",
+                                    offset=chunk.offset, item=item_idx)
+                else:
+                    self.tracer.add("dedup_probe", "dedup", t_p, now,
+                                    task=tid, lane="dedup",
+                                    offset=chunk.offset, item=item_idx)
+                keep.append((gidx, i, chunk))
+                continue
+            # custody first: a kill+restart must see the deduped chunk as
+            # landed (journaled bytes are never re-moved — the same rule
+            # wire moves live by)
+            try:
+                with jlock:
+                    journal.append(JournalRecord(
+                        gidx, chunk.offset, chunk.length, want.hexdigest()))
+            except Exception:  # noqa: BLE001 — no custody, no dedup
+                keep.append((gidx, i, chunk))
+                continue
+            if not aliased:
+                try:
+                    index.put(want.hexdigest(), chunk.length, dst_path,
+                              chunk.offset)
+                except Exception:  # noqa: BLE001 — cache: failed put = miss
+                    pass
+            with t.lock:
+                t.chunks_done += 1
+                t.bytes_done += chunk.length
+                t.chunks_deduped += 1
+                t.wire_bytes_saved += chunk.length
+            hits += 1
+            saved += chunk.length
+            self.tracer.add("dedup_hit", "dedup", t_p, now, task=tid,
+                            lane="dedup", offset=chunk.offset, item=item_idx,
+                            alias=int(aliased))
+        if hits or demoted:
+            self.events.emit(
+                ev.DEDUP, tid, t.spec.tenant, item=item_idx, chunks=hits,
+                bytes_saved=saved, demoted=demoted, span=t.root_sid,
+            )
+        return keep
+
     def _worker(self, t: _Task, work, journal, jlock, wid: int = 0) -> None:
         lane = f"mover{wid}"
         try:
@@ -1091,6 +1265,15 @@ class TransferService:
         self.tracer.add("journal_append", "journal", t_j, time.perf_counter(),
                         task=t.spec.task_id, lane="journal",
                         offset=chunk.offset, item=item_idx)
+        if self.cas is not None:
+            # index population: every verified, journaled chunk is content a
+            # future task (or checkpoint save) may dedup against
+            try:
+                self.cas.put(digest.hexdigest(), chunk.length,
+                             os.path.abspath(t.spec.items[item_idx].dst),
+                             chunk.offset)
+            except Exception:  # noqa: BLE001 — cache: failed put = miss
+                pass
         self._m_chunks.inc(1, tenant=t.spec.tenant, task=t.spec.task_id)
         self._m_bytes.inc(chunk.length, tenant=t.spec.tenant,
                           task=t.spec.task_id)
@@ -1473,7 +1656,8 @@ class TransferService:
             "verify_lag_p99_s": round(lag.quantile(0.99, task=tid), 6),
             "faults": {
                 kind: self._m_faults.value(tenant=ten, task=tid, kind=kind)
-                for kind in ("corruption", "outage", "generic", "mover_death")
+                for kind in ("corruption", "outage", "generic", "mover_death",
+                             "stale_index")
             },
             "spans": len(self.tracer.spans(tid)),
         }
@@ -1508,6 +1692,9 @@ class TransferService:
                 chunk_bytes_current=t.chunk_bytes_now,
                 stripes=self.config.stripes,
                 striped_chunks=t.striped_chunks,
+                chunks_deduped=t.chunks_deduped,
+                wire_bytes_saved=t.wire_bytes_saved,
+                dedup_demoted=t.dedup_demoted,
                 pipeline=self.config.pipeline,
                 cksum_seconds=round(t.cksum_s, 6),
                 cksum_lag_s=round(t.cksum_lag_s, 6),

@@ -94,6 +94,9 @@ class TaskSpec:
     # per-task tuning policy: "auto" closes the chunk-size loop over this
     # task's tail, "static" pins the plan; None defers to the service default
     tuning: str | None = None
+    # per-task dedup policy: "on" probes the destination endpoint's chunk
+    # index before moving, "off" bypasses it; None defers to the service
+    dedup: str | None = None
     submitted_s: float = dataclasses.field(default_factory=wall_s)
 
     @property
@@ -116,6 +119,7 @@ class TaskSpec:
             "items": [it.to_json() for it in self.items],
             "chunk_bytes": self.chunk_bytes,
             "tuning": self.tuning,
+            "dedup": self.dedup,
             "submitted_s": self.submitted_s,
         }
 
@@ -128,6 +132,7 @@ class TaskSpec:
             items=tuple(TransferItem.from_json(o) for o in obj["items"]),
             chunk_bytes=obj.get("chunk_bytes"),
             tuning=obj.get("tuning"),
+            dedup=obj.get("dedup"),
             submitted_s=float(obj.get("submitted_s", 0.0)),
         )
 
@@ -219,6 +224,10 @@ class TaskStatus:
     # intra-chunk striping accounting (stripe-band work items):
     stripes: int = 1          # configured stripe count per eligible chunk
     striped_chunks: int = 0   # parent chunks that were split into stripes
+    # content-plane accounting (dedup against the endpoint chunk index):
+    chunks_deduped: int = 0   # chunks satisfied locally, no wire move
+    wire_bytes_saved: int = 0 # bytes those chunks would have moved
+    dedup_demoted: int = 0    # stale index hits demoted to wire moves
     # data-plane accounting (pipelined integrity engine visibility):
     pipeline: str = "serial"  # serial | single_pass | pipelined
     cksum_seconds: float = 0.0   # checksum work on the mover path (cumulative)

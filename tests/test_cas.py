@@ -1,0 +1,632 @@
+"""Content-addressed store conformance: chunk-index round-trip + crash
+repair (property tests), dedup negotiation through the engine and the
+service (hits, aliases, stale demotion + quarantine, restart custody),
+delta checkpoints restoring bit-identical to full saves, replica-aware
+fabric campaigns, and the stale-index fault scenario."""
+import json
+import os
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypofallback import given, settings, strategies as st
+
+from repro.cas import ChunkIndex, seed_index_from_manifest
+from repro.ckpt.checkpoint import _flatten, restore_checkpoint, save_checkpoint
+from repro.core import (
+    BufferSource,
+    ChunkJournal,
+    ChunkedTransfer,
+    FileDest,
+    JournalRecord,
+    fingerprint_bytes,
+    plan_chunks,
+)
+from repro.fabric import CampaignRunner, shared_trunk_topology
+from repro.fabric.campaign import DEDUPED
+from repro.faults import (
+    FULL_MATRIX,
+    SCENARIOS,
+    FaultStats,
+    corrupt_index_backing,
+    parse_scenario,
+)
+from repro.service import BatchConfig, ServiceConfig, TransferService
+from repro.service.ckpt_bridge import submit_checkpoint
+
+
+def _payload(seed: int, nbytes: int) -> bytes:
+    return np.random.default_rng(seed).integers(
+        0, 256, nbytes, dtype=np.uint8).tobytes()
+
+
+def _digest_hex(data: bytes) -> str:
+    return fingerprint_bytes(data).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# ChunkIndex: basic semantics
+# ---------------------------------------------------------------------------
+def test_index_put_lookup_discard(tmp_path):
+    idx = ChunkIndex(tmp_path / "cas" / "index.log")
+    d = _digest_hex(b"x" * 64)
+    assert idx.put(d, 64, "/data/a.bin", 0) is True
+    assert idx.put(d, 64, "/data/a.bin", 0) is False       # duplicate location
+    assert idx.put(d, 64, "/data/b.bin", 128) is True      # second location
+    hits = idx.lookup(d, 64)
+    assert {(e.path, e.offset) for e in hits} == {("/data/a.bin", 0),
+                                                 ("/data/b.bin", 128)}
+    assert all(e.digest_hex == d and e.length == 64 for e in hits)
+    assert idx.lookup(d, 65) == ()                          # length is the key
+    assert idx.discard(d, 64, "/data/a.bin", 0) is True
+    assert idx.discard(d, 64, "/data/a.bin", 0) is False    # already gone
+    assert idx.n_digests == 1 and idx.n_locations == 1
+    assert idx.discard(d, 64, "/data/b.bin", 128) is True
+    assert idx.lookup(d, 64) == ()                          # key fully dropped
+    assert idx.n_digests == 0
+    idx.close()
+
+
+# ---------------------------------------------------------------------------
+# ChunkIndex: property tests (round-trip replay, compaction)
+# ---------------------------------------------------------------------------
+def _apply_random_ops(idx: ChunkIndex, model: dict, rnd) -> None:
+    """Drive a random put/discard sequence against index + model dict."""
+    digests = [_digest_hex(bytes([i]) * 8) for i in range(4)]
+    paths = ["/p/a", "/p/b", "/p/c"]
+    for _ in range(rnd.randint(5, 40)):
+        d = rnd.choice(digests)
+        ln = rnd.choice((8, 16))
+        loc = (rnd.choice(paths), rnd.choice((0, 8, 16)))
+        key = (d, ln)
+        if rnd.random() < 0.7:
+            idx.put(d, ln, loc[0], loc[1])
+            model.setdefault(key, set()).add(loc)
+        else:
+            idx.discard(d, ln, loc[0], loc[1])
+            if key in model:
+                model[key].discard(loc)
+                if not model[key]:
+                    del model[key]
+
+
+def _as_model(entries) -> dict:
+    out: dict = {}
+    for e in entries:
+        out.setdefault((e.digest_hex, e.length), set()).add((e.path, e.offset))
+    return out
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.randoms())
+def test_index_replay_roundtrip_property(rnd):
+    with tempfile.TemporaryDirectory(prefix="cas-prop-") as td:
+        path = os.path.join(td, "index.log")
+        model: dict = {}
+        with ChunkIndex(path, fsync=False) as idx:
+            _apply_random_ops(idx, model, rnd)
+            live = _as_model(idx.entries())
+        # replay from the log alone must rebuild the exact live set
+        with ChunkIndex(path) as back:
+            assert back.torn_tail_bytes == 0
+            assert _as_model(back.entries()) == live == model
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.randoms())
+def test_index_compaction_preserves_live_records_property(rnd):
+    with tempfile.TemporaryDirectory(prefix="cas-gc-") as td:
+        path = os.path.join(td, "index.log")
+        model: dict = {}
+        with ChunkIndex(path) as idx:
+            _apply_random_ops(idx, model, rnd)
+            before = _as_model(idx.entries())
+            out = idx.compact()
+            assert out["bytes_after"] <= out["bytes_before"]
+            assert out["records"] == sum(len(v) for v in before.values())
+            # live view unchanged by compaction; appends still work after
+            assert _as_model(idx.entries()) == before == model
+            d = _digest_hex(b"post-compact")
+            idx.put(d, 12, "/p/post", 0)
+        with ChunkIndex(path) as back:
+            got = _as_model(back.entries())
+            assert got.pop((d, 12)) == {("/p/post", 0)}
+            assert got == before
+
+
+def test_index_torn_tail_truncation_at_every_byte(tmp_path):
+    """Crash-consistency: cutting the log at ANY byte inside the last record
+    must repair to exactly the prefix records, and stay appendable."""
+    ref = tmp_path / "ref.log"
+    with ChunkIndex(ref) as idx:
+        for i in range(4):
+            idx.put(_digest_hex(bytes([i]) * 8), 8, f"/p/{i}", i * 8)
+        full = _as_model(idx.entries())
+    data = ref.read_bytes()
+    # start of the last record = end of the third line
+    cut0 = len(data) - len(data.rstrip(b"\n").rsplit(b"\n", 1)[-1]) - 1
+    for cut in range(cut0 + 1, len(data)):
+        p = tmp_path / f"cut{cut}.log"
+        p.write_bytes(data[:cut])
+        with ChunkIndex(p) as idx:
+            got = _as_model(idx.entries())
+            assert len(got) == 3 and all(k in full for k in got)
+            assert idx.torn_tail_bytes == cut - cut0
+            idx.put(_digest_hex(b"appended"), 8, "/p/new", 0)
+        with ChunkIndex(p) as back:          # repaired log replays cleanly
+            assert back.torn_tail_bytes == 0
+            assert len(_as_model(back.entries())) == 4
+
+
+def test_index_garbled_mid_file_record_skipped(tmp_path):
+    p = tmp_path / "index.log"
+    with ChunkIndex(p) as idx:
+        idx.put(_digest_hex(b"a"), 1, "/p/a", 0)
+        idx.put(_digest_hex(b"b"), 1, "/p/b", 0)
+    lines = p.read_bytes().splitlines(keepends=True)
+    lines.insert(1, b'{"op": "put", "garbled\n')
+    p.write_bytes(b"".join(lines))
+    with ChunkIndex(p) as idx:
+        # both genuine records survive; the damaged line is skipped, and it
+        # is mid-file so nothing is truncated
+        assert len(idx.entries()) == 2
+        assert idx.torn_tail_bytes == 0
+
+
+def test_verify_entry_detects_stale_backing(tmp_path):
+    backing = tmp_path / "backing.bin"
+    region = _payload(1, 256)
+    backing.write_bytes(b"\0" * 64 + region + b"\0" * 32)
+    idx = ChunkIndex(tmp_path / "index.log")
+    idx.put(_digest_hex(region), 256, str(backing), 64)
+    [entry] = idx.entries()
+    assert idx.verify_entry(entry) == region            # genuine
+    with open(backing, "r+b") as fh:                    # corrupt one byte
+        fh.seek(64 + 17)
+        fh.write(b"\xff" if region[17] != 0xff else b"\x00")
+    assert idx.verify_entry(entry) is None              # stale: bit rot
+    backing.write_bytes(b"\0" * 80)                     # truncated region
+    assert idx.verify_entry(entry) is None
+    os.unlink(backing)
+    assert idx.verify_entry(entry) is None              # stale: gone
+    idx.close()
+
+
+def test_seed_index_from_manifest(tmp_path):
+    tree = {"w": np.arange(4096, dtype=np.float32),
+            "b": np.arange(128, dtype=np.float32)}
+    rep = save_checkpoint(str(tmp_path / "ck"), 1, tree, chunk_bytes=4096)
+    with open(os.path.join(rep.path, "MANIFEST.json")) as fh:
+        manifest = json.load(fh)
+    idx = ChunkIndex(tmp_path / "index.log")
+    n = seed_index_from_manifest(idx, manifest, rep.path)
+    n_chunks = sum(len(lv["chunks"]) for lv in manifest["leaves"].values())
+    assert n == n_chunks == idx.n_locations
+    # every seeded entry must verify against the save's real bytes
+    for entry in idx.entries():
+        assert idx.verify_entry(entry) is not None
+    # seeding twice is idempotent
+    assert seed_index_from_manifest(idx, manifest, rep.path) == 0
+    idx.close()
+
+
+def test_index_stats_and_cas_cli(tmp_path, capsys):
+    from repro.launch.transferd import cas_main
+
+    path = str(tmp_path / "cas" / "index.log")
+    with ChunkIndex(path) as idx:
+        for i in range(6):
+            idx.put(_digest_hex(bytes([i])), 100, f"/p/{i}", 0)
+        for i in range(4):
+            idx.discard(_digest_hex(bytes([i])), 100, f"/p/{i}", 0)
+        s = idx.stats()
+        assert s["digests"] == 2 and s["locations"] == 2
+        assert s["indexed_bytes"] == 200
+        log_before = s["log_bytes"]
+    cas_main(["stats", "--index", path])
+    out = capsys.readouterr().out
+    assert "digests" in out and "2" in out
+    cas_main(["gc", "--index", path])                   # satellite (a)
+    out = capsys.readouterr().out
+    assert "live records" in out or "records" in out
+    with ChunkIndex(path) as idx:
+        assert idx.n_locations == 2                     # gc kept live entries
+        assert idx.stats()["log_bytes"] < log_before    # and dropped the dead
+
+
+# ---------------------------------------------------------------------------
+# ChunkJournal.compact (same append-log discipline as the index)
+# ---------------------------------------------------------------------------
+def test_journal_compact_preserves_live_records(tmp_path):
+    jpath = str(tmp_path / "t.journal")
+    j = ChunkJournal(jpath)
+    for i in range(8):
+        j.append(JournalRecord(i, i * 64, 64, _digest_hex(bytes([i]) * 64)))
+    for i in (2, 5):   # superseded: failed records pop their chunk id
+        j.append(JournalRecord(i, i * 64, 64, "", status="failed"))
+    live = dict(j.records)
+    assert set(live) == set(range(8)) - {2, 5}
+    before = os.path.getsize(jpath)
+    out = j.compact()
+    assert out["records"] == 6
+    assert out["bytes_after"] < before                  # dead records dropped
+    assert j.records == live
+    j.append(JournalRecord(8, 512, 64, _digest_hex(b"post" * 16)))
+    j.close()
+    back = ChunkJournal(jpath)
+    assert set(back.records) == set(live) | {8}
+    back.close()
+
+
+# ---------------------------------------------------------------------------
+# engine dedup: hits, aliases, stale demotion, restart custody
+# ---------------------------------------------------------------------------
+def _engine_run(payload, plan, jpath, *, index=None, injector=None,
+                max_retries=3):
+    journal = ChunkJournal(jpath)
+    try:
+        report = ChunkedTransfer(
+            BufferSource(payload), FileDest(jpath + ".out", len(payload)),
+            plan, journal=journal, max_retries=max_retries,
+            fault_injector=injector, dedup_index=index,
+            dedup_target=(jpath + ".out") if index is not None else "",
+        ).run()
+    finally:
+        journal.close()
+    with open(jpath + ".out", "rb") as fh:
+        return report, fh.read()
+
+
+def test_engine_dedup_second_transfer_skips_wire(tmp_path):
+    nbytes, chunk = 96 * 1024 + 7, 16 * 1024
+    plan = plan_chunks(nbytes, 4, chunk_bytes=chunk, min_chunk=1,
+                       max_chunk=1 << 50)
+    payload = _payload(2, nbytes)
+    index = ChunkIndex(tmp_path / "index.log")
+    rep_a, final_a = _engine_run(payload, plan, str(tmp_path / "a.journal"),
+                                 index=index)
+    assert rep_a.deduped_chunks == 0 and final_a == payload
+    rep_b, final_b = _engine_run(payload, plan, str(tmp_path / "b.journal"),
+                                 index=index)
+    index.close()
+    assert final_b == payload
+    assert rep_b.deduped_chunks == plan.n_chunks        # zero wire moves
+    assert rep_b.dedup_bytes_saved == nbytes
+    assert rep_b.dedup_demoted == 0 and rep_b.quarantined == ()
+    # 0-escape: deduped chunks still fold into the whole-file digest chain
+    assert rep_b.file_digest.hexdigest() == rep_a.file_digest.hexdigest() \
+        == _digest_hex(payload)
+
+
+def test_engine_dedup_alias_rerun_same_target(tmp_path):
+    """Re-running against the SAME target file: every hit is an alias
+    (bytes already at the destination offset) — verify-only, no copy."""
+    nbytes, chunk = 64 * 1024 + 3, 16 * 1024
+    plan = plan_chunks(nbytes, 4, chunk_bytes=chunk, min_chunk=1,
+                       max_chunk=1 << 50)
+    payload = _payload(3, nbytes)
+    index = ChunkIndex(tmp_path / "index.log")
+    jpath = str(tmp_path / "t.journal")
+    _engine_run(payload, plan, jpath, index=index)
+    os.unlink(jpath)                # fresh incarnation, no journal custody
+    locations_before = index.n_locations
+    rep, final = _engine_run(payload, plan, jpath, index=index)
+    index.close()
+    assert final == payload
+    assert rep.deduped_chunks == plan.n_chunks
+    assert index.n_locations == locations_before        # pure alias hits
+
+
+def test_engine_stale_demotion_quarantines(tmp_path):
+    nbytes, chunk = 128 * 1024 + 11, 16 * 1024
+    plan = plan_chunks(nbytes, 4, chunk_bytes=chunk, min_chunk=1,
+                       max_chunk=1 << 50)
+    payload = _payload(4, nbytes)
+    index = ChunkIndex(tmp_path / "index.log")
+    _engine_run(payload, plan, str(tmp_path / "donor.journal"), index=index)
+    victims = corrupt_index_backing(index, count=2, seed=4)
+    assert len(victims) == 2
+    rep, final = _engine_run(payload, plan, str(tmp_path / "b.journal"),
+                             index=index)
+    assert final == payload                             # the wire healed it
+    assert rep.dedup_demoted == 2                       # every poisoned hit
+    assert len(rep.quarantined) == 2                    # left evidence
+    assert rep.deduped_chunks == plan.n_chunks - 2
+    assert all("stale index entry" in q.detail for q in rep.quarantined)
+    # demotion also discarded the lying entries, so a re-probe re-verifies
+    for v in victims:
+        assert (v.path, v.offset) not in {
+            (e.path, e.offset) for e in index.lookup(v.digest_hex, v.length)}
+    index.close()
+
+
+class _HostCrash(Exception):
+    pass
+
+
+def test_engine_dedup_restart_custody(tmp_path):
+    """Deduped chunks journal custody at negotiation time: after a crash
+    mid-run, a restart never re-moves ANY journaled chunk."""
+    nbytes, chunk = 256 * 1024 + 13, 16 * 1024
+    plan = plan_chunks(nbytes, 4, chunk_bytes=chunk, min_chunk=1,
+                       max_chunk=1 << 50)
+    payload = _payload(5, nbytes)
+    index = ChunkIndex(tmp_path / "index.log")
+    _engine_run(payload, plan, str(tmp_path / "donor.journal"), index=index)
+    # mutate half the chunks so the rerun mixes dedup hits and wire moves
+    buf = bytearray(payload)
+    for ci in range(0, plan.n_chunks, 2):
+        lo = ci * chunk
+        hi = min(lo + chunk, nbytes)
+        buf[lo:hi] = _payload(50 + ci, hi - lo)
+    mutated = bytes(buf)
+
+    lock = threading.Lock()
+    calls = [0]
+
+    def bomb(_chunk, _attempt):
+        with lock:
+            calls[0] += 1
+            if calls[0] > 1:
+                raise _HostCrash("host died mid-delta")
+
+    jb = str(tmp_path / "b.journal")
+    with pytest.raises((RuntimeError, _HostCrash)):
+        _engine_run(mutated, plan, jb, index=index, injector=bomb,
+                    max_retries=0)
+    probe = ChunkJournal(jb)
+    journaled = set(probe.records)
+    probe.close()
+    assert journaled                 # dedup custody landed before the crash
+
+    moved2: list[int] = []
+
+    def record(c, _attempt):
+        with lock:
+            moved2.append(c.index)
+
+    rep2, final2 = _engine_run(mutated, plan, jb, index=index,
+                               injector=record)
+    index.close()
+    assert final2 == mutated
+    assert set(moved2) & journaled == set()             # custody held
+    assert rep2.skipped_chunks == len(journaled)
+
+
+# ---------------------------------------------------------------------------
+# service dedup: counters, events, per-task policy
+# ---------------------------------------------------------------------------
+def _service(tmp_path, **over):
+    cfg = dict(mover_budget=4, max_concurrent_tasks=2, chunk_bytes=16 * 1024,
+               tick_s=0.002,
+               batch=BatchConfig(direct_bytes=1 << 30, batch_files=64))
+    cfg.update(over)
+    return TransferService(str(tmp_path / "svc"), ServiceConfig(**cfg))
+
+
+def test_service_dedup_counters_and_events(tmp_path):
+    nbytes = 64 * 1024 + 3
+    payload = _payload(6, nbytes)
+    src = str(tmp_path / "data.bin")
+    with open(src, "wb") as fh:
+        fh.write(payload)
+    svc = _service(tmp_path, dedup="on")
+    events = []
+    svc.subscribe(lambda e: events.append(e))
+    try:
+        [t1] = svc.submit([(src, src + ".v1")], batch=False)
+        st1 = svc.wait(t1, timeout=60)
+        [t2] = svc.submit([(src, src + ".v2")], batch=False)
+        st2 = svc.wait(t2, timeout=60)
+    finally:
+        svc.close()
+    assert st1.state == st2.state == "SUCCEEDED"
+    assert st1.chunks_deduped == 0                      # cold index
+    assert st2.chunks_deduped == st2.chunks_total       # fully satisfied
+    assert st2.wire_bytes_saved == st2.bytes_total == nbytes
+    assert st2.dedup_demoted == 0
+    with open(src + ".v2", "rb") as fh:
+        assert fh.read() == payload
+    dedup_evs = [e for e in events if e.kind == "DEDUP"]
+    assert dedup_evs and dedup_evs[-1].task_id == t2
+    pay = dedup_evs[-1].payload
+    assert pay["chunks"] == st2.chunks_total
+    assert pay["bytes_saved"] == nbytes and pay["demoted"] == 0
+    # both item digests agree: dedup kept the 0-escape digest chain intact
+    assert (st1.item_reports[0].digest_hex
+            == st2.item_reports[0].digest_hex == _digest_hex(payload))
+
+
+def test_service_dedup_off_bypasses_index(tmp_path):
+    nbytes = 48 * 1024
+    payload = _payload(7, nbytes)
+    src = str(tmp_path / "data.bin")
+    with open(src, "wb") as fh:
+        fh.write(payload)
+    svc = _service(tmp_path, dedup="on")                # default is on...
+    try:
+        [t1] = svc.submit([(src, src + ".v1")], batch=False)
+        svc.wait(t1, timeout=60)
+        # ...but the per-task policy wins: "off" never probes the index
+        [t2] = svc.submit([(src, src + ".v2")], batch=False, dedup="off")
+        st2 = svc.wait(t2, timeout=60)
+    finally:
+        svc.close()
+    assert st2.state == "SUCCEEDED"
+    assert st2.chunks_deduped == 0 and st2.wire_bytes_saved == 0
+    with open(src + ".v2", "rb") as fh:
+        assert fh.read() == payload
+
+
+# ---------------------------------------------------------------------------
+# delta checkpoints: near-zero repeat saves, bit-identical restores
+# ---------------------------------------------------------------------------
+def test_delta_checkpoint_equivalence(tmp_path):
+    rng = np.random.default_rng(8)
+    tree = {
+        "layer0/w": rng.standard_normal((2048,)).astype(np.float32),
+        "layer0/b": rng.standard_normal((128,)).astype(np.float32),
+        "emb": rng.integers(0, 255, (1024,)).astype(np.int32),
+    }
+    ck = str(tmp_path / "saves")
+    svc = _service(tmp_path)
+    try:
+        submit_checkpoint(svc, ck, 1, tree, chunk_bytes=4096).wait(60)
+        # unchanged re-save: the delta must move (near) nothing
+        sub2 = submit_checkpoint(svc, ck, 2, tree, delta=True)
+        rep2 = sub2.wait(60)
+        st2 = sub2.status()
+        assert st2.chunks_deduped == st2.chunks_total
+        assert st2.wire_bytes_saved == st2.bytes_total
+        # one-leaf mutation: only that leaf's chunks ride the wire
+        tree2 = dict(tree)
+        tree2["layer0/b"] = tree["layer0/b"] + 1.0
+        sub3 = submit_checkpoint(svc, ck, 3, tree2, delta=True)
+        rep3 = sub3.wait(60)
+        st3 = sub3.status()
+        assert 0 < st3.chunks_deduped < st3.chunks_total
+    finally:
+        svc.close()
+
+    # delta restore is bit-identical to a plain full save of the same tree
+    full = save_checkpoint(str(tmp_path / "full"), 3, tree2, chunk_bytes=4096)
+    td, sd = restore_checkpoint(rep3.path)
+    tf, sf = restore_checkpoint(full.path)
+    assert sd == sf == 3
+    td, tf = _flatten(td), _flatten(tf)
+    for k in tree2:
+        assert np.array_equal(td[k], tree2[k])
+        assert np.array_equal(td[k], tf[k])
+    # raw leaf files and manifest digests agree byte-for-byte
+    with open(os.path.join(rep3.path, "MANIFEST.json")) as fh:
+        md = json.load(fh)
+    with open(os.path.join(full.path, "MANIFEST.json")) as fh:
+        mf = json.load(fh)
+    assert set(md["leaves"]) == set(mf["leaves"])
+    for key, lv in md["leaves"].items():
+        assert lv["digest"] == mf["leaves"][key]["digest"]
+        with open(os.path.join(rep3.path, lv["file"]), "rb") as fh:
+            delta_bytes = fh.read()
+        with open(os.path.join(full.path, mf["leaves"][key]["file"]), "rb") as fh:
+            assert delta_bytes == fh.read()
+    # the unchanged re-save also restored intact
+    t2r, s2 = restore_checkpoint(rep2.path)
+    assert s2 == 2
+    for k, arr in _flatten(t2r).items():
+        assert np.array_equal(arr, tree[k])
+
+
+def test_delta_without_previous_save_is_full_save(tmp_path):
+    tree = {"w": np.arange(512, dtype=np.float32)}
+    svc = _service(tmp_path)
+    try:
+        sub = submit_checkpoint(svc, str(tmp_path / "saves"), 1, tree,
+                                delta=True)
+        rep = sub.wait(60)
+        assert sub.status().chunks_deduped == 0         # degraded gracefully
+    finally:
+        svc.close()
+    td, step = restore_checkpoint(rep.path)
+    assert step == 1 and np.array_equal(_flatten(td)["w"], tree["w"])
+
+
+# ---------------------------------------------------------------------------
+# fabric: replica-aware campaigns
+# ---------------------------------------------------------------------------
+def _campaign_env(tmp_path, topo, nbytes):
+    payload = _payload(9, nbytes)
+    dirs = {}
+    for name in topo.endpoints:
+        dirs[name] = str(tmp_path / name)
+        os.makedirs(dirs[name])
+    with open(os.path.join(dirs["src"], "data.bin"), "wb") as fh:
+        fh.write(payload)
+    indexes = {name: ChunkIndex(tmp_path / "idx" / name / "index.log")
+               for name in topo.endpoints}
+    return payload, dirs, indexes, _service(tmp_path)
+
+
+def test_fabric_campaign_replica_dedup_and_heal(tmp_path):
+    topo = shared_trunk_topology(2, trunk_hops=2)
+    nbytes = 96 * 1024 + 5
+    payload, dirs, indexes, svc = _campaign_env(tmp_path, topo, nbytes)
+    try:
+        runner = CampaignRunner(svc, topo, dirs, indexes=indexes)
+        rep1 = runner.replicate("data.bin", "src", ["d0", "d1"], timeout=60)
+        assert rep1.state == "SUCCEEDED" and rep1.edges_deduped == 0
+        # second campaign: every replica already holds the content, so every
+        # edge is satisfied from its index — zero wire bytes, full custody
+        rep2 = runner.replicate("data.bin", "src", ["d0", "d1"], timeout=60)
+        assert rep2.state == "SUCCEEDED"
+        assert rep2.edges_deduped == len(rep2.edge_states) == 4
+        assert set(rep2.edge_states.values()) == {DEDUPED}
+        assert rep2.wire_bytes == 0
+        assert rep2.dedup_wire_bytes_saved == 4 * nbytes
+        assert rep2.replicas_verified == 2 and rep2.integrity_escapes == 0
+        assert rep2.origin_digest == rep1.origin_digest
+        for d in ("d0", "d1"):
+            assert rep2.replica_digests[d] == rep2.origin_digest
+        # poison one replica: its edge demotes to the wire and heals the file
+        victim = os.path.join(dirs["d0"], "data.bin")
+        with open(victim, "r+b") as fh:
+            fh.seek(100)
+            b = fh.read(1)
+            fh.seek(100)
+            fh.write(bytes([b[0] ^ 0x40]))
+        rep3 = runner.replicate("data.bin", "src", ["d0", "d1"], timeout=60)
+        assert rep3.state == "SUCCEEDED" and rep3.integrity_escapes == 0
+        states = list(rep3.edge_states.values())
+        assert states.count(DEDUPED) == len(states) - 1     # one wire edge
+        with open(victim, "rb") as fh:
+            assert fh.read() == payload                     # healed
+        assert rep3.replica_digests["d0"] == rep3.origin_digest
+    finally:
+        svc.close()
+        for idx in indexes.values():
+            idx.close()
+
+
+# ---------------------------------------------------------------------------
+# faults: stale_index scenario DSL + deterministic injector
+# ---------------------------------------------------------------------------
+def test_stale_index_scenario_dsl():
+    sc = parse_scenario("stale_index")
+    assert sc.stale_index == 2 and not sc.is_clean
+    assert "stale_index" in SCENARIOS and "stale_index" in FULL_MATRIX
+    combo = parse_scenario("stale_index+kill_2_movers")
+    assert combo.stale_index == 2 and combo.kill_movers == 2
+
+
+def test_corrupt_index_backing_deterministic(tmp_path):
+    def build(tag):
+        backing = tmp_path / f"{tag}.bin"
+        data = _payload(10, 8 * 64)
+        backing.write_bytes(data)
+        idx = ChunkIndex(tmp_path / tag / "index.log")
+        for i in range(8):
+            idx.put(_digest_hex(data[i * 64:(i + 1) * 64]), 64,
+                    str(backing), i * 64)
+        return idx
+
+    idx_a, idx_b = build("a"), build("b")
+    stats = FaultStats()
+    vics_a = corrupt_index_backing(idx_a, count=3, seed=5, stats=stats)
+    vics_b = corrupt_index_backing(idx_b, count=3, seed=5)
+    assert stats.stale_index_corruptions == 3
+    assert [(e.digest_hex, e.offset) for e in vics_a] \
+        == [(e.digest_hex, e.offset) for e in vics_b]       # seeded: same draw
+    for v in vics_a:
+        assert idx_a.verify_entry(v) is None                # genuinely poisoned
+    # non-victims still verify
+    untouched = [e for e in idx_a.entries()
+                 if (e.digest_hex, e.offset)
+                 not in {(v.digest_hex, v.offset) for v in vics_a}]
+    assert untouched and all(
+        idx_a.verify_entry(e) is not None for e in untouched)
+    idx_a.close()
+    idx_b.close()
