@@ -1,25 +1,46 @@
-"""Service-level load benchmark: mixed multi-tenant workload, policy sweep.
+"""Service-level load benchmark: policy sweep + million-task control plane.
 
-Measures what the *service* delivers — aggregate Gb/s and p50/p99 task
-latency — on the ISSUE's mixed workload (1000 x 100 MB small files + 4 x 1 TB
-files across 4 tenants) for each mover-allocation policy, on the calibrated
-ALCF->NERSC virtual testbed. The headline result: the chunk-aware "marginal"
-policy beats the pre-chunking "file_bound" baseline on aggregate throughput
-because terabyte single-file tasks can now absorb a real share of the mover
-budget instead of being pinned to one mover each.
+Two modes, both emitting ``BENCH_service_load.json``:
 
-Prints ``name,value,unit`` CSV like benchmarks.run and writes
-``BENCH_service_load.json`` (metrics + git rev) for trajectory tracking.
+Default — the original mixed-workload policy sweep: aggregate Gb/s and
+p50/p99 task latency for each mover-allocation policy on the calibrated
+ALCF->NERSC virtual testbed (1000 x 100 MB + 4 x 1 TB across 4 tenants).
 
-Run: PYTHONPATH=src python -m benchmarks.service_load [--quick]
+``--scale`` — the control-plane scale gauntlet (10^5 tasks across 10^3
+tenants; ``--quick`` shrinks to CI size):
+
+  1. store leg: p99 submit latency of the sharded group-commit TaskStore
+     (bulk appends, one fsync per shard per batch) vs the unsharded
+     fsync-per-append baseline under the same 32-thread submit storm.
+     GATE: sharded bulk p99 * 10 <= unsharded p99.
+  2. scheduler leg: a real TransferService holding the full task count
+     resident+PENDING (activation quota 0) — scheduler cycle p99 must stay
+     flat vs a 10^3-task control. GATE: ratio <= 5. Also gates p99
+     status latency (<= 20 ms) and reports bulk submit + cursor-page times.
+  3. virtual leg: the full task count through the virtual-time testbed
+     (fluid model, indexed activation). GATE: every task completes.
+  4. real-engine + kill/restart leg: real chunked transfers at CI size,
+     then a mid-flight kill. GATES: a fresh replay of the sharded store
+     reconstructs the killed service's TaskRecords exactly (seq included),
+     and the restarted service re-moves 0 journaled chunks.
+
+Prints ``name,value,unit`` CSV like benchmarks.run; exits non-zero listing
+every violated gate.
+
+Run: PYTHONPATH=src python -m benchmarks.service_load [--scale] [--quick] [--force]
 """
 from __future__ import annotations
 
+import os
+import random
+import shutil
 import sys
+import tempfile
+import threading
 import time
 
 from benchmarks._results import emit
-from repro.service import BatchConfig, mixed_workload, run_load
+from repro.service import BatchConfig, Submission, mixed_workload, run_load
 
 MB = 1000 * 1000
 GB = 1000 * MB
@@ -60,19 +81,394 @@ def sweep(*, quick: bool = False) -> list[tuple[str, float, str]]:
     return rows
 
 
-def main() -> None:
-    quick = "--quick" in sys.argv
-    force = "--force" in sys.argv
+# ---------------------------------------------------------------------------
+# --scale legs
+# ---------------------------------------------------------------------------
+def _pctl(xs: list[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(len(s) - 1, max(0, int(round(q / 100.0 * len(s))) - 1))]
+
+
+def _spec_of(store, tenant: str):
+    from repro.service.task import TaskSpec, TransferItem
+    return TaskSpec(
+        task_id=store.next_task_id(tenant), tenant=tenant, label="bench",
+        items=(TransferItem("s", "d", 1),),
+    )
+
+
+def store_leg(n_tasks: int, n_tenants: int, *, threads: int = 32,
+              batch: int = 128, baseline_samples: int = 2000,
+              ) -> tuple[list[tuple[str, float, str]], list[str]]:
+    """Sharded bulk appends vs unsharded fsync-per-append, same storm."""
+    from repro.service.store import TaskStore
+
+    def storm(store, total: int, per_call: int, lat_ms: list[float],
+              bulk: bool) -> None:
+        lock = threading.Lock()
+        left = [total]
+
+        def worker(wid: int) -> None:
+            rng = random.Random(wid)
+            my: list[float] = []
+            while True:
+                with lock:
+                    if left[0] <= 0:
+                        break
+                    n = min(per_call, left[0])
+                    left[0] -= n
+                tenant = f"tenant{rng.randrange(n_tenants)}"
+                specs = [_spec_of(store, tenant) for _ in range(n)]
+                t0 = time.perf_counter()
+                if bulk:
+                    store.append_submit_many(specs)
+                else:
+                    for sp in specs:
+                        t1 = time.perf_counter()
+                        store.append_submit(sp)
+                        my.append((time.perf_counter() - t1) * 1e3)
+                if bulk:
+                    dt = (time.perf_counter() - t0) * 1e3
+                    my.extend([dt / n] * n)    # per-task amortized latency
+            with lock:
+                lat_ms.extend(my)
+
+        ts = [threading.Thread(target=worker, args=(i,)) for i in range(threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+
+    rows: list[tuple[str, float, str]] = []
+    violations: list[str] = []
+    root = tempfile.mkdtemp(prefix="svcload-store-")
+    try:
+        # sharded store, bulk appends (the million-task submit path)
+        sharded = TaskStore(os.path.join(root, "sharded"))
+        lat_bulk: list[float] = []
+        t0 = time.perf_counter()
+        storm(sharded, n_tasks, batch, lat_bulk, bulk=True)
+        bulk_wall = time.perf_counter() - t0
+        n_recs, n_fsyncs = len(sharded.records), sharded.fsyncs
+        sharded.close()
+        # same store, single-call appends (group commit still amortizes
+        # fsyncs across the 32 threads)
+        single = TaskStore(os.path.join(root, "single"))
+        lat_single: list[float] = []
+        storm(single, min(n_tasks, 4 * baseline_samples), 1, lat_single, bulk=False)
+        single.close()
+        # the pre-shard baseline: one log, fsync per append, sampled
+        base = TaskStore(os.path.join(root, "base"), n_shards=1,
+                         group_commit=False, auto_compact=False)
+        lat_base: list[float] = []
+        storm(base, baseline_samples, 1, lat_base, bulk=False)
+        base.close()
+
+        if n_recs != n_tasks:
+            violations.append(
+                f"store: bulk storm persisted {n_recs} records, wanted {n_tasks}")
+        bulk_p99 = _pctl(lat_bulk, 99)
+        base_p99 = _pctl(lat_base, 99)
+        speedup = base_p99 / bulk_p99 if bulk_p99 > 0 else float("inf")
+        rows += [
+            ("scale/store/tasks", n_tasks, "tasks"),
+            ("scale/store/bulk_submit_p99_ms", round(bulk_p99, 4), "ms"),
+            ("scale/store/bulk_submit_p50_ms", round(_pctl(lat_bulk, 50), 4), "ms"),
+            ("scale/store/bulk_rate", round(n_tasks / bulk_wall, 0), "tasks/s"),
+            ("scale/store/fsyncs_per_ktask", round(1e3 * n_fsyncs / n_tasks, 2), "fsync"),
+            ("scale/store/single_submit_p99_ms", round(_pctl(lat_single, 99), 4), "ms"),
+            ("scale/store/unsharded_p99_ms", round(base_p99, 4), "ms"),
+            ("scale/store/p99_speedup", round(min(speedup, 1e6), 1), "x"),
+        ]
+        if speedup < 10.0:
+            violations.append(
+                f"store: sharded bulk p99 {bulk_p99:.4f} ms only "
+                f"{speedup:.1f}x under unsharded {base_p99:.4f} ms (need >= 10x)")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows, violations
+
+
+def _resident_service(root: str, n_tasks: int, n_tenants: int):
+    """A real service holding n_tasks resident and PENDING (quota 0)."""
+    from repro.service import ServiceConfig, TenantQuota, TransferService
+
+    svc = TransferService(root, ServiceConfig(
+        mover_budget=4, max_concurrent_tasks=4, tick_s=0.002,
+        default_quota=TenantQuota(max_active=0),    # hold everything PENDING
+    ))
+    per = n_tasks // n_tenants
+    t0 = time.perf_counter()
+    for k in range(n_tenants):
+        n = per + (n_tasks % n_tenants if k == n_tenants - 1 else 0)
+        svc.submit_many([[("s", f"d{k}-{i}", 1)] for i in range(n)],
+                        tenant=f"tenant{k}", batch=False)
+    return svc, time.perf_counter() - t0
+
+
+def scheduler_leg(n_tasks: int, n_tenants: int, *, control_tasks: int = 1000,
+                  settle_s: float = 1.5,
+                  ) -> tuple[list[tuple[str, float, str]], list[str]]:
+    """Scheduler cycle time must not grow with resident task count."""
+    rows: list[tuple[str, float, str]] = []
+    violations: list[str] = []
+    root = tempfile.mkdtemp(prefix="svcload-sched-")
+    try:
+        small, _ = _resident_service(
+            os.path.join(root, "small"), control_tasks, min(n_tenants, control_tasks))
+        time.sleep(settle_s)
+        small_cycles = [s * 1e3 for s in small.sched_cycles]
+        small.kill()
+
+        big, submit_wall = _resident_service(os.path.join(root, "big"), n_tasks, n_tenants)
+        time.sleep(settle_s)
+        big_cycles = [s * 1e3 for s in big.sched_cycles]
+
+        # status p99 over random ids, bulk status, one cursor page walk
+        ids = [f"task-{i:09d}-tenant{min(n_tenants - 1, i // (n_tasks // n_tenants))}"
+               for i in range(n_tasks)]
+        rng = random.Random(7)
+        sample = [ids[rng.randrange(len(ids))] for _ in range(min(2000, n_tasks))]
+        lat_status: list[float] = []
+        for tid in sample:
+            t0 = time.perf_counter()
+            big.status(tid)
+            lat_status.append((time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        got = big.status_many(sample)
+        many_ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        page = big.tasks(limit=500)
+        page_ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        page2 = big.tasks(cursor=page[-1].task_id, limit=500)
+        page2_ms = (time.perf_counter() - t0) * 1e3
+        n_pending = sum(1 for s in page + page2 if s.state == "PENDING")
+        big.kill()
+
+        small_p99 = max(_pctl(small_cycles, 99), 0.05)   # epsilon: sub-50us
+        big_p99 = _pctl(big_cycles, 99)                  # cycles are noise
+        ratio = big_p99 / small_p99
+        status_p99 = _pctl(lat_status, 99)
+        rows += [
+            ("scale/sched/resident_tasks", n_tasks, "tasks"),
+            ("scale/sched/tenants", n_tenants, "tenants"),
+            ("scale/sched/bulk_submit_per_task_us",
+             round(1e6 * submit_wall / n_tasks, 2), "us"),
+            ("scale/sched/cycle_p50_ms_1k", round(_pctl(small_cycles, 50), 4), "ms"),
+            ("scale/sched/cycle_p99_ms_1k", round(_pctl(small_cycles, 99), 4), "ms"),
+            ("scale/sched/cycle_p50_ms_full", round(_pctl(big_cycles, 50), 4), "ms"),
+            ("scale/sched/cycle_p99_ms_full", round(big_p99, 4), "ms"),
+            ("scale/sched/cycle_p99_ratio", round(ratio, 2), "x"),
+            ("scale/sched/status_p99_ms", round(status_p99, 4), "ms"),
+            ("scale/sched/status_many_per_task_us",
+             round(1e3 * many_ms / max(1, len(sample)), 2), "us"),
+            ("scale/sched/tasks_page500_ms", round(page_ms, 3), "ms"),
+            ("scale/sched/tasks_page500_cursor_ms", round(page2_ms, 3), "ms"),
+        ]
+        if not big_cycles or not small_cycles:
+            violations.append("sched: no scheduler cycles recorded")
+        elif ratio > 5.0:
+            violations.append(
+                f"sched: cycle p99 grew {ratio:.2f}x from {control_tasks} to "
+                f"{n_tasks} resident tasks (need <= 5x — cycle time must be "
+                f"independent of task count)")
+        if status_p99 > 20.0:
+            violations.append(
+                f"sched: status p99 {status_p99:.2f} ms at {n_tasks} resident "
+                "tasks (need <= 20 ms)")
+        if len(got) != len(sample) or len(page) != 500 or len(page2) != 500:
+            violations.append("sched: bulk/paginated listing returned short")
+        if n_pending != 1000:
+            violations.append(
+                f"sched: expected 1000 PENDING statuses on pages, got {n_pending}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows, violations
+
+
+def virtual_leg(n_tasks: int, n_tenants: int,
+                ) -> tuple[list[tuple[str, float, str]], list[str]]:
+    """The full task count through the virtual-time testbed."""
+    rows: list[tuple[str, float, str]] = []
+    violations: list[str] = []
+    subs = [
+        Submission(i * 0.01, f"tenant{i % n_tenants}", (100 * MB,))
+        for i in range(n_tasks)
+    ]
+    t0 = time.perf_counter()
+    rep = run_load(
+        subs, policy="fair", mover_budget=64, max_concurrent=16,
+        chunk_bytes=100 * MB, batch=BatchConfig(direct_bytes=1, batch_files=1),
+    )
+    wall = time.perf_counter() - t0
+    rows += [
+        ("scale/virtual/tasks", len(rep.tasks), "tasks"),
+        ("scale/virtual/tenants", n_tenants, "tenants"),
+        ("scale/virtual/makespan", round(rep.makespan_s, 1), "s"),
+        ("scale/virtual/p50_latency", round(rep.p50_s, 2), "s"),
+        ("scale/virtual/p99_latency", round(rep.p99_s, 2), "s"),
+        ("scale/virtual/wall", round(wall, 1), "s"),
+        ("scale/virtual/sim_rate", round(n_tasks / wall, 0), "tasks/s"),
+    ]
+    if len(rep.tasks) != n_tasks:
+        violations.append(
+            f"virtual: {len(rep.tasks)}/{n_tasks} tasks completed")
+    if abs(rep.retry_amplification - 1.0) > 1e-6:
+        violations.append(
+            f"virtual: retry amplification {rep.retry_amplification} on a clean run")
+    return rows, violations
+
+
+def real_leg(n_tasks: int, *, restart_tasks: int = 24,
+             ) -> tuple[list[tuple[str, float, str]], list[str]]:
+    """Real chunked transfers at CI size + a kill/restart replay check."""
+    from repro.service import ServiceConfig, TransferService
+    from repro.service.store import TaskStore
+
+    rows: list[tuple[str, float, str]] = []
+    violations: list[str] = []
+    root = tempfile.mkdtemp(prefix="svcload-real-")
+    try:
+        # -- throughput: n_tasks real one-file transfers, bulk-submitted
+        src_dir = os.path.join(root, "files")
+        os.makedirs(src_dir)
+        reqs = []
+        for i in range(n_tasks):
+            p = os.path.join(src_dir, f"f{i}")
+            with open(p, "wb") as fh:
+                fh.write(random.Random(i).randbytes(48_000))
+            reqs.append([(p, p + ".out")])
+        svc = TransferService(os.path.join(root, "svc"), ServiceConfig(
+            mover_budget=8, max_concurrent_tasks=8, chunk_bytes=16_384,
+            tick_s=0.002))
+        t0 = time.perf_counter()
+        ids = [tid for group in svc.submit_many(reqs, tenant="bench", batch=False)
+               for tid in group]
+        sts = svc.wait_all(ids, timeout=300)
+        wall = time.perf_counter() - t0
+        bad = [s.task_id for s in sts if s.state != "SUCCEEDED"]
+        svc.close()
+        rows += [
+            ("scale/real/tasks", n_tasks, "tasks"),
+            ("scale/real/completed", len(sts) - len(bad), "tasks"),
+            ("scale/real/rate", round(n_tasks / wall, 1), "tasks/s"),
+        ]
+        if bad:
+            violations.append(f"real: {len(bad)} tasks not SUCCEEDED: {bad[:3]}")
+
+        # -- kill mid-flight, then prove replay-identical records + 0 re-moves
+        kroot = os.path.join(root, "kill")
+        pace = lambda tid, item, chunk, attempt: time.sleep(0.004)  # noqa: E731
+        svc1 = TransferService(kroot, ServiceConfig(
+            mover_budget=4, max_concurrent_tasks=4, chunk_bytes=8_192,
+            tick_s=0.002), fault_injector=pace)
+        kids = [tid for group in svc1.submit_many(
+                    [[(os.path.join(src_dir, f"f{i}"),
+                       os.path.join(root, f"k{i}.out"))]
+                     for i in range(restart_tasks)],
+                    tenant="bench", batch=False)
+                for tid in group]
+        deadline = time.perf_counter() + 30
+        while time.perf_counter() < deadline:
+            if any(s.chunks_done > 0 for s in svc1.status_many(kids)):
+                break
+            time.sleep(0.01)
+        svc1.kill()
+        live = {tid: (r.seq, r.state, r.error, r.spec.to_json())
+                for tid, r in svc1.store.records.items()}
+        journaled = sum(
+            len(svc1.store.open_journal(tid).records) for tid in kids)
+        # fresh replay of the sharded logs only — no process memory
+        replayed = TaskStore(kroot, auto_compact=False)
+        disk = {tid: (r.seq, r.state, r.error, r.spec.to_json())
+                for tid, r in replayed.records.items()}
+        replayed.close()
+        identical = int(disk == live)
+        rows += [
+            ("scale/restart/tasks", restart_tasks, "tasks"),
+            ("scale/restart/journaled_at_kill", journaled, "chunks"),
+            ("scale/restart/replay_identical", identical, "bool"),
+        ]
+        if not identical:
+            miss = {k for k in set(live) | set(disk)
+                    if live.get(k) != disk.get(k)}
+            violations.append(
+                f"restart: replayed records differ from the killed service's "
+                f"on {len(miss)} tasks (e.g. {sorted(miss)[:2]})")
+        svc2 = TransferService(kroot, ServiceConfig(
+            mover_budget=4, max_concurrent_tasks=4, chunk_bytes=8_192,
+            tick_s=0.002))
+        sts2 = svc2.wait_all(kids, timeout=300)
+        resumed = sum(s.resumed_chunks for s in sts2)
+        total_chunks = sum(s.chunks_total for s in sts2)
+        re_moved = svc2.moved_chunks - (total_chunks - resumed)
+        svc2.close()
+        rows += [
+            ("scale/restart/resumed_chunks", resumed, "chunks"),
+            ("scale/restart/re_moved_chunks", re_moved, "chunks"),
+        ]
+        if any(s.state != "SUCCEEDED" for s in sts2):
+            violations.append("restart: not all tasks SUCCEEDED after restart")
+        if resumed < journaled:
+            violations.append(
+                f"restart: only {resumed} chunks resumed, {journaled} were journaled")
+        if re_moved != 0:
+            violations.append(
+                f"restart: {re_moved} journaled chunks re-moved (need 0)")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return rows, violations
+
+
+def scale(*, quick: bool = False) -> tuple[list[tuple[str, float, str]], list[str]]:
+    if quick:
+        n_tasks, n_tenants, n_real = 20_000, 200, 80
+    else:
+        n_tasks, n_tenants, n_real = 100_000, 1000, 200
+    rows: list[tuple[str, float, str]] = []
+    violations: list[str] = []
+    for leg in (
+        lambda: store_leg(n_tasks, n_tenants,
+                          baseline_samples=1000 if quick else 2000),
+        lambda: scheduler_leg(n_tasks, n_tenants),
+        lambda: virtual_leg(n_tasks, n_tenants),
+        lambda: real_leg(n_real),
+    ):
+        r, v = leg()
+        rows += r
+        violations += v
+    return rows, violations
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    quick = "--quick" in argv
+    force = "--force" in argv
+    do_scale = "--scale" in argv
     t_start = time.perf_counter()
-    rows = sweep(quick=quick)
+    violations: list[str] = []
+    if do_scale:
+        rows, violations = scale(quick=quick)
+    else:
+        rows = sweep(quick=quick)
     print("name,value,unit")
     for name, val, unit in rows:
         print(f"{name},{val},{unit}")
-    path = emit("service_load", rows, args={"quick": quick},
+    path = emit("service_load", rows,
+                args={"quick": quick, "scale": do_scale},
                 elapsed_s=round(time.perf_counter() - t_start, 3),
                 force=force)
     print(f"# wrote {path}")
+    if violations:
+        print("GATE VIOLATIONS:", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

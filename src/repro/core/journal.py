@@ -47,9 +47,11 @@ def checked_line(body: dict) -> str:
     Shared by every append-log in the repo (chunk journal, task log, CAS
     chunk index) so compaction and replay agree on the byte format.
     """
-    return json.dumps(
-        {"body": body, "check": _self_check(json.dumps(body, sort_keys=True))}
-    )
+    # Serialise the body once: embed the canonical (sort_keys) form directly
+    # rather than dumping it a second time inside the wrapper. Replay parses
+    # the line and re-canonicalises the body, so the bytes verify either way.
+    canon = json.dumps(body, sort_keys=True)
+    return '{"body": %s, "check": "%s"}' % (canon, _self_check(canon))
 
 
 def replay_checked_lines(path: str, apply) -> tuple[bytes, int]:

@@ -18,7 +18,12 @@ service.testbed (used by benchmarks/service_load.py and repro.launch.transferd).
 from repro.service.batcher import BatchConfig, Batcher
 from repro.service.ckpt_bridge import CheckpointSubmission, submit_checkpoint
 from repro.service.events import EventBus, TaskEvent
-from repro.service.scheduler import AllocationEngine, TenantQuota, select_activations
+from repro.service.scheduler import (
+    ActivationIndex,
+    AllocationEngine,
+    TenantQuota,
+    select_activations,
+)
 from repro.service.service import ServiceConfig, TransferService
 from repro.service.store import TaskRecord, TaskStore
 from repro.service.task import (
@@ -46,7 +51,8 @@ from repro.service.testbed import (
 
 __all__ = [
     "ACTIVE", "CANCELED", "FAILED", "PAUSED", "PENDING", "SUCCEEDED", "TERMINAL",
-    "AllocationEngine", "BatchConfig", "Batcher", "CheckpointSubmission",
+    "ActivationIndex", "AllocationEngine", "BatchConfig", "Batcher",
+    "CheckpointSubmission",
     "EventBus", "FaultLog", "FaultReport", "ItemReport", "LoadReport",
     "ServiceConfig", "SimTask", "Submission", "TaskEvent", "TaskRecord",
     "TaskSpec", "TaskStatus", "TaskStore", "TenantQuota", "TransferItem",

@@ -17,7 +17,8 @@ virtual-time testbed:
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import heapq
+from typing import Callable, Sequence
 
 from repro.core.scheduler import TransferRequest, allocate
 from repro.core.simulator import ALCF, DEFAULT_LINK, NERSC, LinkConfig, SiteConfig
@@ -79,6 +80,120 @@ def select_activations(
         active[best_tenant] = active.get(best_tenant, 0) + 1
         served[best_tenant] = served.get(best_tenant, 0) + 1
     return chosen
+
+
+# ---------------------------------------------------------------------------
+# Indexed activation: the same policy at O(log n) per decision
+# ---------------------------------------------------------------------------
+class ActivationIndex:
+    """Incremental heap index implementing select_activations' policy.
+
+    ``select_activations`` rescans every pending task per scheduler pass —
+    fine at 10^3 tasks, fatal at 10^6. This index keeps a heap of
+    ``(submit_seq, task_id)`` per tenant plus a tenant-level heap keyed by
+    the same stride-fairness priority ``(active + served, head_seq)``, so
+    each activation decision is O(log tenants) regardless of how many tasks
+    are queued. Head seqs are globally unique (submission order), so the
+    greedy argmin here selects exactly what the scan-based function would —
+    tests assert the equivalence on randomized scenarios.
+
+    Staleness is handled by lazy deletion: every mutation bumps the
+    tenant's version and pushes a fresh heap entry; entries with old
+    versions are discarded when popped. Tasks that left PENDING without
+    being selected (canceled, paused) are dropped via the ``validate``
+    callback at pop time — callers re-``add`` a task when it becomes
+    PENDING again (resume). Not thread-safe: callers hold their own lock
+    (the service's scheduler lock / the testbed is single-threaded).
+    """
+
+    def __init__(self, served: dict[str, int] | None = None):
+        self._queues: dict[str, list[tuple[int, str]]] = {}
+        self._tenant_heap: list[tuple[int, int, str, int]] = []
+        self._version: dict[str, int] = {}
+        self._active: dict[str, int] = {}
+        # shared with the caller so historical fairness survives the index
+        # (the service exposes it as served_by_tenant)
+        self._served = served if served is not None else {}
+
+    def _load(self, tenant: str) -> int:
+        return self._active.get(tenant, 0) + self._served.get(tenant, 0)
+
+    def _push_tenant(self, tenant: str) -> None:
+        """Invalidate the tenant's live heap entry; push a fresh one if it
+        still has queued tasks."""
+        v = self._version.get(tenant, 0) + 1
+        self._version[tenant] = v
+        queue = self._queues.get(tenant)
+        if queue:
+            heapq.heappush(
+                self._tenant_heap,
+                (self._load(tenant), queue[0][0], tenant, v),
+            )
+
+    def add(self, seq: int, task_id: str, tenant: str) -> None:
+        """Register a PENDING task (call again after a resume re-pends it)."""
+        heapq.heappush(self._queues.setdefault(tenant, []), (seq, task_id))
+        self._push_tenant(tenant)
+
+    def active_delta(self, tenant: str, delta: int) -> None:
+        """Adjust a tenant's ACTIVE count (selection already counts +1; call
+        with -1 when a task leaves ACTIVE)."""
+        self._active[tenant] = self._active.get(tenant, 0) + delta
+        self._push_tenant(tenant)
+
+    def active_count(self, tenant: str) -> int:
+        return self._active.get(tenant, 0)
+
+    def pending_count(self) -> int:
+        """Upper bound on queued tasks (stale entries linger until popped)."""
+        return sum(len(q) for q in self._queues.values())
+
+    def select(
+        self,
+        free_slots: int,
+        *,
+        quotas: dict[str, TenantQuota] | None = None,
+        default_quota: TenantQuota = DEFAULT_QUOTA,
+        validate: Callable[[str], bool] | None = None,
+    ) -> list[str]:
+        """Pick up to ``free_slots`` task_ids; same contract as
+        select_activations. Selected tasks are counted ACTIVE and served
+        immediately (mirroring what the caller is about to do)."""
+        quotas = quotas or {}
+        chosen: list[str] = []
+        seen: set[str] = set()      # a task must not be chosen twice even if
+        blocked: list[str] = []     # pause/resume left duplicate entries
+        while len(chosen) < free_slots and self._tenant_heap:
+            load, head_seq, tenant, ver = heapq.heappop(self._tenant_heap)
+            if ver != self._version.get(tenant):
+                continue                      # stale: a fresher entry exists
+            queue = self._queues.get(tenant)
+            while queue:
+                _seq, tid = queue[0]
+                if tid in seen or (validate is not None and not validate(tid)):
+                    heapq.heappop(queue)      # lazy deletion at pop time
+                    continue
+                break
+            if not queue:
+                self._version[tenant] = ver + 1   # nothing left: no re-push
+                continue
+            if (self._load(tenant), queue[0][0]) != (load, head_seq):
+                self._push_tenant(tenant)     # key drifted: re-enter fresh
+                continue
+            quota = quotas.get(tenant, default_quota)
+            if (quota.max_active is not None
+                    and self._active.get(tenant, 0) >= quota.max_active):
+                blocked.append(tenant)        # re-pushed after the loop so a
+                continue                      # full-quota tenant can't spin us
+            _seq, tid = heapq.heappop(queue)
+            seen.add(tid)
+            chosen.append(tid)
+            self._active[tenant] = self._active.get(tenant, 0) + 1
+            self._served[tenant] = self._served.get(tenant, 0) + 1
+            self._push_tenant(tenant)
+        for tenant in blocked:
+            self._push_tenant(tenant)
+        return chosen
 
 
 # ---------------------------------------------------------------------------

@@ -20,12 +20,15 @@ Architecture (one TransferService per service root):
     task log, re-queues durable non-terminal tasks, and their journals make
     the runners skip every chunk that already landed.
 
-Client API: submit / submit_buffers / status / tasks / wait / wait_all /
-cancel / pause / resume / subscribe / flush / close / kill.
+Client API: submit / submit_many / submit_buffers / status / status_many /
+tasks (cursor-paginated) / wait / wait_all / cancel / pause / resume /
+subscribe (cursor-resumable) / events_from / flush / close / kill.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import itertools
 import os
 import queue
 import threading
@@ -80,9 +83,9 @@ from repro.service.batcher import BatchConfig, Batcher
 from repro.service.events import EventBus
 from repro.service.scheduler import (
     DEFAULT_QUOTA,
+    ActivationIndex,
     AllocationEngine,
     TenantQuota,
-    select_activations,
 )
 from repro.service import task as tk
 from repro.service.store import TaskStore
@@ -297,7 +300,10 @@ class TransferService:
     ):
         self.config = config or ServiceConfig()
         self.store = TaskStore(root)
-        self.events = EventBus()
+        # event spill log beside the task shards: cursor subscribers can
+        # resume from any seq, and numbering survives restarts
+        self.events = EventBus(
+            spill_path=os.path.join(str(root), "events.log"))
         # observability: a bounded span tracer, a flight recorder fed from
         # the event stream (auto-dumps a post-mortem bundle next to the task
         # log when a fault fails a task), and per-task metric families
@@ -346,6 +352,18 @@ class TransferService:
         self._kill_evt = threading.Event()
         self._alloc_dirty = True
         self._served: dict[str, int] = {}    # per-tenant activation history
+        # control-plane indexes — scheduler and listing cost must not scale
+        # with the total task count:
+        #   _order / _order_pos: submission-ordered ids for cursor pagination
+        #   _active_ids: the ACTIVE set (allocation requests are O(active))
+        #   _activation: heap-indexed PENDING queues (O(log n) activation)
+        self._order: list[str] = []
+        self._order_pos: dict[str, int] = {}
+        self._active_ids: set[str] = set()
+        self._activation = ActivationIndex(served=self._served)
+        # wall time of recent scheduler passes (activation + request build
+        # + allocation), for the cycle-time flatness gate in service_load
+        self.sched_cycles: collections.deque[float] = collections.deque(maxlen=512)
         self.moved_chunks = 0        # chunks physically moved by THIS incarnation
         # content plane: the service root's endpoint chunk index, opened
         # lazily (first dedup-enabled task) or eagerly when the configured
@@ -394,7 +412,7 @@ class TransferService:
                 if rec.state == tk.SUCCEEDED:
                     t.chunks_done = t.chunks_total
                     t.bytes_done = t.bytes_total
-                self._tasks[task_id] = t
+                self._index_task(task_id, t)
                 continue
             if not rec.spec.durable:
                 # in-memory sources died with the previous process
@@ -402,7 +420,7 @@ class TransferService:
                 t.error = "ephemeral source lost across service restart"
                 t.finished_s = wall_s()
                 self.store.append_state(task_id, tk.FAILED, t.error)
-                self._tasks[task_id] = t
+                self._index_task(task_id, t)
                 self.events.emit(ev.FAILED, task_id, rec.spec.tenant, error=t.error)
                 continue
             # ACTIVE at crash time -> PENDING; PAUSED stays PAUSED.
@@ -412,7 +430,16 @@ class TransferService:
                     self.store.append_state(task_id, tk.PENDING, "recovered after restart")
             elif rec.state == tk.PAUSED:
                 t.pause_evt.set()
-            self._tasks[task_id] = t
+            self._index_task(task_id, t)
+
+    def _index_task(self, task_id: str, t: _Task) -> None:
+        """Publish a task into every control-plane index (caller ordered by
+        seq during recovery; under the service lock during submission)."""
+        self._tasks[task_id] = t
+        self._order_pos[task_id] = len(self._order)
+        self._order.append(task_id)
+        if t.state == tk.PENDING:
+            self._activation.add(t.seq, task_id, t.spec.tenant)
 
     # ------------------------------------------------------------------
     # client API: submission
@@ -515,15 +542,74 @@ class TransferService:
                 dedup=dedup or self.config.dedup,
             )
             rec = self.store.append_submit(spec)
-            self._tasks[task_id] = _Task(spec, rec.seq, self.config.chunk_bytes,
-                                         tuning=spec.tuning or self.config.tuning,
-                                         dedup=spec.dedup or self.config.dedup)
+            t = _Task(spec, rec.seq, self.config.chunk_bytes,
+                      tuning=spec.tuning or self.config.tuning,
+                      dedup=spec.dedup or self.config.dedup)
+            self._index_task(task_id, t)
             self._cond.notify_all()
         self.events.emit(
             ev.SUBMITTED, task_id, tenant,
             files=len(items), bytes=sum(i.nbytes for i in items), label=label,
         )
         return task_id
+
+    def submit_many(
+        self,
+        requests: Sequence[Sequence[TransferItem | tuple[str, str] | tuple[str, str, int]]],
+        *,
+        tenant: str = "default",
+        label: str = "",
+        chunk_bytes: int | None = None,
+        batch: bool = True,
+        tuning: str | None = None,
+        dedup: str | None = None,
+    ) -> list[list[str]]:
+        """Bulk submission: one lock hold and one fsync per store shard for
+        the whole batch, instead of a lock round-trip and fsync per task.
+        Returns one task-id list per request (same split rules as submit).
+        """
+        if tuning not in (None, "static", "auto"):
+            raise ValueError(f"tuning must be 'static', 'auto' or None, got {tuning!r}")
+        if dedup not in (None, "off", "on"):
+            raise ValueError(f"dedup must be 'off', 'on' or None, got {dedup!r}")
+        groups_per_req: list[list[list[TransferItem]]] = []
+        for items in requests:
+            norm = [self._norm_item(it) for it in items]
+            if not norm:
+                raise ValueError("empty submission in bulk request")
+            groups_per_req.append(
+                [list(g) for g in (self.batcher.split(norm) if batch else [norm])])
+        out: list[list[str]] = []
+        emits: list[tuple[str, int, int]] = []
+        with self._cond:
+            if self._stop_evt.is_set():
+                raise RuntimeError("service is shut down")
+            specs: list[TaskSpec] = []
+            for groups in groups_per_req:
+                ids: list[str] = []
+                for group in groups:
+                    task_id = self.store.next_task_id(tenant)
+                    specs.append(TaskSpec(
+                        task_id=task_id, tenant=tenant, label=label,
+                        items=tuple(group),
+                        chunk_bytes=chunk_bytes or self.config.chunk_bytes,
+                        tuning=tuning or self.config.tuning,
+                        dedup=dedup or self.config.dedup,
+                    ))
+                    ids.append(task_id)
+                    emits.append((task_id, len(group),
+                                  sum(i.nbytes for i in group)))
+                out.append(ids)
+            for spec, rec in zip(specs, self.store.append_submit_many(specs)):
+                self._index_task(spec.task_id, _Task(
+                    spec, rec.seq, self.config.chunk_bytes,
+                    tuning=spec.tuning or self.config.tuning,
+                    dedup=spec.dedup or self.config.dedup))
+            self._cond.notify_all()
+        for task_id, files, nbytes in emits:
+            self.events.emit(ev.SUBMITTED, task_id, tenant,
+                             files=files, bytes=nbytes, label=label)
+        return out
 
     # ------------------------------------------------------------------
     # client API: lifecycle
@@ -533,11 +619,46 @@ class TransferService:
             t = self._require(task_id)
             return self._snapshot(t)
 
-    def tasks(self, *, tenant: str | None = None) -> list[TaskStatus]:
+    def status_many(self, task_ids: Sequence[str]) -> list[TaskStatus]:
+        """Bulk status: one lock hold for the whole batch."""
         with self._lock:
-            out = [self._snapshot(t) for t in self._tasks.values()
-                   if tenant is None or t.spec.tenant == tenant]
-        return sorted(out, key=lambda s: s.task_id)
+            return [self._snapshot(self._require(tid)) for tid in task_ids]
+
+    def tasks(
+        self,
+        *,
+        tenant: str | None = None,
+        state: str | None = None,
+        cursor: str | None = None,
+        limit: int | None = None,
+    ) -> list[TaskStatus]:
+        """List tasks in submission order, optionally filtered and paginated.
+
+        ``cursor`` is the last task_id of the previous page: the listing
+        resumes strictly after it, so walking ``cursor=page[-1].task_id``
+        until an empty page visits every task exactly once even while new
+        submissions land (they append after the cursor). Only the returned
+        page is snapshotted — a page over a million-task service does not
+        materialize a million statuses.
+        """
+        with self._lock:
+            start = 0
+            if cursor is not None:
+                pos = self._order_pos.get(cursor)
+                if pos is None:
+                    raise KeyError(f"unknown cursor task {cursor!r}")
+                start = pos + 1
+            picked: list[_Task] = []
+            for tid in itertools.islice(self._order, start, None):
+                t = self._tasks[tid]
+                if tenant is not None and t.spec.tenant != tenant:
+                    continue
+                if state is not None and t.state != state:
+                    continue
+                picked.append(t)
+                if limit is not None and len(picked) >= limit:
+                    break
+            return [self._snapshot(t) for t in picked]
 
     def wait(self, task_id: str, timeout: float | None = None) -> TaskStatus:
         """Block until the task reaches a terminal state."""
@@ -599,8 +720,16 @@ class TransferService:
                 self._cond.notify_all()
         return self.status(task_id)
 
-    def subscribe(self, cb) -> Callable[[], None]:
-        return self.events.subscribe(cb)
+    def subscribe(self, cb, *, from_seq: int | None = None) -> Callable[[], None]:
+        """Register an event callback. With ``from_seq``, the subscriber is
+        first caught up from that event sequence number (served from the
+        spill log if the ring has wrapped), then receives live events — a
+        late joiner resumes exactly where its cursor left off."""
+        return self.events.subscribe(cb, from_seq=from_seq)
+
+    def events_from(self, start_seq: int, *, limit: int | None = None):
+        """Read historical events at seq >= start_seq (cursor polling)."""
+        return self.events.read_from(start_seq, limit=limit)
 
     # ------------------------------------------------------------------
     # shutdown
@@ -624,6 +753,7 @@ class TransferService:
         for r in list(self._runners.values()):
             r.join(timeout=5.0)
         self.store.close()
+        self.events.close()
         if self.cas is not None:
             self.cas.close()
 
@@ -641,12 +771,14 @@ class TransferService:
         for r in list(self._runners.values()):
             r.join(timeout=5.0)
         self.store.close()
+        self.events.close()
 
     # ------------------------------------------------------------------
     # scheduler loop
     # ------------------------------------------------------------------
     def _scheduler_loop(self) -> None:
         while not self._stop_evt.is_set():
+            t0 = mono_s()
             with self._cond:
                 self._activate_locked()
                 dirty = self._alloc_dirty
@@ -657,32 +789,28 @@ class TransferService:
                 # misses — keep the service lock free while they do
                 movers = self.engine.allocate(reqs)
                 self._apply_allocation(movers)
+            self.sched_cycles.append(mono_s() - t0)
             with self._cond:
                 self._cond.wait(self.config.tick_s)
 
     def _activate_locked(self) -> None:
-        active = [t for t in self._tasks.values() if t.state == tk.ACTIVE]
-        free = self.config.max_concurrent_tasks - len(active)
+        free = self.config.max_concurrent_tasks - len(self._active_ids)
         if free <= 0:
             return
-        pending = [
-            (t.seq, t.spec.task_id, t.spec.tenant)
-            for t in self._tasks.values() if t.state == tk.PENDING
-        ]
-        if not pending:
-            return
-        active_by_tenant: dict[str, int] = {}
-        for t in active:
-            active_by_tenant[t.spec.tenant] = active_by_tenant.get(t.spec.tenant, 0) + 1
-        chosen = select_activations(
-            pending, active_by_tenant, free_slots=free,
+        # heap-indexed selection: cost scales with the decision count, not
+        # with how many tasks are resident. The validate hook lazily drops
+        # entries whose task left PENDING (canceled, paused) since add().
+        chosen = self._activation.select(
+            free,
             quotas=self.config.quotas, default_quota=self.config.default_quota,
-            served_by_tenant=self._served,
+            validate=lambda tid: (
+                (tt := self._tasks.get(tid)) is not None
+                and tt.state == tk.PENDING),
         )
         for task_id in chosen:
             t = self._tasks[task_id]
-            self._served[t.spec.tenant] = self._served.get(t.spec.tenant, 0) + 1
             self._transition(t, tk.ACTIVE)
+            self._active_ids.add(task_id)
             t.started_s = t.started_s or wall_s()
             t.t0_mono = mono_s()
             # the root span id rides on every task-level event so an event
@@ -700,8 +828,14 @@ class TransferService:
             self._alloc_dirty = True
 
     def _allocation_requests_locked(self) -> list[tuple[str, str, TransferRequest]]:
-        return [
-            (
+        # O(active): iterate the maintained ACTIVE set, not every task ever
+        # submitted (sorted for deterministic allocation order)
+        out: list[tuple[str, str, TransferRequest]] = []
+        for tid in sorted(self._active_ids):
+            t = self._tasks.get(tid)
+            if t is None or t.state != tk.ACTIVE:
+                continue
+            out.append((
                 t.spec.task_id,
                 t.spec.tenant,
                 TransferRequest(
@@ -712,9 +846,8 @@ class TransferService:
                     chunk_bytes=t.spec.chunk_bytes or self.config.chunk_bytes,
                     integrity=self.config.integrity,
                 ),
-            )
-            for t in self._tasks.values() if t.state == tk.ACTIVE
-        ]
+            ))
+        return out
 
     def _apply_allocation(self, movers: dict[str, int]) -> None:
         with self._lock:
@@ -1593,9 +1726,19 @@ class TransferService:
     def _transition(self, t: _Task, state: str, error: str | None = None) -> None:
         if not tk.can_transition(t.state, state):
             raise TransitionError(t.spec.task_id, t.state, state)
+        prev, task_id = t.state, t.spec.task_id
         t.state = state
         t.error = error
-        self.store.append_state(t.spec.task_id, state, error)
+        # keep the control-plane indexes in lockstep with the state machine
+        # (callers hold the service lock): leaving ACTIVE shrinks the active
+        # set and the tenant's quota usage; re-entering PENDING (resume, a
+        # withdrawn pause) re-queues the task for activation
+        if prev == tk.ACTIVE and state != tk.ACTIVE:
+            self._active_ids.discard(task_id)
+            self._activation.active_delta(t.spec.tenant, -1)
+        if state == tk.PENDING and prev != tk.PENDING:
+            self._activation.add(t.seq, task_id, t.spec.tenant)
+        self.store.append_state(task_id, state, error)
 
     def _finish(self, t: _Task, state: str, *, error: str | None = None,
                 reports: tuple[ItemReport, ...] = ()) -> None:
@@ -1608,7 +1751,9 @@ class TransferService:
             if state == tk.SUCCEEDED:
                 t.item_reports = reports
             self._alloc_dirty = True
-            self._cond.notify_all()
+        # waiters are notified AFTER the terminal event is emitted (below),
+        # so a client woken by wait() observes the event-stream effect of the
+        # transition too — subscribers never lag a returned wait()
         if t.t0_mono is not None:
             # task root span: the makespan window obs.attr sweeps by default
             self.tracer.add("task", "task", t.t0_mono, mono_s(),
@@ -1627,18 +1772,22 @@ class TransferService:
             payload["error"] = error
         if state == tk.FAILED and t.fault is not None:
             payload["fault"] = t.fault.to_json()
-        self.events.emit(kind, t.spec.task_id, t.spec.tenant, **payload)
-        if state == tk.FAILED and t.fault is not None:
-            # post-mortem flight-recorder bundle: the event ring, the faulted
-            # chunk's span chain, a metrics snapshot, and the journal tail
-            try:
-                self.recorder.dump(
-                    t.spec.task_id, t.fault.kind, offset=t.fault.offset,
-                    journal_path=self.store.journal_path(t.spec.task_id),
-                    extra={"error": t.fault.error,
-                           "chunk": t.fault.chunk, "item": t.fault.item})
-            except Exception:  # noqa: BLE001 — a failing dump must never
-                pass           # mask the task failure it is documenting
+        try:
+            self.events.emit(kind, t.spec.task_id, t.spec.tenant, **payload)
+            if state == tk.FAILED and t.fault is not None:
+                # post-mortem flight-recorder bundle: the event ring, the
+                # faulted chunk's span chain, a metrics snapshot, journal tail
+                try:
+                    self.recorder.dump(
+                        t.spec.task_id, t.fault.kind, offset=t.fault.offset,
+                        journal_path=self.store.journal_path(t.spec.task_id),
+                        extra={"error": t.fault.error,
+                               "chunk": t.fault.chunk, "item": t.fault.item})
+                except Exception:  # noqa: BLE001 — a failing dump must never
+                    pass           # mask the task failure it is documenting
+        finally:
+            with self._cond:
+                self._cond.notify_all()
 
     def _task_metrics(self, t: _Task) -> dict[str, Any]:
         """The TaskStatus ``metrics`` view: per-task registry readout."""

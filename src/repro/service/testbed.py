@@ -48,9 +48,9 @@ from repro.faults.scenarios import Scenario
 from repro.service.batcher import BatchConfig, Batcher
 from repro.service.scheduler import (
     DEFAULT_QUOTA,
+    ActivationIndex,
     AllocationEngine,
     TenantQuota,
-    select_activations,
 )
 from repro.service.task import TransferItem
 
@@ -183,7 +183,7 @@ def run_load(
         for group in batcher.split(items):
             sizes = tuple(it.nbytes for it in group)
             tasks.append(SimTask(
-                task_id=f"task-{len(tasks):06d}-{sub.tenant}",
+                task_id=f"task-{len(tasks):09d}-{sub.tenant}",
                 tenant=sub.tenant,
                 label=sub.label,
                 file_bytes=sizes,
@@ -216,10 +216,13 @@ def run_load(
     outage_log: list[tuple[float, float]] = []   # closed windows, for spans
     moved_bytes = 0.0
 
-    pending: list[SimTask] = []
+    # heap-indexed pending set (same policy as the real scheduler): each
+    # reschedule costs O(decisions log tenants), not a scan of every queued
+    # task — the difference between 10^3-task and 10^6-task workloads here
+    pending: dict[str, SimTask] = {}
+    activation = ActivationIndex()
     active: list[SimTask] = []
     finished: list[SimTask] = []
-    served: dict[str, int] = {}
     arrivals = sorted(tasks, key=lambda t: (t.submit_s, t.seq))
     ai = 0
     clock = VirtualClock(guard=20 * len(tasks) + 1000, label="testbed")
@@ -235,21 +238,13 @@ def run_load(
         # activation (tenant-fair), then mover allocation + fluid rates
         free = max_concurrent - len(active)
         if free > 0 and pending:
-            by_tenant: dict[str, int] = {}
-            for a in active:
-                by_tenant[a.tenant] = by_tenant.get(a.tenant, 0) + 1
-            chosen = select_activations(
-                [(p.seq, p.task_id, p.tenant) for p in pending],
-                by_tenant, free_slots=free,
-                quotas=quotas, default_quota=default_quota,
-                served_by_tenant=served,
+            chosen = activation.select(
+                free, quotas=quotas, default_quota=default_quota,
+                validate=lambda tid: tid in pending,
             )
-            lut = {p.task_id: p for p in pending}
             for tid in chosen:
-                task = lut[tid]
-                pending.remove(task)
+                task = pending.pop(tid)
                 task.start_s = clock.now
-                served[task.tenant] = served.get(task.tenant, 0) + 1
                 active.append(task)
         if not active:
             return
@@ -273,7 +268,9 @@ def run_load(
         # admit all submissions at the current time
         moved = False
         while ai < len(arrivals) and arrivals[ai].submit_s <= clock.now + 1e-12:
-            pending.append(arrivals[ai])
+            task = arrivals[ai]
+            pending[task.task_id] = task
+            activation.add(task.seq, task.task_id, task.tenant)
             ai += 1
             moved = True
         if moved or active or pending:
@@ -317,6 +314,7 @@ def run_load(
             a.done_s = clock.now
             a.remaining_bytes = 0.0
             active.remove(a)
+            activation.active_delta(a.tenant, -1)
             finished.append(a)
 
     if outage_win is not None:

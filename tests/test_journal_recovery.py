@@ -8,6 +8,7 @@ tail after the LAST verified record, and leave the file appendable.
 """
 import json
 import os
+import pathlib
 import shutil
 
 import pytest
@@ -150,24 +151,26 @@ def test_tear_journal_tail_helper(tmp_path):
 def test_task_store_torn_tail_truncated_and_appendable(tmp_path):
     root = tmp_path / "svc"
     store = TaskStore(root)
-    spec = TaskSpec(task_id="task-000000-a", tenant="a", label="",
+    spec = TaskSpec(task_id="task-000000000-a", tenant="a", label="",
                     items=(TransferItem("s", "d", 10),))
     store.append_submit(spec)
-    store.append_state("task-000000-a", "ACTIVE")
+    store.append_state("task-000000000-a", "ACTIVE")
     store.close()
-    log = root / "tasks.log"
+    # the task's records live in its tenant's shard log
+    [log] = [pathlib.Path(p) for p in store.shard_paths()
+             if os.path.getsize(p) > 0]
     good = log.read_bytes()
     with open(log, "ab") as fh:                   # crash mid-append
         fh.write(b'{"body": {"type": "state", "task_')
     store2 = TaskStore(root)
     assert store2.torn_tail_bytes > 0
     assert os.path.getsize(log) == len(good)      # repaired
-    rec = store2.records["task-000000-a"]
+    rec = store2.records["task-000000000-a"]
     assert rec.state == "ACTIVE"
-    store2.append_state("task-000000-a", "PENDING")   # post-repair append
+    store2.append_state("task-000000000-a", "PENDING")   # post-repair append
     store2.close()
     store3 = TaskStore(root)
-    assert store3.records["task-000000-a"].state == "PENDING"
+    assert store3.records["task-000000000-a"].state == "PENDING"
     assert store3.torn_tail_bytes == 0
     store3.close()
 

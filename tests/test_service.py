@@ -378,3 +378,428 @@ def test_testbed_tenant_arrival_and_fairness():
     c_tasks = [t for t in rep.tasks if t.tenant == "C"]
     assert c_tasks and all(t.start_s >= 5.0 for t in c_tasks)
     assert rep.aggregate_gbps > 0
+
+
+# ---------------------------------------------------------------------------
+# million-task control plane: sharded store, bulk APIs, ordered events
+# ---------------------------------------------------------------------------
+import json
+import pathlib
+import random
+import shutil
+import threading
+
+from repro.core.journal import checked_line
+from repro.service import ActivationIndex, EventBus, TaskSpec
+from repro.service.scheduler import select_activations
+from repro.service.store import ID_WIDTH, TaskStore, shard_of
+
+
+def _spec(task_id, tenant):
+    return TaskSpec(task_id=task_id, tenant=tenant, label="",
+                    items=(TransferItem("s", "d", 1),))
+
+
+def _fresh(root, **kw):
+    kw.setdefault("auto_compact", False)
+    return TaskStore(root, **kw)
+
+
+def _snapshot(store):
+    return {tid: (r.seq, r.state, r.error, r.spec.to_json())
+            for tid, r in store.records.items()}
+
+
+def test_next_task_id_concurrent_mint_unique(tmp_path):
+    """Regression: next_task_id read the submit counter without reserving,
+    so two calls before either submit landed minted the SAME id (and the
+    second submit silently overwrote the first's TaskRecord)."""
+    store = _fresh(tmp_path / "s")
+    ids, lock = [], threading.Lock()
+    start = threading.Barrier(8)
+
+    def mint():
+        start.wait()
+        mine = [store.next_task_id("t") for _ in range(200)]
+        with lock:
+            ids.extend(mine)
+
+    ts = [threading.Thread(target=mint) for _ in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(set(ids)) == len(ids) == 1600
+    store.close()
+
+
+def test_task_id_width_survives_the_million_task_target(tmp_path):
+    """Regression: the 06d format wrapped exactly at 10^6 — task 1_000_000
+    minted 'task-1000000-…' which no longer sorted lexicographically (and a
+    clash with task 0 was one modulo away in formats that truncated)."""
+    store = _fresh(tmp_path / "s")
+    store._next_id = 10**6 - 1
+    a = store.next_task_id("t")
+    b = store.next_task_id("t")
+    assert a != b and a < b                       # still lexicographic
+    assert len(a.split("-")[1]) == len(b.split("-")[1]) == ID_WIDTH
+    store.close()
+
+
+def test_concurrent_submit_hammer_unique_ids_replay_stable_seqs(tmp_path):
+    """Regression for the append/seq atomicity bug: seq assignment and the
+    log append now happen under one lock hold, so a submit hammer must yield
+    unique ids, dense seqs, and a replay that agrees with the live process
+    about every task's seq."""
+    root = tmp_path / "s"
+    store = _fresh(root, n_shards=4)
+    start = threading.Barrier(8)
+
+    def worker(wid):
+        rng = random.Random(wid)
+        start.wait()
+        for i in range(60):
+            tenant = f"t{rng.randrange(12)}"
+            if i % 3 == 0:
+                store.append_submit_many(
+                    [_spec(store.next_task_id(tenant), tenant)
+                     for _ in range(3)])
+            else:
+                store.append_submit(_spec(store.next_task_id(tenant), tenant))
+
+    ts = [threading.Thread(target=worker, args=(w,)) for w in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    n = sum(1 for w in range(8) for i in range(60)
+            for _ in (range(3) if i % 3 == 0 else range(1)))
+    live = _snapshot(store)
+    store.close()
+    assert len(live) == n                         # no id collisions ate a record
+    assert sorted(r[0] for r in live.values()) == list(range(n))   # dense seqs
+    replayed = _fresh(root, n_shards=4)
+    assert _snapshot(replayed) == live            # replay == live, seqs included
+    replayed.close()
+
+
+def test_shard_torn_tail_truncated_at_every_byte(tmp_path):
+    """Property test: for EVERY byte boundary inside a shard's last record,
+    replay keeps exactly the complete records, truncates the torn tail of
+    that shard only, and the store stays appendable."""
+    ref = tmp_path / "ref"
+    store = _fresh(ref, n_shards=4)
+    tenants = ["a", "b", "c", "d", "e", "f"]
+    for i, tn in enumerate(tenants):
+        store.append_submit(_spec(f"task-{i:09d}-{tn}", tn))
+    for i, tn in enumerate(tenants):
+        store.append_state(f"task-{i:09d}-{tn}", "ACTIVE")
+    expect = _snapshot(store)
+    store.close()
+    shards = [p for p in store.shard_paths() if os.path.getsize(p)]
+    assert len(shards) > 1                        # the storm really sharded
+    for shard in shards:
+        raw = pathlib.Path(shard).read_bytes()
+        lines = raw.splitlines(keepends=True)
+        last_start = len(raw) - len(lines[-1])
+        body = json.loads(lines[-1])["body"]
+        assert body["type"] == "state"            # last record: a state flip
+        victim = body["task_id"]
+        for cut in range(last_start + 1, len(raw)):
+            work = tmp_path / f"cut{os.path.basename(shard)}-{cut}"
+            shutil.copytree(ref, work)
+            target = os.path.join(work, "tasks", os.path.basename(shard))
+            with open(target, "r+b") as fh:
+                fh.truncate(cut)
+            st = _fresh(work, n_shards=4)
+            want = dict(expect)
+            want[victim] = (want[victim][0], "PENDING", None, want[victim][3])
+            assert _snapshot(st) == want, (shard, cut)
+            assert st.torn_tail_bytes == cut - last_start
+            assert os.path.getsize(target) == last_start   # repaired
+            st.append_state(victim, "CANCELED")   # post-repair append works
+            st.close()
+            st2 = _fresh(work, n_shards=4)
+            assert st2.records[victim].state == "CANCELED"
+            assert st2.torn_tail_bytes == 0
+            st2.close()
+            shutil.rmtree(work)
+
+
+def test_compaction_preserves_replayed_state_bit_for_bit(tmp_path):
+    root = tmp_path / "s"
+    store = _fresh(root, n_shards=4)
+    rng = random.Random(7)
+    for i in range(40):
+        tn = f"t{i % 10}"
+        store.append_submit(_spec(store.next_task_id(tn), tn))
+    for tid in list(store.records):               # churn: many dead records
+        for st in rng.choices(["ACTIVE", "PENDING", "PAUSED", "ACTIVE"], k=5):
+            store.append_state(tid, st)
+        if rng.random() < 0.3:
+            store.append_state(tid, "FAILED", error="boom")
+    live = _snapshot(store)
+    totals = store.compact()
+    assert totals["records"] == 40
+    assert totals["bytes_after"] < totals["bytes_before"]
+    assert _snapshot(store) == live               # compaction changed nothing
+    store.close()
+    replayed = _fresh(root, n_shards=4)
+    assert _snapshot(replayed) == live            # ...and neither did replay
+    # canonical form: compacting the replayed store reproduces the exact
+    # same shard bytes — compaction is deterministic and idempotent
+    replayed.compact()
+    replayed.close()
+    first = [pathlib.Path(p).read_bytes() for p in store.shard_paths()]
+    again = _fresh(root, n_shards=4)
+    again.compact()
+    again.close()
+    second = [pathlib.Path(p).read_bytes() for p in again.shard_paths()]
+    assert first == second
+    # post-compaction appends still replay
+    final = _fresh(root, n_shards=4)
+    assert _snapshot(final) == live
+    final.close()
+
+
+def test_legacy_single_log_migrates_into_shards(tmp_path):
+    """A pre-shard tasks.log (no seq in records; file order numbers them) is
+    migrated into the shard files once and renamed out of the append path."""
+    root = tmp_path / "s"
+    os.makedirs(root)
+    specs = [_spec(f"task-{i:06d}-t{i % 3}", f"t{i % 3}") for i in range(9)]
+    with open(root / "tasks.log", "w", encoding="utf-8") as fh:
+        for sp in specs:                          # legacy records: no "seq"
+            fh.write(checked_line({"type": "submit", "spec": sp.to_json()}) + "\n")
+        fh.write(checked_line({"type": "state", "task_id": specs[4].task_id,
+                               "state": "SUCCEEDED", "error": None}) + "\n")
+    store = _fresh(root, n_shards=4)
+    assert not os.path.exists(root / "tasks.log")
+    assert os.path.exists(root / "tasks.log.migrated")
+    assert len(store.records) == 9
+    assert [store.records[sp.task_id].seq for sp in specs] == list(range(9))
+    assert store.records[specs[4].task_id].state == "SUCCEEDED"
+    assert store.next_task_id("t0").startswith("task-000000009-")
+    live = _snapshot(store)
+    store.close()
+    reopened = _fresh(root, n_shards=4)           # second open: no re-migration
+    assert _snapshot(reopened) == live
+    reopened.close()
+
+
+def test_replay_survives_shard_count_change(tmp_path):
+    root = tmp_path / "s"
+    store = _fresh(root, n_shards=4)
+    for i in range(20):
+        tn = f"t{i % 5}"
+        store.append_submit(_spec(store.next_task_id(tn), tn))
+    live = _snapshot(store)
+    store.close()
+    # reopen wider AND in legacy fsync-per-append mode: old shard files
+    # still replay, and both durability modes append interchangeably
+    wider = _fresh(root, n_shards=8, group_commit=False)
+    assert _snapshot(wider) == live
+    wider.append_submit(_spec(wider.next_task_id("t0"), "t0"))
+    assert len(wider.records) == 21 and wider.fsyncs >= 1
+    wider.close()
+
+
+def test_event_bus_delivery_order_across_threads():
+    """Regression: emit() used to release the bus lock before invoking
+    callbacks, so an event emitted later could reach subscribers first.
+    A subscriber stalled inside seq 0's delivery must still see seq 1
+    AFTER seq 0 — the second emit may not cut the line."""
+    bus = EventBus()
+    seen, stall = [], threading.Event()
+
+    def sub(ev):
+        if ev.seq == 0:
+            stall.wait(5.0)                       # hold seq 0's delivery open
+        seen.append(ev.seq)
+
+    bus.subscribe(sub)
+    t = threading.Thread(target=lambda: bus.emit("SUBMITTED", "t0", "a"))
+    t.start()
+    while bus.next_seq == 0:                      # seq 0 assigned & in flight
+        time.sleep(0.001)
+    t2 = threading.Thread(target=lambda: bus.emit("SUBMITTED", "t1", "a"))
+    t2.start()
+    time.sleep(0.05)                              # old code: t2 delivers here
+    assert seen == []                             # nobody overtook seq 0
+    stall.set()
+    t.join(5.0)
+    t2.join(5.0)
+    assert seen == [0, 1]
+
+
+def test_event_bus_global_order_under_emit_storm():
+    bus = EventBus()
+    seen = []
+    bus.subscribe(lambda ev: seen.append(ev.seq))
+    start = threading.Barrier(8)
+
+    def emitter(wid):
+        start.wait()
+        for _ in range(100):
+            bus.emit("PROGRESS", f"t{wid}", "a")
+
+    ts = [threading.Thread(target=emitter, args=(w,)) for w in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert seen == list(range(800))               # strict global seq order
+
+
+def test_event_cursor_resume_after_gap(tmp_path):
+    """A late joiner resumes from a seq the bounded ring has already
+    evicted: the spill log serves the gap, the ring serves the tail, and a
+    from_seq subscription sees no gap and no duplicate at the seam."""
+    spill = str(tmp_path / "events.log")
+    bus = EventBus(history=4, spill_path=spill)
+    for i in range(20):
+        bus.emit("PROGRESS", f"t{i}", "a", i=i)
+    ring = [e.seq for e in bus.history()]
+    assert ring == [16, 17, 18, 19]               # ring forgot the prefix
+    assert [e.seq for e in bus.read_from(0)] == list(range(20))
+    assert [e.seq for e in bus.read_from(17)] == [17, 18, 19]
+    assert [e.seq for e in bus.read_from(5, limit=3)] == [5, 6, 7]
+    got = []
+    bus.subscribe(lambda ev: got.append(ev.seq), from_seq=10)
+    assert got == list(range(10, 20))             # catch-up through the gap
+    bus.emit("PROGRESS", "t20", "a")
+    assert got == list(range(10, 21))             # live delivery seam: no dup
+    bus.close()
+
+
+def test_event_seq_resumes_across_reopen(tmp_path):
+    spill = str(tmp_path / "events.log")
+    bus = EventBus(spill_path=spill)
+    for i in range(5):
+        bus.emit("PROGRESS", f"t{i}", "a")
+    bus.close()
+    bus2 = EventBus(spill_path=spill)
+    assert bus2.next_seq == 5                     # numbering continues
+    ev = bus2.emit("SUCCEEDED", "t5", "a")
+    assert ev.seq == 5
+    assert [e.seq for e in bus2.read_from(0)] == list(range(6))
+    bus2.close()
+
+
+def test_subscribe_from_seq_no_gap_no_dup_under_concurrent_emits(tmp_path):
+    bus = EventBus(history=8, spill_path=str(tmp_path / "events.log"))
+    for i in range(50):
+        bus.emit("PROGRESS", f"t{i}", "a")
+    stop = threading.Event()
+
+    def emitter():
+        i = 50
+        while not stop.is_set():
+            bus.emit("PROGRESS", f"t{i}", "a")
+            i += 1
+
+    t = threading.Thread(target=emitter)
+    t.start()
+    try:
+        got = []
+        bus.subscribe(lambda ev: got.append(ev.seq), from_seq=0)
+        while len(got) < 120:
+            time.sleep(0.001)
+    finally:
+        stop.set()
+        t.join(5.0)
+    bus.close()
+    assert got[:120] == list(range(120))          # contiguous across the seam
+
+
+def test_activation_index_matches_reference_policy():
+    """ActivationIndex is the O(log n) engine behind _activate_locked; it
+    must pick exactly what the reference select_activations scan picks."""
+    rng = random.Random(0)
+    for trial in range(60):
+        tenants = [f"t{i}" for i in range(rng.randrange(1, 8))]
+        pending = []
+        seq = 0
+        for tn in tenants:
+            for _ in range(rng.randrange(0, 6)):
+                pending.append((seq, f"task-{seq:09d}-{tn}", tn))
+                seq += 1
+        rng.shuffle(pending)
+        active = {tn: rng.randrange(0, 3) for tn in tenants}
+        served = {tn: rng.randrange(0, 4) for tn in tenants}
+        quotas = {tn: TenantQuota(max_active=rng.choice([None, 1, 2]))
+                  for tn in tenants if rng.random() < 0.5}
+        free = rng.randrange(0, 8)
+        want = select_activations(
+            pending, dict(active), free_slots=free, quotas=quotas,
+            served_by_tenant=dict(served))
+        idx = ActivationIndex(served=dict(served))
+        for s, tid, tn in pending:
+            idx.add(s, tid, tn)
+        for tn, n in active.items():
+            idx.active_delta(tn, n)
+        got = idx.select(free, quotas=quotas)
+        assert got == want, (trial, got, want)
+
+
+def test_bulk_apis_and_cursor_pagination(tmp_path):
+    """submit_many / status_many / tasks(cursor=) — and the paged walk
+    visits exactly the full listing."""
+    svc = TransferService(tmp_path / "svc", svc_config(
+        default_quota=TenantQuota(max_active=0)))    # hold everything PENDING
+    try:
+        ids = []
+        for tn in ("alice", "bob", "carol"):
+            out = svc.submit_many(
+                [[("s", "d", 1)] for _ in range(10)], tenant=tn, batch=False)
+            assert len(out) == 10 and all(len(x) == 1 for x in out)
+            ids.extend(tid for x in out for tid in x)
+        assert len(set(ids)) == 30
+        sts = svc.status_many(ids)
+        assert [s.task_id for s in sts] == ids
+        assert all(s.state == "PENDING" for s in sts)
+        for s, one in zip(sts, (svc.status(t) for t in ids)):
+            assert (s.task_id, s.state, s.tenant) == (one.task_id, one.state, one.tenant)
+        full = [s.task_id for s in svc.tasks()]
+        assert full == sorted(ids)                # submission order == id order
+        walked, cursor = [], None
+        while True:
+            page = svc.tasks(cursor=cursor, limit=7)
+            if not page:
+                break
+            assert len(page) <= 7
+            walked.extend(s.task_id for s in page)
+            cursor = page[-1].task_id
+        assert walked == full                     # paged walk == full listing
+        bob = [s.task_id for s in svc.tasks(tenant="bob")]
+        assert len(bob) == 10 and all("-bob" in t for t in bob)
+        assert [s.task_id for s in svc.tasks(tenant="bob", limit=3)] == bob[:3]
+        assert svc.tasks(state="ACTIVE") == []
+        with pytest.raises(KeyError):
+            svc.tasks(cursor="task-999999999-nope")
+    finally:
+        svc.close()
+
+
+def test_service_events_from_and_restart_seq(tmp_path):
+    """Service-level cursor reads, and event numbering that survives a
+    service restart (late joiners can span the outage)."""
+    items = make_files(tmp_path, 2, 50_000)
+    svc = TransferService(tmp_path / "svc", svc_config())
+    [tid] = svc.submit(items, tenant="alice", batch=False)
+    svc.wait(tid, timeout=30)
+    evs = svc.events_from(0)
+    assert [e.seq for e in evs] == list(range(len(evs)))
+    kinds = [e.kind for e in evs]
+    assert kinds[0] == "SUBMITTED" and "SUCCEEDED" in kinds
+    n = len(evs)
+    svc.close()
+    svc2 = TransferService(tmp_path / "svc", svc_config())
+    try:
+        [tid2] = svc2.submit(items, tenant="alice", batch=False)
+        svc2.wait(tid2, timeout=30)
+        evs2 = svc2.events_from(0)
+        assert [e.seq for e in evs2][:n] == list(range(n))   # old events intact
+        assert len(evs2) > n and [e.seq for e in evs2] == list(range(len(evs2)))
+    finally:
+        svc2.close()
