@@ -266,17 +266,31 @@ class EventBus:
 
 
 def _resume_seq(spill_path: str) -> int:
-    """Next seq after the last parseable spilled event (tail scan)."""
+    """Next seq after the last parseable spilled event.
+
+    Tail scan with a widening window: one event line can exceed any fixed
+    window (large payloads), and resuming at 0 on a parse miss would mint
+    duplicate seqs, so on a miss the window doubles backwards until a
+    parseable line or start-of-file is reached.
+    """
     try:
         size = os.path.getsize(spill_path)
     except OSError:
         return 0
+    window = 65536
     with open(spill_path, "rb") as fh:
-        fh.seek(max(0, size - 65536))
-        tail = fh.read().decode("utf-8", errors="replace")
-    for line in reversed(tail.splitlines()):
-        try:
-            return int(json.loads(line)["seq"]) + 1
-        except (ValueError, KeyError, TypeError):
-            continue
-    return 0
+        while True:
+            start = max(0, size - window)
+            fh.seek(start)
+            tail = fh.read().decode("utf-8", errors="replace")
+            lines = tail.splitlines()
+            if start > 0 and lines:
+                lines = lines[1:]   # first line may start mid-record
+            for line in reversed(lines):
+                try:
+                    return int(json.loads(line)["seq"]) + 1
+                except (ValueError, KeyError, TypeError):
+                    continue
+            if start == 0:
+                return 0
+            window *= 2

@@ -18,7 +18,11 @@ carries its global ``seq`` explicitly, assigned under the same lock hold
 that appends the record, so two interleaved submitters can never persist in
 one order and number in the other — replay agrees with the live process by
 construction. State records for one task always live in that task's shard
-(tasks are sharded by tenant), so in-file order is authoritative for them.
+(tasks are sharded by tenant), so in-file order is authoritative for them;
+when ``n_shards`` changes between incarnations a task's submit and its
+newer states can sit in different files, so replay visits orphaned
+wider-incarnation shards first and defers any state record seen before its
+task's submit until every file has replayed.
 
 Durability model — group commit: appends write+flush under the shard lock,
 then wait for an fsync that covers them. Whoever finds the sync slot free
@@ -129,6 +133,10 @@ class TaskStore:
             for i in range(n_shards)
         ]
         self._replay_seq = 0         # fallback numbering for legacy records
+        # during shard replay only: state records whose task is not known
+        # yet (its submit record lives in a shard that replays later —
+        # possible whenever n_shards changed between incarnations)
+        self._deferred_states: list[dict] | None = None
         if os.path.exists(self.log_path):
             self._migrate_legacy()
         self._replay_shards()
@@ -157,14 +165,21 @@ class TaskStore:
 
     # -- replay ------------------------------------------------------------
     def _replay_shards(self) -> None:
-        # shard files beyond n_shards (a previous incarnation ran wider) are
-        # still replayed: shard membership matters only for new appends
+        # Shard files beyond n_shards (a previous incarnation ran wider) are
+        # still replayed, and replay FIRST: they may hold a task's only
+        # submit record while its newer state records live on the re-hashed
+        # current shard. Replay order between files is otherwise not
+        # authoritative (submits carry seq; a task's states normally share
+        # its file), so states that arrive before their task's submit —
+        # possible for any n_shards change, not just widening — are
+        # deferred and applied once every file has replayed.
         paths = {sh.path for sh in self._shards}
         extra = sorted(
             p for p in glob.glob(os.path.join(self.root, "tasks", "shard-*.log"))
             if p not in paths
         )
-        for path in [sh.path for sh in self._shards] + extra:
+        self._deferred_states = []
+        for path in extra + [sh.path for sh in self._shards]:
             if not os.path.exists(path):
                 continue
             data, valid_end = replay_checked_lines(path, self._apply)
@@ -173,6 +188,9 @@ class TaskStore:
                 self.torn_tail_bytes += torn
                 with open(path, "r+b") as fh:
                     fh.truncate(valid_end)
+        deferred, self._deferred_states = self._deferred_states, None
+        for body in deferred:
+            self._apply_state(body)
         # home every replayed task on its shard (for compaction bookkeeping)
         for tid, rec in self.records.items():
             sh = self._shards[shard_of(rec.spec.tenant, self.n_shards)]
@@ -187,10 +205,20 @@ class TaskStore:
             for entry in body["entries"]:
                 self._apply_submit(entry)
         elif kind == "state":
-            rec = self.records.get(body.get("task_id"))
-            if rec is not None and body.get("state") in STATES:
-                rec.state = body["state"]
-                rec.error = body.get("error")
+            self._apply_state(body)
+
+    def _apply_state(self, body: dict) -> None:
+        rec = self.records.get(body.get("task_id"))
+        if rec is None:
+            # unknown task: during shard replay the submit may simply live
+            # in a later-replaying shard — hold the record and retry after
+            # all files are in. Outside replay (migration), drop it.
+            if self._deferred_states is not None and body.get("task_id"):
+                self._deferred_states.append(body)
+            return
+        if body.get("state") in STATES:
+            rec.state = body["state"]
+            rec.error = body.get("error")
 
     def _apply_submit(self, body: dict) -> None:
         spec = TaskSpec.from_json(body["spec"])
@@ -380,13 +408,33 @@ class TaskStore:
                     except Exception:  # noqa: BLE001 — compaction is an
                         pass           # optimization; appends must survive it
 
-    def compact_shard(self, sh: _Shard) -> dict:
-        """Rewrite one shard to combined live records only; atomic replace."""
-        with sh.lock:
-            # wait out an in-flight group fsync: it holds the old fd
+    def _quiesce_and_lock(self, sh: _Shard) -> None:
+        """Acquire ``sh.lock`` with no group-commit fsync in flight.
+
+        Never waits for ``syncing`` while holding ``sh.lock``: a committer
+        claims the sync slot under ``sh.cond`` and then needs ``sh.lock``
+        to capture the fd and watermark, so waiting here with the lock held
+        would deadlock against it (each side holding what the other needs,
+        wedging every later append on the shard). Instead wait first, then
+        take the lock and re-check — if a committer claimed the slot in the
+        gap, back off and wait again. Once this returns, no committer can
+        touch the old fd: claiming the slot is not enough, capturing the fd
+        needs the lock we now hold.
+        """
+        while True:
             with sh.cond:
                 while sh.syncing:
                     sh.cond.wait()
+            sh.lock.acquire()
+            with sh.cond:
+                if not sh.syncing:
+                    return
+            sh.lock.release()
+
+    def compact_shard(self, sh: _Shard) -> dict:
+        """Rewrite one shard to combined live records only; atomic replace."""
+        self._quiesce_and_lock(sh)      # excludes appends and in-flight fsyncs
+        try:
             before = os.path.getsize(sh.path) if os.path.exists(sh.path) else 0
             with self._lock:
                 live = sorted(
@@ -410,6 +458,8 @@ class TaskStore:
             sh.appends = len(lines)
             after = os.path.getsize(sh.path)
             self.compactions += 1
+        finally:
+            sh.lock.release()
         return {"records": len(lines), "bytes_before": before,
                 "bytes_after": after}
 
@@ -448,10 +498,17 @@ class TaskStore:
         if self._compactor is not None:
             self._compactor.join(timeout=5.0)
         for sh in self._shards:
-            with sh.lock:
+            # quiesce first: closing under sh.lock alone could yank the fd
+            # out from under a committer that captured it and is about to
+            # fsync (ValueError mid-shutdown). A committer arriving after
+            # the close finds fh=None and skips the fsync.
+            self._quiesce_and_lock(sh)
+            try:
                 if sh.fh is not None:
                     sh.fh.close()
                     sh.fh = None
+            finally:
+                sh.lock.release()
 
     def __enter__(self) -> "TaskStore":
         return self

@@ -604,6 +604,122 @@ def test_replay_survives_shard_count_change(tmp_path):
     wider.close()
 
 
+def _tenant_where(pred):
+    return next(t for t in (f"t{i}" for i in range(100_000)) if pred(t))
+
+
+def test_state_survives_shard_narrowing(tmp_path):
+    """Regression: shard files from a wider incarnation replayed AFTER the
+    current shards, so a state record appended to a task's re-hashed home
+    shard replayed before the task's submit record (still on the extra
+    shard) and was dropped — the next restart regressed the task to its
+    pre-narrowing state."""
+    root = tmp_path / "s"
+    # 8-shard home is an orphaned extra file under 4 shards
+    tenant = _tenant_where(lambda t: shard_of(t, 8) >= 4)
+    wide = _fresh(root, n_shards=8)
+    tid = wide.next_task_id(tenant)
+    wide.append_submit(_spec(tid, tenant))
+    wide.close()
+    narrow = _fresh(root, n_shards=4)
+    assert narrow.records[tid].state == "PENDING"
+    narrow.append_state(tid, "SUCCEEDED")
+    narrow.close()
+    again = _fresh(root, n_shards=4)              # the restart that regressed
+    assert again.records[tid].state == "SUCCEEDED"
+    again.close()
+
+
+def test_state_survives_arbitrary_shard_resize(tmp_path):
+    """Same bug, non-power-of-two resize (6 -> 4 shards): the submit's old
+    home is a CURRENT shard file that still replays after the state's new
+    home, so extras-first alone can't save it — only deferring state
+    records for not-yet-seen tasks until every file has replayed does."""
+    root = tmp_path / "s"
+    tenant = _tenant_where(
+        lambda t: shard_of(t, 6) < 4 and shard_of(t, 4) < shard_of(t, 6))
+    old = _fresh(root, n_shards=6)
+    tid = old.next_task_id(tenant)
+    old.append_submit(_spec(tid, tenant))
+    old.close()
+    cur = _fresh(root, n_shards=4)
+    cur.append_state(tid, "FAILED", error="boom")
+    cur.close()
+    again = _fresh(root, n_shards=4)
+    assert again.records[tid].state == "FAILED"
+    assert again.records[tid].error == "boom"
+    again.close()
+
+
+def test_compaction_does_not_deadlock_with_group_commit(tmp_path):
+    """Regression: a group committer claims the sync slot (syncing=True,
+    under sh.cond) and then needs sh.lock to capture the fd; compact_shard
+    used to take sh.lock FIRST and then wait on sh.cond for syncing to
+    clear — each thread held what the other needed, wedging the shard (and
+    every later append on it) forever."""
+    st = _fresh(tmp_path / "s", n_shards=1, group_commit=True)
+    st.append_submit(_spec(st.next_task_id("t"), "t"))
+    sh = st._shards[0]
+    with sh.cond:
+        sh.syncing = True             # a committer has claimed the slot…
+
+    done = threading.Event()
+
+    def committer():                  # …and now goes for the fd, like _commit
+        time.sleep(0.1)               # let compact_shard get inside first
+        with sh.lock:
+            fd = sh.fh.fileno()
+        os.fsync(fd)
+        with sh.cond:
+            sh.syncing = False
+            sh.cond.notify_all()
+        done.set()
+
+    threading.Thread(target=committer, daemon=True).start()
+    compactor = threading.Thread(
+        target=lambda: st.compact_shard(sh), daemon=True)
+    compactor.start()
+    compactor.join(timeout=10.0)
+    assert not compactor.is_alive(), "compact_shard deadlocked vs group commit"
+    assert done.wait(10.0)
+    st.close()
+
+
+def test_group_commit_append_hammer_with_auto_compaction(tmp_path):
+    """Production path: group commit AND the background compactor on, with
+    a slack small enough that compaction runs mid-hammer. Appends must not
+    wedge behind it, and replay must reconstruct the hammered state."""
+    root = tmp_path / "s"
+    st = TaskStore(root, n_shards=2, group_commit=True,
+                   auto_compact=True, compact_slack=4)
+
+    def worker(wid):
+        for _ in range(40):
+            tn = f"t{wid}"
+            tid = st.next_task_id(tn)
+            st.append_submit(_spec(tid, tn))
+            st.append_state(tid, "ACTIVE")
+            st.append_state(tid, "SUCCEEDED")
+
+    ts = [threading.Thread(target=worker, args=(w,), daemon=True)
+          for w in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60.0)
+    assert not any(t.is_alive() for t in ts), "appends wedged behind compaction"
+    deadline = time.time() + 10.0                 # compactor wakes within 0.5s
+    while st.compactions == 0 and time.time() < deadline:
+        time.sleep(0.01)
+    assert st.compactions >= 1                    # the compactor really ran
+    live = _snapshot(st)
+    st.close()
+    assert len(live) == 160
+    replayed = _fresh(root, n_shards=2)
+    assert _snapshot(replayed) == live
+    replayed.close()
+
+
 def test_event_bus_delivery_order_across_threads():
     """Regression: emit() used to release the bus lock before invoking
     callbacks, so an event emitted later could reach subscribers first.
@@ -683,6 +799,21 @@ def test_event_seq_resumes_across_reopen(tmp_path):
     ev = bus2.emit("SUCCEEDED", "t5", "a")
     assert ev.seq == 5
     assert [e.seq for e in bus2.read_from(0)] == list(range(6))
+    bus2.close()
+
+
+def test_event_seq_resumes_past_oversized_tail_line(tmp_path):
+    """Regression: _resume_seq scanned only the final 64 KiB of the spill;
+    a last event line bigger than that parsed nothing and the reopened bus
+    restarted at seq 0, re-issuing already-spilled seqs (stale cursors)."""
+    spill = str(tmp_path / "events.log")
+    bus = EventBus(spill_path=spill)
+    bus.emit("PROGRESS", "t0", "a")
+    bus.emit("PROGRESS", "t1", "a", blob="x" * 200_000)   # line >> 64 KiB
+    bus.close()
+    bus2 = EventBus(spill_path=spill)
+    assert bus2.next_seq == 2                     # numbering still continues
+    assert bus2.emit("SUCCEEDED", "t2", "a").seq == 2
     bus2.close()
 
 
