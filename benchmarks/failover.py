@@ -1,0 +1,322 @@
+"""Resilience-plane benchmark: failover availability, scrub repair, breakers.
+
+Three gated legs:
+
+  * **Rolling-outage storm** — N relay tasks cross a diamond fabric while a
+    seeded storm kills intermediate DTNs mid-flight (every task loses the
+    DTN its planned route crosses; some lose a second one). The no-failover
+    baseline must FAIL under this storm (the route is pinned, the outage
+    budget exhausts); the failover plane must deliver ``availability``
+    >= 95% by re-planning around the dead node with custody handoff:
+    chunks already journaled at the last healthy DTN become the new source.
+    Gates: availability >= 0.95, baseline fails, 0 integrity escapes,
+    0 re-moved journaled chunks (the custody-handoff invariant).
+
+  * **Scrub repair** — a service lands the same payload at two replicas
+    (CAS-indexed), then seeded bit-rot flips bytes inside landed, verified
+    regions of one replica (``corrupt_landed_regions``). The scrub daemon
+    must detect 100% of the flips against the journal digests and repair
+    every one from the surviving replica. Gates: rot_detected == injected,
+    repaired == injected, 0 quarantines, final bytes == origin bytes.
+
+  * **Breaker determinism** — two HealthTrackers with the same seed, driven
+    by the same scripted outcome stream, must produce byte-identical
+    transition logs and rejection schedules (the circuit breaker is
+    op-count based and seeded — wall clocks never enter the state machine).
+
+Prints ``name,value,unit`` CSV, writes ``BENCH_failover.json``, exits
+non-zero on any gate violation so CI can gate on it.
+
+Run: PYTHONPATH=src python -m benchmarks.failover [--quick] [--seeds N]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import random
+import sys
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from benchmarks._results import emit
+from repro.core import FileDest
+from repro.core.transfer import BufferSource, EndpointOutage
+from repro.fabric.relay import RelayTransfer
+from repro.fabric.topology import Endpoint, RoutePlanner, Topology
+from repro.faults import corrupt_landed_regions
+from repro.faults.injectors import _seed_int
+from repro.resil import BreakerConfig, HealthTracker
+from repro.service import ServiceConfig, TransferService
+
+
+# ---------------------------------------------------------------------------
+# leg 1: rolling-outage storm over relay routes
+# ---------------------------------------------------------------------------
+INTERMEDIATES = ("dtnA", "dtnB", "dtnC")
+
+
+def _storm_topology() -> Topology:
+    """Diamond fabric: origin -> {A,B,C} -> final, A fastest (the planned
+    route), B and C the survivors failover must discover."""
+    topo = Topology()
+    topo.add_endpoint(Endpoint("origin"))
+    topo.add_endpoint(Endpoint("final"))
+    topo.add_endpoint(Endpoint("dtnA"))
+    topo.add_endpoint(Endpoint("dtnB"))
+    topo.add_endpoint(Endpoint("dtnC"))
+    topo.add_link("origin", "dtnA", gbps=100, rtt_ms=5)
+    topo.add_link("dtnA", "final", gbps=100, rtt_ms=5)
+    topo.add_link("origin", "dtnB", gbps=80, rtt_ms=10)
+    topo.add_link("dtnB", "final", gbps=80, rtt_ms=10)
+    topo.add_link("origin", "dtnC", gbps=60, rtt_ms=20)
+    topo.add_link("dtnC", "final", gbps=60, rtt_ms=20)
+    return topo
+
+
+class _StormDest:
+    """ByteDest wrapper: after ``live_writes`` successful writes, the node
+    is dead — every further write is rejected (a hard endpoint death, not a
+    finite window: only re-routing recovers)."""
+
+    def __init__(self, inner, node: str, live_writes: int):
+        self._inner = inner
+        self._node = node
+        self._left = live_writes
+        self._lock = threading.Lock()
+
+    def write(self, offset: int, data: bytes) -> None:
+        with self._lock:
+            if self._left <= 0:
+                raise EndpointOutage(f"{self._node} is down (storm victim)")
+            self._left -= 1
+        self._inner.write(offset, data)
+
+    def read_back(self, offset: int, length: int) -> bytes:
+        return self._inner.read_back(offset, length)
+
+
+def _storm_task(seed: int, *, nbytes: int, chunk: int, failover: bool,
+                tmpdir: str) -> dict:
+    """One relay task under the storm. Returns outcome counters."""
+    topo = _storm_topology()
+    planner = RoutePlanner(topo)
+    route = planner.best_route("origin", "final", nbytes)
+    primary = [n for n in route.nodes if n in INTERMEDIATES]
+    rng = random.Random(_seed_int(seed, "storm"))
+    victims: dict[str, int] = {}
+    n_chunks = max(1, nbytes // chunk)
+    # the DTN the planned route crosses dies mid-flight (after roughly half
+    # the chunks landed there); some tasks lose a second, already-dead DTN —
+    # the first re-plan walks into it and must fail over again
+    victims[primary[0]] = max(1, n_chunks // 2)
+    if rng.random() < 0.5:
+        second = rng.choice([n for n in INTERMEDIATES if n not in victims])
+        victims[second] = 0
+    payload = np.random.default_rng(seed).integers(
+        0, 256, nbytes, dtype=np.uint8).tobytes()
+    workdir = os.path.join(tmpdir, f"storm-{'fo' if failover else 'base'}-{seed}")
+    dst_path = os.path.join(workdir, "final.out")
+    os.makedirs(workdir, exist_ok=True)
+
+    def wrap_dest(u: str, v: str, dest):
+        if v in victims:
+            return _StormDest(dest, v, victims[v])
+        return dest
+
+    out = dict(succeeded=0, escapes=0, failovers=0, re_moved=0)
+    try:
+        xfer = RelayTransfer(
+            route, BufferSource(payload), FileDest(dst_path, nbytes),
+            workdir=workdir, chunk_bytes=chunk, movers=3,
+            outage_retries=8, outage_backoff_s=0.001, retry_backoff_s=0.001,
+            backoff_seed=seed,
+            planner=planner, failover=failover, failover_outage_threshold=4,
+            health=HealthTracker(seed=seed),
+            link_dest_wrapper=wrap_dest,
+            task=f"storm-{seed}",
+        )
+        report = xfer.run()
+    except Exception:
+        return out                       # the baseline is SUPPOSED to land here
+    out["succeeded"] = 1
+    out["failovers"] = report.failovers
+    out["re_moved"] = report.re_moved_journaled
+    with open(dst_path, "rb") as fh:
+        out["escapes"] = int(fh.read() != payload)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# leg 2: landed bit-rot -> scrub detect + repair from the replica
+# ---------------------------------------------------------------------------
+def scrub_leg(seed: int, *, nbytes: int, chunk: int, flips: int,
+              tmpdir: str) -> dict:
+    root = os.path.join(tmpdir, f"scrub-{seed}")
+    os.makedirs(root, exist_ok=True)
+    payload = np.random.default_rng(seed + 1).integers(
+        0, 256, nbytes, dtype=np.uint8).tobytes()
+    src = os.path.join(root, "src.bin")
+    with open(src, "wb") as fh:
+        fh.write(payload)
+    dst1 = os.path.join(root, "replica1", "f.bin")
+    dst2 = os.path.join(root, "replica2", "f.bin")
+    svc = TransferService(os.path.join(root, "svc"),
+                          ServiceConfig(dedup="on", chunk_bytes=chunk))
+    out = dict(injected=0, detected=0, repaired=0, quarantined=0, escapes=0)
+    try:
+        [t1] = svc.submit([(src, dst1)], batch=False)
+        svc.wait(t1, timeout=120)
+        [t2] = svc.submit([(src, dst2)], batch=False)
+        svc.wait(t2, timeout=120)
+        regions = [
+            (dst1, int(c["offset"]), int(c["length"]))
+            for c in svc.status(t1).item_reports[0].chunks
+        ]
+        victims = corrupt_landed_regions(regions, count=flips, seed=seed)
+        out["injected"] = len(victims)
+        report = svc.scrub()
+        out["detected"] = report.rot_detected
+        out["repaired"] = report.repaired
+        out["quarantined"] = report.quarantined
+        with open(dst1, "rb") as fh:
+            out["escapes"] = int(fh.read() != payload)
+    finally:
+        svc.close()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# leg 3: breaker determinism across same-seed runs
+# ---------------------------------------------------------------------------
+def breaker_leg(seed: int, *, ops: int = 400) -> bool:
+    """Drive two same-seed trackers with the same scripted outcome stream;
+    their transition logs and rejection schedules must be identical."""
+    cfg = BreakerConfig(fail_threshold=3, open_ops=8, probe_ops=2)
+    script = random.Random(_seed_int(seed, "breaker-script"))
+    outcomes = [script.random() > 0.45 for _ in range(ops)]
+    snaps = []
+    for _run in range(2):
+        tracker = HealthTracker(seed=seed, config=cfg)
+        rejected = []
+        for i, ok in enumerate(outcomes):
+            target = HealthTracker.link_target("u", "v")
+            if tracker.allow(target):
+                tracker.record(target, ok)
+            else:
+                rejected.append(i)
+        snaps.append((tracker.snapshot(), tuple(rejected)))
+    return snaps[0] == snaps[1]
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="storm tasks (default: 20, quick: 8)")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="overwrite a BENCH result from a different git rev")
+    args = ap.parse_args(argv)
+    t_start = time.perf_counter()
+
+    n_tasks = args.seeds if args.seeds is not None else (8 if args.quick else 20)
+    nbytes = (256 * 1024 + 4093) if args.quick else (768 * 1024 + 4093)
+    chunk = 32 * 1024
+    scrub_bytes = 128 * 1024 if args.quick else 512 * 1024
+    scrub_seeds = 2 if args.quick else 4
+    flips = 4
+
+    rows: list[tuple[str, float, str]] = []
+    violations: list[str] = []
+
+    with tempfile.TemporaryDirectory(prefix="failover-") as tmpdir:
+        # ---- leg 1: the storm, baseline then failover
+        base = dict(succeeded=0, escapes=0, failovers=0, re_moved=0)
+        fo = dict(succeeded=0, escapes=0, failovers=0, re_moved=0)
+        for seed in range(n_tasks):
+            for k, v in _storm_task(seed, nbytes=nbytes, chunk=chunk,
+                                    failover=False, tmpdir=tmpdir).items():
+                base[k] += v
+            for k, v in _storm_task(seed, nbytes=nbytes, chunk=chunk,
+                                    failover=True, tmpdir=tmpdir).items():
+                fo[k] += v
+        availability = fo["succeeded"] / n_tasks
+        baseline_rate = base["succeeded"] / n_tasks
+        rows.append(("failover/storm_tasks", n_tasks, "tasks"))
+        rows.append(("failover/availability", round(availability, 4), "frac"))
+        rows.append(("failover/baseline_availability", round(baseline_rate, 4), "frac"))
+        rows.append(("failover/failovers", fo["failovers"], "events"))
+        rows.append(("failover/integrity_escapes", fo["escapes"], "tasks"))
+        rows.append(("failover/re_moved_journaled", fo["re_moved"], "chunks"))
+        if availability < 0.95:
+            violations.append(
+                f"storm availability {availability:.2%} < 95% with failover")
+        if base["succeeded"] >= n_tasks:
+            violations.append(
+                "the no-failover baseline survived the storm — the storm is "
+                "not forcing re-routes and the availability gate is theatre")
+        if fo["escapes"]:
+            violations.append(f"storm: {fo['escapes']} integrity escapes")
+        if fo["re_moved"]:
+            violations.append(
+                f"storm: {fo['re_moved']} journaled chunks re-moved across "
+                f"failovers (custody handoff broken)")
+        if fo["succeeded"] and not fo["failovers"]:
+            violations.append("storm tasks succeeded without a single "
+                              "failover — victims were never on the route")
+
+        # ---- leg 2: scrub detect + repair
+        agg = dict(injected=0, detected=0, repaired=0, quarantined=0, escapes=0)
+        for seed in range(scrub_seeds):
+            for k, v in scrub_leg(seed, nbytes=scrub_bytes, chunk=chunk,
+                                  flips=flips, tmpdir=tmpdir).items():
+                agg[k] += v
+        rows.append(("scrub/injected_flips", agg["injected"], "regions"))
+        rows.append(("scrub/rot_detected", agg["detected"], "regions"))
+        rows.append(("scrub/repaired", agg["repaired"], "regions"))
+        rows.append(("scrub/quarantined", agg["quarantined"], "regions"))
+        rows.append(("scrub/escapes_after_scrub", agg["escapes"], "replicas"))
+        if agg["detected"] != agg["injected"]:
+            violations.append(
+                f"scrub detected {agg['detected']}/{agg['injected']} injected flips")
+        if agg["repaired"] != agg["injected"]:
+            violations.append(
+                f"scrub repaired {agg['repaired']}/{agg['injected']} rotted regions")
+        if agg["quarantined"]:
+            violations.append(
+                f"scrub quarantined {agg['quarantined']} regions despite a "
+                f"healthy replica donor")
+        if agg["escapes"]:
+            violations.append(
+                f"{agg['escapes']} replicas still corrupt after the scrub pass")
+
+        # ---- leg 3: breaker determinism
+        det = all(breaker_leg(seed) for seed in range(3))
+        rows.append(("breaker/deterministic", int(det), "bool"))
+        if not det:
+            violations.append(
+                "breaker transition logs diverged across same-seed runs")
+
+    print("name,value,unit")
+    for name, val, unit in rows:
+        print(f"{name},{val},{unit}")
+    path = emit("failover", rows,
+                args={"quick": args.quick, "tasks": n_tasks},
+                elapsed_s=round(time.perf_counter() - t_start, 3),
+                force=args.force)
+    print(f"# wrote {path}")
+    if violations:
+        print("\nGATE VIOLATIONS:", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

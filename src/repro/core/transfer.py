@@ -53,6 +53,7 @@ from repro.core.integrity import (
     merge_all,
     verify,
 )
+from repro.core.backoff import Backoff
 from repro.core.journal import ChunkJournal, JournalRecord
 from repro.obs import metrics as obsmetrics
 from repro.obs.trace import NULL as NULL_TRACER
@@ -855,7 +856,9 @@ class ChunkedTransfer:
                                     lane=f"mover{mover}", offset=chunk.offset,
                                     index=chunk.index)
                     raise
-                time.sleep(self.outage_backoff_s * min(outages, 8))
+                Backoff(self.outage_backoff_s, mode="linear",
+                        lane=f"{self.task}:mover{mover}:{chunk.index}",
+                        ).sleep(outages)
                 # the rejected op plus its backoff is fault recovery, not
                 # congestion — same exclusion rule as the tuner's rate signal
                 self.tracer.add("outage_wait", "stall", t_att,

@@ -30,12 +30,14 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
+import threading
 from typing import Any, Sequence
 
 from repro.cas import ChunkIndex
 from repro.core.integrity import combine_at_offsets, fingerprint_bytes, verify
-from repro.fabric.topology import RoutePlanner, Topology
+from repro.fabric.topology import NoRouteError, RoutePlanner, Topology
+from repro.obs.clock import mono_s
+from repro.service import events as ev
 from repro.service import task as tk
 from repro.service.service import TransferService
 from repro.service.task import TaskStatus, TransferItem
@@ -178,6 +180,11 @@ class CampaignReport:
     # content (per-replica chunk index) and were satisfied without a task
     edges_deduped: int = 0
     dedup_wire_bytes_saved: int = 0
+    # resilience plane: orphaned subtrees re-parented onto surviving replicas
+    # after an edge task failed (the effective edge set diverges from the
+    # planned tree; verification still chains every replica to the origin)
+    failovers: int = 0
+    failover_events: list[dict] = dataclasses.field(default_factory=list)
     error: str | None = None
 
     @property
@@ -319,6 +326,41 @@ class CampaignRunner:
             except Exception:
                 pass
 
+    def _replan_edge(
+        self,
+        tree: DistributionTree,
+        edge: tuple[str, str],
+        nbytes: int,
+        *,
+        custody: set[str],
+        banned_links: set[tuple[str, str]],
+        occupied: set[str],
+    ):
+        """Re-parent the orphaned subtree below ``edge[1]`` onto a replica.
+
+        The failed link is banned (bans accumulate across failovers, so the
+        same link is never retried and the re-plan loop terminates); the new
+        route may start at ANY custody-holding relay (a surviving replica is
+        as good a parent as the origin) but may not pass through nodes that
+        already hold or are already promised custody, nor through endpoints
+        without staging directories. Returns the re-planned route or raises
+        NoRouteError.
+        """
+        u, v = edge
+        banned_links.add((u, v))
+        sources = [
+            n for n in custody
+            if (n == tree.source or self.topo.endpoint(n).relay)
+            and n in self.dirs
+        ]
+        no_dir = {n for n in self.topo.endpoints if n not in self.dirs}
+        banned_nodes = (occupied | no_dir) - set(sources) - {v}
+        return self.planner.shortest_from_set(
+            sources, v, nbytes,
+            banned_links=frozenset(banned_links),
+            banned_nodes=frozenset(banned_nodes),
+        )
+
     def replicate(
         self,
         relpath: str,
@@ -330,18 +372,30 @@ class CampaignRunner:
         chunk_bytes: int | None = None,
         tree: DistributionTree | None = None,
         timeout: float | None = 300.0,
+        failover: str | None = None,
     ) -> CampaignReport:
         """Replicate ``<dir(source)>/<relpath>`` to every destination.
 
         Synchronous: drives the schedule to a terminal state. Submission is
         event-driven — an edge's task is submitted the moment its parent
-        edge SUCCEEDED, so a fast subtree never waits for a slow sibling. A
-        failed (or timed-out, which is canceled) edge task fails the
-        campaign: its downstream edges are never submitted, while unrelated
-        subtrees still finish their in-flight tasks. ``timeout`` is
-        per-edge-task.
+        edge SUCCEEDED, so a fast subtree never waits for a slow sibling;
+        the wait itself is event-driven too (the service event stream wakes
+        the scheduler — no status polling). ``timeout`` is per-edge-task.
+
+        ``failover="auto"`` re-parents instead of failing: when an edge task
+        fails (or times out and is canceled), the orphaned subtree is grafted
+        onto a surviving replica via a fresh route that bans the failed link,
+        and the replacement hops run as ordinary edge tasks. Bans accumulate,
+        so a genuinely partitioned destination still fails the campaign
+        (NoRouteError) after every alternative is exhausted. ``failover=None``
+        defers to ``ServiceConfig.failover``; ``"off"`` pins the tree — a
+        failed edge fails the campaign and its downstream edges are never
+        submitted, while unrelated subtrees still finish in flight.
         """
-        t0 = time.perf_counter()
+        t0 = mono_s()
+        fo = failover if failover is not None else self.service.config.failover
+        if fo not in ("off", "auto"):
+            raise ValueError(f"failover must be 'off' or 'auto', got {fo!r}")
         src_path = self._path(source, relpath)
         nbytes = os.path.getsize(src_path)
         if tree is None:
@@ -351,90 +405,193 @@ class CampaignRunner:
         edge_tasks: dict[tuple[str, str], str] = {}
         statuses: dict[tuple[str, str], TaskStatus] = {}
         dedup_digests: dict[tuple[str, str], str] = {}
+        final_edges = list(tree.edges)       # effective set; failover splices
         ready = [e for e in tree.edges if e[0] == source]
         blocked = [e for e in tree.edges if e[0] != source]
         inflight: dict[tuple[str, str], tuple[str, float | None]] = {}
+        custody: set[str] = {source}
+        banned_links: set[tuple[str, str]] = set()
+        failover_events: list[dict] = []
         failed: str | None = None
-        while ready or inflight:
-            for u, v in ready:
-                # replica-aware dedup: probe v's chunk index before paying
-                # for the wire — a full hit grants custody immediately and
-                # unlocks the subtree below v in the same scheduling pass
-                digest_hex = self._dedup_edge(u, v, relpath, nbytes, chunk_bytes)
-                if digest_hex is not None:
-                    dedup_digests[(u, v)] = digest_hex
-                    unlocked = [e for e in blocked if e[0] == v]
-                    blocked = [e for e in blocked if e[0] != v]
-                    ready.extend(unlocked)
-                    continue
-                item = TransferItem(
-                    self._path(u, relpath), self._path(v, relpath), nbytes)
-                [tid] = self.service.submit(
-                    [item], tenant=tenant, chunk_bytes=chunk_bytes,
-                    label=f"{label}/{u}->{v}", batch=False,
-                )
-                edge_tasks[(u, v)] = tid
-                deadline = None if timeout is None else time.monotonic() + timeout
-                inflight[(u, v)] = (tid, deadline)
-            ready = []
-            time.sleep(0.005)
-            for edge, (tid, deadline) in list(inflight.items()):
-                st = self.service.status(tid)
-                if st.state in tk.TERMINAL:
-                    inflight.pop(edge)
-                    statuses[edge] = st
-                    if st.state == tk.SUCCEEDED:
-                        self._index_landed(edge[1], relpath, st)
-                        unlocked = [e for e in blocked if e[0] == edge[1]]
-                        blocked = [e for e in blocked if e[0] != edge[1]]
-                        ready.extend(unlocked)
-                    elif failed is None:
-                        failed = (
-                            f"edge {edge[0]}->{edge[1]} task {tid} "
-                            f"{st.state}: {st.error}"
-                        )
-                elif deadline is not None and time.monotonic() > deadline:
-                    # don't leave a hung task writing into the staging dirs
-                    # after the campaign has been reported FAILED
-                    inflight.pop(edge)
-                    self.service.cancel(tid)
+
+        # the scheduler sleeps on this and the event stream wakes it: any
+        # terminal task event may be one of ours. The subscription is live
+        # BEFORE the first submit, so a fast task cannot finish unseen.
+        wake = threading.Event()
+        _TERMINAL_KINDS = (ev.SUCCEEDED, ev.FAILED, ev.CANCELED)
+        unsubscribe = self.service.subscribe(
+            lambda e: wake.set() if e.kind in _TERMINAL_KINDS else None)
+
+        def fail_edge(edge: tuple[str, str], tid: str, reason: str) -> None:
+            """Re-parent the orphan (failover=auto) or fail the campaign."""
+            nonlocal failed
+            u, v = edge
+            if fo == "auto":
+                occupied = set(custody)
+                for coll in (ready, blocked, inflight):
+                    occupied.update(e[1] for e in coll)
+                try:
+                    route = self._replan_edge(
+                        tree, edge, nbytes, custody=custody,
+                        banned_links=banned_links, occupied=occupied)
+                except NoRouteError as exc:
+                    if v not in tree.dests:
+                        # the orphan is a pure relay with no surviving route
+                        # to it — nothing is *delivered* there, so drop it
+                        # and re-parent each child subtree directly (they may
+                        # reach their nodes through paths that bypass v)
+                        if edge in final_edges:
+                            final_edges.remove(edge)
+                        children = [e for e in blocked if e[0] == v]
+                        for child in children:
+                            blocked.remove(child)
+                        for child in children:
+                            fail_edge(child, tid,
+                                      f"{reason}; relay {v} unreachable")
+                        return
                     if failed is None:
-                        failed = (
-                            f"edge {edge[0]}->{edge[1]} task {tid} timed out "
-                            f"after {timeout}s (canceled)"
-                        )
-        # ---- merge-law verification chain: child digest == parent digest
+                        failed = (f"edge {u}->{v}: {reason}; no surviving "
+                                  f"re-parent route: {exc}")
+                    return
+                final_edges.remove(edge)
+                final_edges.extend(route.hops)
+                # first replacement hop leaves a custody holder: runs now;
+                # the rest chain behind it through the normal unlock path
+                ready.append(route.hops[0])
+                blocked.extend(route.hops[1:])
+                evd = {
+                    "edge": f"{u}->{v}", "reason": reason,
+                    "new_parent": route.src, "new_path": list(route.nodes),
+                    "banned_links": sorted(f"{a}->{b}" for a, b in banned_links),
+                }
+                failover_events.append(evd)
+                self.service.record_failover(
+                    tid, sick_link=f"{u}->{v}", new_path=list(route.nodes),
+                    resumed_chunks=0, reason=reason)
+            elif failed is None:
+                failed = f"edge {u}->{v} task {tid} {reason}"
+
+        try:
+            while ready or inflight:
+                for u, v in ready:
+                    # replica-aware dedup: probe v's chunk index before
+                    # paying for the wire — a full hit grants custody
+                    # immediately and unlocks the subtree below v in the
+                    # same scheduling pass
+                    digest_hex = self._dedup_edge(u, v, relpath, nbytes,
+                                                  chunk_bytes)
+                    if digest_hex is not None:
+                        dedup_digests[(u, v)] = digest_hex
+                        custody.add(v)
+                        unlocked = [e for e in blocked if e[0] == v]
+                        blocked = [e for e in blocked if e[0] != v]
+                        ready.extend(unlocked)
+                        continue
+                    item = TransferItem(
+                        self._path(u, relpath), self._path(v, relpath), nbytes)
+                    [tid] = self.service.submit(
+                        [item], tenant=tenant, chunk_bytes=chunk_bytes,
+                        label=f"{label}/{u}->{v}", batch=False, failover=fo,
+                    )
+                    edge_tasks[(u, v)] = tid
+                    deadline = None if timeout is None else mono_s() + timeout
+                    inflight[(u, v)] = (tid, deadline)
+                ready = []
+                if not inflight:
+                    continue
+                wake.clear()     # before the scan: a terminal event landing
+                #                  mid-scan re-sets it and the wait falls through
+                for edge, (tid, deadline) in list(inflight.items()):
+                    st = self.service.status(tid)
+                    if st.state in tk.TERMINAL:
+                        inflight.pop(edge)
+                        statuses[edge] = st
+                        if st.state == tk.SUCCEEDED:
+                            custody.add(edge[1])
+                            self._index_landed(edge[1], relpath, st)
+                            unlocked = [e for e in blocked if e[0] == edge[1]]
+                            blocked = [e for e in blocked if e[0] != edge[1]]
+                            ready.extend(unlocked)
+                        elif st.state == tk.FAILED:
+                            fail_edge(edge, tid, f"FAILED: {st.error}")
+                        elif failed is None:
+                            failed = (f"edge {edge[0]}->{edge[1]} task {tid} "
+                                      f"{st.state}: {st.error}")
+                    elif deadline is not None and mono_s() > deadline:
+                        # don't leave a hung task writing into the staging
+                        # dirs after the edge has been given up on
+                        inflight.pop(edge)
+                        self.service.cancel(tid)
+                        try:
+                            # drain before re-parenting: the dying task must
+                            # stop writing into v's staging file before a
+                            # replacement edge starts writing the same file
+                            self.service.wait(tid, timeout=30.0)
+                        except TimeoutError:
+                            pass
+                        fail_edge(edge, tid,
+                                  f"timed out after {timeout}s (canceled)")
+                if ready or not inflight:
+                    continue
+                # sleep until a terminal event or the nearest deadline; the
+                # 0.5 s cap is a lost-wakeup backstop, not a poll interval
+                rem = None
+                for _tid, dl in inflight.values():
+                    if dl is not None:
+                        r = dl - mono_s()
+                        rem = r if rem is None else min(rem, r)
+                wake.wait(0.5 if rem is None else max(0.0, min(rem, 0.5)))
+        finally:
+            unsubscribe()
+
+        # ---- merge-law verification chain: child digest == parent digest.
+        # Failover makes the effective edge list non-topological (replacement
+        # hops append at the tail), so the chain resolves to a fixpoint:
+        # an edge is checked once its parent's digest is known.
+        edge_digest: dict[tuple[str, str], str] = {}
+        for e in final_edges:
+            if e in dedup_digests:
+                edge_digest[e] = dedup_digests[e]
+            else:
+                st = statuses.get(e)
+                if st is not None and st.state == tk.SUCCEEDED and st.item_reports:
+                    edge_digest[e] = st.item_reports[0].digest_hex
         origin_digest = ""
         replica_digests: dict[str, str] = {}
         escapes = 0
         verified = 0
-        for u, v in tree.edges:
-            if (u, v) in dedup_digests:
-                digest = dedup_digests[(u, v)]
-            else:
-                st = statuses.get((u, v))
-                if st is None or st.state != tk.SUCCEEDED or not st.item_reports:
-                    continue
-                digest = st.item_reports[0].digest_hex
-            replica_digests[v] = digest
-            if u == tree.source:
-                if not origin_digest:
-                    origin_digest = digest
-                parent_digest = origin_digest
-            else:
-                parent_digest = replica_digests.get(u, "")
-            if parent_digest and digest == parent_digest:
-                if v in tree.dests:
-                    verified += 1
-            else:
-                escapes += 1
+        pending = [e for e in final_edges if e in edge_digest]
+        progress = True
+        while pending and progress:
+            progress = False
+            for e in list(pending):
+                u, v = e
+                digest = edge_digest[e]
+                if u == tree.source:
+                    if not origin_digest:
+                        origin_digest = digest
+                    parent_digest = origin_digest
+                else:
+                    parent_digest = replica_digests.get(u, "")
+                    if not parent_digest:
+                        continue        # parent unresolved: try next round
+                pending.remove(e)
+                progress = True
+                replica_digests[v] = digest
+                if digest == parent_digest:
+                    if v in tree.dests:
+                        verified += 1
+                else:
+                    escapes += 1
         state = tk.SUCCEEDED
-        if failed or blocked or len(replica_digests) < len(tree.edges):
+        if failed or blocked or pending or verified < len(tree.dests):
             state = tk.FAILED
         if escapes:
             state = tk.FAILED
         edge_states = {e: s.state for e, s in statuses.items()}
         edge_states.update({e: DEDUPED for e in dedup_digests})
+        wire_edges = sum(1 for e in final_edges
+                         if e in statuses and statuses[e].state == tk.SUCCEEDED)
         return CampaignReport(
             tree=tree,
             relpath=relpath,
@@ -446,11 +603,13 @@ class CampaignRunner:
             origin_digest=origin_digest,
             replicas_verified=verified,
             integrity_escapes=escapes,
-            wire_bytes=nbytes * (len(tree.edges) - len(dedup_digests)),
+            wire_bytes=nbytes * wire_edges,
             naive_wire_bytes=nbytes * naive,
             resumed_chunks=sum(s.resumed_chunks for s in statuses.values()),
-            seconds=time.perf_counter() - t0,
+            seconds=mono_s() - t0,
             edges_deduped=len(dedup_digests),
             dedup_wire_bytes_saved=nbytes * len(dedup_digests),
+            failovers=len(failover_events),
+            failover_events=failover_events,
             error=failed,
         )

@@ -31,9 +31,9 @@ import os
 import queue
 import random
 import threading
-import time
 from typing import Callable
 
+from repro.core.backoff import Backoff
 from repro.core.chunker import Chunk, ChunkPlan, plan_chunks
 from repro.core.integrity import (
     Digest,
@@ -55,7 +55,7 @@ from repro.core.transfer import (
 )
 from repro.faults.injectors import FaultCampaign, _seed_int
 from repro.faults.scenarios import Scenario
-from repro.fabric.topology import Route
+from repro.fabric.topology import NoRouteError, Route
 from repro.obs.clock import mono_s
 from repro.obs.trace import NULL as _NULL_TRACER
 from repro.tune.controller import ChunkController
@@ -93,11 +93,16 @@ class RelayReport:
     hops: list[HopReport]
     seconds: float
     file_digest: Digest          # merge-law combine of the final hop's custody
+    # -- resilience: route failovers this incarnation performed
+    retired_hops: list[HopReport] = dataclasses.field(default_factory=list)
+    failovers: int = 0
+    re_moved_journaled: int = 0  # invariant: stays 0 (custody handoff works)
+    failover_events: list[dict] = dataclasses.field(default_factory=list)
 
     @property
     def wire_bytes(self) -> int:
         """Custody bytes moved across all hops by THIS incarnation."""
-        return sum(h.moved_bytes for h in self.hops)
+        return sum(h.moved_bytes for h in self.hops + self.retired_hops)
 
     @property
     def resumed_chunks(self) -> int:
@@ -105,11 +110,11 @@ class RelayReport:
 
     @property
     def mover_deaths(self) -> int:
-        return sum(h.mover_deaths for h in self.hops)
+        return sum(h.mover_deaths for h in self.hops + self.retired_hops)
 
     @property
     def refetches(self) -> int:
-        return sum(h.refetches for h in self.hops)
+        return sum(h.refetches for h in self.hops + self.retired_hops)
 
 
 # ---------------------------------------------------------------------------
@@ -119,13 +124,15 @@ class _Hop:
     """Mutable per-hop execution state."""
 
     __slots__ = ("idx", "u", "v", "source", "dest", "journal", "ready",
-                 "done", "digests", "report", "workers", "granule", "controller")
+                 "done", "digests", "report", "workers", "granule",
+                 "controller", "dead", "inflight", "upstream")
 
     def __init__(self, idx: int, u: str, v: str, source: ByteSource,
-                 dest: ByteDest, journal: ChunkJournal):
+                 dest: ByteDest, journal: ChunkJournal,
+                 upstream: "_Hop | None" = None):
         self.idx, self.u, self.v = idx, u, v
         self.source, self.dest, self.journal = source, dest, journal
-        self.ready: "queue.Queue[Chunk]" = queue.Queue()
+        self.ready: "queue.Queue[Chunk | None]" = queue.Queue()
         self.done: set[int] = set(journal.records)
         self.digests: dict[int, Digest] = {
             i: rec.digest() for i, rec in journal.records.items()
@@ -134,6 +141,14 @@ class _Hop:
         self.workers = 0
         self.granule = 0                  # 0 = whole-chunk moves (untuned)
         self.controller: ChunkController | None = None
+        self.dead = False                 # retired by a route failover
+        self.inflight: set[int] = set()   # chunks claimed by a mover
+        self.upstream = upstream          # None = reads the origin source
+
+
+class _FailoverSignal(Exception):
+    """Internal: a hop wants the remaining route re-planned around its
+    sick link (never escapes ``RelayTransfer``)."""
 
 
 class RelayTransfer:
@@ -171,9 +186,20 @@ class RelayTransfer:
         tune_hops: "set[int] | frozenset[int] | None" = None,  # None = all hops
         tracer=None,                       # obs.trace.Tracer; spans carry hop=
         task: str = "",
+        backoff_seed: int = 0,             # de-correlates mover retry instants
+        planner=None,                      # fabric.topology.RoutePlanner
+        failover: bool = False,            # re-plan around dead links mid-flight
+        failover_outage_threshold: int = 8,
+        health=None,                       # resil.health.HealthTracker (shared)
+        link_source_wrapper: Callable[[str, str, ByteSource], ByteSource] | None = None,
+        link_dest_wrapper: Callable[[str, str, ByteDest], ByteDest] | None = None,
     ):
         if movers < 1:
             raise ValueError("movers must be >= 1")
+        if failover and planner is None:
+            raise ValueError("failover requires a planner to re-plan routes")
+        if failover_outage_threshold < 1:
+            raise ValueError("failover_outage_threshold must be >= 1")
         self.tracer = tracer if tracer is not None else _NULL_TRACER
         self.task = task or f"relay:{'-'.join(route.nodes)}"
         self.route = route
@@ -194,24 +220,48 @@ class RelayTransfer:
         self.outage_backoff_s = outage_backoff_s
         self.max_mover_deaths = max_mover_deaths
         self.retry_backoff_s = retry_backoff_s
+        self.backoff_seed = backoff_seed
         self._fault_injector = fault_injector
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._errors: list[BaseException] = []
         self._mover_deaths = 0
+        self._threads: list[threading.Thread] = []
+
+        # ---- resilience plane state
+        self.planner = planner
+        self.failover = failover
+        self.failover_outage_threshold = failover_outage_threshold
+        self.health = health
+        self.failover_events: list[dict] = []
+        self._fo_gen = 0
+        self._re_moved = 0
+        self._retired: list[_Hop] = []
+        self._banned_links: set[tuple[str, str]] = set()
+        self._banned_nodes: set[str] = set()
+        # per-NODE custody: every chunk journaled as landed at that node.
+        # Failover pre-populates replacement hops from this map, which is
+        # what makes "re-move zero journaled chunks" structural rather than
+        # best-effort.
+        self._custody: dict[str, dict[int, Digest]] = {}
 
         # ---- per-hop endpoints: origin -> staging files -> final dest
-        wrap_s = source_wrapper or (lambda _h, s: s)
-        wrap_d = dest_wrapper or (lambda _h, d: d)
+        self._wrap_s = source_wrapper or (lambda _h, s: s)
+        self._wrap_d = dest_wrapper or (lambda _h, d: d)
+        self._link_wrap_s = link_source_wrapper
+        self._link_wrap_d = link_dest_wrapper
+        self._orig_source = source
+        self._orig_dest = dest
+        self._origin_node = route.nodes[0]
+        self._final_node = route.nodes[-1]
         self.hops: list[_Hop] = []
-        n_hops = route.n_hops
         for h, (u, v) in enumerate(route.hops):
-            hop_src: ByteSource = source if h == 0 else FileSource(self._stage(u))
-            hop_dst: ByteDest = dest if h == n_hops - 1 else FileDest(
-                self._stage(v), self.total_bytes)
-            journal = ChunkJournal(self._journal_path(h, u, v))
-            self.hops.append(_Hop(
-                h, u, v, wrap_s(h, hop_src), wrap_d(h, hop_dst), journal))
+            self.hops.append(self._make_hop(
+                h, u, v, self._journal_path(h, u, v),
+                self.hops[h - 1] if h > 0 else None))
+        for hop in self.hops:
+            if hop.digests:
+                self._custody.setdefault(hop.v, {}).update(hop.digests)
         # per-hop granule controllers: each hop adapts its own I/O unit
         # within [granule_min, chunk_bytes] — custody chunks are untouched,
         # so a degraded middle hop shrinks its own granule without forcing
@@ -256,35 +306,83 @@ class RelayTransfer:
             for h, (u, v) in enumerate(route.hops)
         ]
 
+    # -- hop construction (shared by __init__ and failover re-plans) ---------
+    def _make_hop(self, idx: int, u: str, v: str, journal_path: str,
+                  upstream: "_Hop | None") -> _Hop:
+        hop_src: ByteSource = (
+            self._orig_source if u == self._origin_node
+            else FileSource(self._stage(u)))
+        hop_dst: ByteDest = (
+            self._orig_dest if v == self._final_node
+            else FileDest(self._stage(v), self.total_bytes))
+        # node-keyed wrappers survive failover (a fault lives at an endpoint
+        # or link, not at a position in whatever route happens to cross it)
+        if self._link_wrap_s is not None:
+            hop_src = self._link_wrap_s(u, v, hop_src)
+        else:
+            hop_src = self._wrap_s(idx, hop_src)
+        if self._link_wrap_d is not None:
+            hop_dst = self._link_wrap_d(u, v, hop_dst)
+        else:
+            hop_dst = self._wrap_d(idx, hop_dst)
+        return _Hop(idx, u, v, hop_src, hop_dst,
+                    ChunkJournal(journal_path), upstream)
+
+    # -- worker wakeups (lock held by caller) --------------------------------
+    def _wake_hop_locked(self, hop: _Hop) -> None:
+        for _ in range(max(1, hop.workers)):
+            hop.ready.put(None)
+
+    def _wake_all_locked(self) -> None:
+        for hop in self.hops:
+            self._wake_hop_locked(hop)
+
+    def _fail_locked(self, e: BaseException) -> None:
+        self._errors.append(e)
+        self._wake_all_locked()
+        self._cond.notify_all()
+
+    def _spawn_workers_locked(self, hop: _Hop) -> None:
+        for m in range(self.movers):
+            th = threading.Thread(
+                target=self._worker, args=(hop,),
+                name=f"relay-h{hop.idx}g{self._fo_gen}-m{m}", daemon=True,
+            )
+            hop.workers += 1
+            th.start()
+            self._threads.append(th)
+
     # -- execution -----------------------------------------------------------
     def run(self) -> RelayReport:
         t0 = mono_s()
         n = self.plan.n_chunks
         try:
             # seed each hop's ready queue: upstream custody present, own absent
-            for hop in self.hops:
-                upstream = (
-                    set(range(n)) if hop.idx == 0 else self.hops[hop.idx - 1].done
-                )
-                for c in self.plan.chunks:
-                    if c.index in upstream and c.index not in hop.done:
-                        hop.ready.put(c)
-
-            threads: list[threading.Thread] = []
-            for hop in self.hops:
-                for m in range(self.movers):
-                    th = threading.Thread(
-                        target=self._worker, args=(hop,),
-                        name=f"relay-h{hop.idx}-m{m}", daemon=True,
+            with self._lock:
+                for hop in self.hops:
+                    upstream = (
+                        set(range(n)) if hop.upstream is None
+                        else hop.upstream.done
                     )
-                    hop.workers += 1
-                    th.start()
-                    threads.append(th)
+                    for c in self.plan.chunks:
+                        if c.index in upstream and c.index not in hop.done:
+                            hop.ready.put(c)
+                for hop in self.hops:
+                    self._spawn_workers_locked(hop)
             with self._cond:
                 while not self._finished_locked() and not self._errors:
                     self._cond.wait(0.05)
-            for th in threads:
-                th.join()
+                self._wake_all_locked()
+            # failover spawns replacement workers mid-run: join until the
+            # thread list is quiescent, not just the initial snapshot
+            while True:
+                with self._lock:
+                    threads = list(self._threads)
+                for th in threads:
+                    th.join()
+                with self._lock:
+                    if len(self._threads) == len(threads):
+                        break
             if self._errors:
                 raise self._errors[0]
             last = self.hops[-1]
@@ -305,9 +403,13 @@ class RelayTransfer:
                 route=self.route, total_bytes=self.total_bytes, n_chunks=n,
                 hops=[h.report for h in self.hops],
                 seconds=mono_s() - t0, file_digest=file_digest,
+                retired_hops=[h.report for h in self._retired],
+                failovers=self._fo_gen,
+                re_moved_journaled=self._re_moved,
+                failover_events=list(self.failover_events),
             )
         finally:
-            for hop in self.hops:
+            for hop in self.hops + self._retired:
                 hop.journal.close()
             # root span covers the relay makespan even on a faulted exit, so
             # post-mortem attribution still sees the full window
@@ -325,38 +427,53 @@ class RelayTransfer:
         try:
             while True:
                 with self._lock:
-                    if self._errors or len(hop.done) >= self.plan.n_chunks:
+                    if (self._errors or hop.dead
+                            or len(hop.done) >= self.plan.n_chunks):
                         return
-                try:
-                    chunk = hop.ready.get(timeout=0.02)
-                except queue.Empty:
-                    continue             # upstream custody may still arrive
+                # blocking get: the queue carries chunks and None sentinels
+                # (error, hop completion, failover retirement) — no spin
+                chunk = hop.ready.get()
+                if chunk is None:
+                    continue             # wakeup: re-check the exit conditions
                 with self._lock:
-                    if chunk.index in hop.done:
+                    if (hop.dead or chunk.index in hop.done
+                            or chunk.index in hop.inflight):
                         continue
+                    hop.inflight.add(chunk.index)
                 try:
                     digest = self._move_chunk(hop, chunk)
+                except _FailoverSignal:
+                    with self._lock:
+                        hop.inflight.discard(chunk.index)
+                    self._failover(hop)
+                    continue             # loop top sees hop.dead and exits
                 except MoverCrash:
                     # the mover dies mid-write; the chunk survives it. The
                     # pool respawns in place (this thread carries on as the
                     # replacement) unless the relay-wide death budget is out.
                     with self._lock:
+                        hop.inflight.discard(chunk.index)
                         self._mover_deaths += 1
                         hop.report.mover_deaths += 1
                         if self._mover_deaths > self.max_mover_deaths:
-                            self._errors.append(RuntimeError(
+                            self._fail_locked(RuntimeError(
                                 f"relay mover-death budget exhausted "
                                 f"({self._mover_deaths} > {self.max_mover_deaths})"
                             ))
-                            self._cond.notify_all()
                             return
                     hop.ready.put(chunk)
                     continue
                 except BaseException as e:  # noqa: BLE001 — fatal for the relay
                     with self._lock:
-                        self._errors.append(e)
-                        self._cond.notify_all()
+                        hop.inflight.discard(chunk.index)
+                        if hop.dead:
+                            continue     # retired mid-move: its faults are moot
+                        self._fail_locked(e)
                     return
+                with self._lock:
+                    if hop.dead:         # retired while the move was in flight
+                        hop.inflight.discard(chunk.index)
+                        continue
                 try:
                     t_j = mono_s()
                     hop.journal.append(JournalRecord(
@@ -369,27 +486,42 @@ class RelayTransfer:
                     )
                 except Exception as e:  # noqa: BLE001 — dead journal: fail fast
                     with self._lock:
-                        self._errors.append(RuntimeError(
+                        self._fail_locked(RuntimeError(
                             f"hop {hop.idx} journal append failed for chunk "
                             f"{chunk.index}: {e}"
                         ))
-                        self._cond.notify_all()
                     return
+                nxt = None
                 with self._lock:
+                    hop.inflight.discard(chunk.index)
+                    if hop.dead:
+                        # retired while journaling: the replacement path was
+                        # seeded without this landing, so it owns the chunk
+                        # now — a dead hop's landing must not count as
+                        # custody (or the replacement's move would read as a
+                        # re-move of a journaled chunk)
+                        continue
+                    if chunk.index in self._custody.get(hop.v, ()):
+                        # a journaled chunk crossed the wire again — the
+                        # custody-handoff invariant the failover gate checks
+                        self._re_moved += 1
+                    self._custody.setdefault(hop.v, {})[chunk.index] = digest
                     hop.done.add(chunk.index)
                     hop.digests[chunk.index] = digest
                     hop.report.moved_chunks += 1
                     hop.report.moved_bytes += chunk.length
-                    finished = self._finished_locked()
-                    if finished:
+                    if len(hop.done) >= self.plan.n_chunks:
+                        self._wake_hop_locked(hop)
+                    if self._finished_locked():
                         self._cond.notify_all()
-                # hand custody downstream (store-and-forward pipelining)
-                if hop.idx + 1 < len(self.hops):
-                    nxt = self.hops[hop.idx + 1]
-                    with self._lock:
-                        fresh = chunk.index not in nxt.done
-                    if fresh:
-                        nxt.ready.put(chunk)
+                    # hand custody downstream (store-and-forward pipelining);
+                    # the CURRENT next hop — failover may have replaced it
+                    if hop.idx + 1 < len(self.hops):
+                        cand = self.hops[hop.idx + 1]
+                        if chunk.index not in cand.done:
+                            nxt = cand
+                if nxt is not None:
+                    nxt.ready.put(chunk)
         finally:
             with self._cond:
                 hop.workers -= 1
@@ -425,8 +557,8 @@ class RelayTransfer:
                         raise IOError(
                             f"short read at {chunk.offset}: {len(data)}/{chunk.length}")
                     digest = fingerprint_bytes(data)
-                    if hop.idx > 0:
-                        upstream = self.hops[hop.idx - 1].digests.get(chunk.index)
+                    if hop.upstream is not None:
+                        upstream = hop.upstream.digests.get(chunk.index)
                         if upstream is not None and not verify(upstream, digest):
                             raise IntegrityError(
                                 f"hop {hop.idx} staging read of chunk {chunk.index} "
@@ -470,8 +602,10 @@ class RelayTransfer:
                                     raise
                                 with self._lock:
                                     hop.report.retries += 1
-                                time.sleep(self.retry_backoff_s
-                                           * (2 ** min(sub_generic - 1, 6)))
+                                Backoff(self.retry_backoff_s,
+                                        seed=self.backoff_seed,
+                                        lane=f"{lane}:g{pos}",
+                                        ).sleep(sub_generic)
                         hop.dest.write(pos, data)
                         if self.integrity:
                             # batched digest path: the granule and its
@@ -501,8 +635,8 @@ class RelayTransfer:
                         parts.append(d)
                         pos += take
                     digest = merge_all(parts)
-                    if hop.idx > 0:
-                        upstream = self.hops[hop.idx - 1].digests.get(chunk.index)
+                    if hop.upstream is not None:
+                        upstream = hop.upstream.digests.get(chunk.index)
                         if upstream is not None and not verify(upstream, digest):
                             raise IntegrityError(
                                 f"hop {hop.idx} staging read of chunk {chunk.index} "
@@ -521,6 +655,7 @@ class RelayTransfer:
                     self._observe_hop(
                         hop, chunk, signal_s + (now - t_att),
                         attempts, refetches)
+                self._note_health(hop, ok=True)
                 return digest
             except MoverCrash:
                 raise
@@ -539,13 +674,22 @@ class RelayTransfer:
                 outages += 1
                 with self._lock:
                     hop.report.outage_retries += 1
+                self._note_health(hop, ok=False)
+                if self._should_failover(hop, outages):
+                    self.tracer.add(
+                        "outage_wait", "stall", t_att, mono_s(), task=self.task,
+                        lane=lane, offset=chunk.offset, hop=hop.idx, kind="outage",
+                    )
+                    raise _FailoverSignal()
                 if outages > self.outage_retries:
                     self.tracer.add(
                         "outage_wait", "stall", t_att, mono_s(), task=self.task,
                         lane=lane, offset=chunk.offset, hop=hop.idx, kind="outage",
                     )
                     raise
-                time.sleep(self.outage_backoff_s * min(outages, 8))
+                Backoff(self.outage_backoff_s, mode="linear",
+                        seed=self.backoff_seed,
+                        lane=f"{lane}:c{chunk.index}").sleep(outages)
                 # stall span covers the rejected attempt AND the backoff wait
                 self.tracer.add(
                     "outage_wait", "stall", t_att, mono_s(), task=self.task,
@@ -562,8 +706,122 @@ class RelayTransfer:
                     raise
                 with self._lock:
                     hop.report.retries += 1
-                time.sleep(self.retry_backoff_s * (2 ** (generic - 1)))
+                Backoff(self.retry_backoff_s, seed=self.backoff_seed,
+                        lane=f"{lane}:c{chunk.index}").sleep(generic)
 
+
+    # -- resilience plane ----------------------------------------------------
+    def _note_health(self, hop: _Hop, ok: bool) -> None:
+        """Feed the shared tracker: a hop verdict scores its link AND the
+        endpoint it was writing toward."""
+        if self.health is None:
+            return
+        self.health.record(f"link:{hop.u}->{hop.v}", ok)
+        self.health.record(f"ep:{hop.v}", ok)
+
+    def _should_failover(self, hop: _Hop, outages: int) -> bool:
+        if not self.failover or self.planner is None or hop.dead:
+            return False
+        if outages >= self.failover_outage_threshold:
+            return True
+        h = self.health
+        return h is not None and (
+            not h.healthy(f"ep:{hop.v}")
+            or not h.healthy(f"link:{hop.u}->{hop.v}"))
+
+    def _failover(self, sick: _Hop) -> None:
+        """Re-plan the remaining path around the sick hop's link and hand
+        custody forward.
+
+        The sick link's tail node ``u`` is the last healthy custody holder
+        on the dead segment, so it becomes the new source; every replacement
+        hop is pre-populated with the chunks its own node already journaled
+        (including the final destination's), so a failover re-moves ZERO
+        journaled chunks — only custody that died with the banned node
+        crosses a wire again. The live upstream pipeline keeps feeding ``u``
+        untouched; upstream nodes are excluded from the re-plan so the new
+        path cannot loop back through it.
+        """
+        t0 = mono_s()
+        with self._lock:
+            if sick.dead or self._errors:
+                return                       # someone already handled it
+            if len(sick.done) >= self.plan.n_chunks:
+                return                       # raced with its own completion
+            gen = self._fo_gen = self._fo_gen + 1
+            u, v = sick.u, sick.v
+            self._banned_links.add((u, v))
+            if v != self._final_node:
+                self._banned_nodes.add(v)
+            base = sick.idx
+            plan_banned_nodes = set(self._banned_nodes)
+            for h in self.hops[:base]:       # no looping back through the
+                plan_banned_nodes.add(h.u)   # live upstream pipeline
+                plan_banned_nodes.add(h.v)
+            plan_banned_nodes.discard(u)
+            try:
+                route = self.planner.shortest_from_set(
+                    [u], self._final_node, self.total_bytes,
+                    banned_links=frozenset(self._banned_links),
+                    banned_nodes=frozenset(plan_banned_nodes),
+                )
+            except NoRouteError as e:
+                self._fail_locked(RuntimeError(
+                    f"failover {gen}: no surviving route {u} -> "
+                    f"{self._final_node} (banned links "
+                    f"{sorted(self._banned_links)}, nodes "
+                    f"{sorted(self._banned_nodes)}): {e}"))
+                return
+            # retire the dead tail: the sick hop and everything past it
+            for hop in self.hops[base:]:
+                hop.dead = True
+                self._retired.append(hop)
+                self._wake_hop_locked(hop)
+            new_hops: list[_Hop] = []
+            for j, (a, b) in enumerate(route.hops):
+                jp = os.path.join(
+                    self.workdir,
+                    f"fo{gen:02d}-hop{base + j:02d}-{a}--{b}.journal")
+                upstream = (new_hops[-1] if new_hops
+                            else (self.hops[base - 1] if base > 0 else None))
+                hop = self._make_hop(base + j, a, b, jp, upstream)
+                # custody handoff: chunks already journaled at this node
+                # survived the failure — restore them, never re-move them
+                for idx, digest in self._custody.get(b, {}).items():
+                    if idx in hop.done:
+                        continue
+                    c = self.plan.chunks[idx]
+                    hop.journal.append(JournalRecord(
+                        idx, c.offset, c.length, digest.hexdigest()))
+                    hop.done.add(idx)
+                    hop.digests[idx] = digest
+                    hop.report.resumed_chunks += 1
+                new_hops.append(hop)
+            self.hops = self.hops[:base] + new_hops
+            # seed replacement hops with upstream custody they still miss,
+            # then staff them — the relay carries on without a restart
+            for hop in new_hops:
+                upstream_done = (
+                    set(range(self.plan.n_chunks)) if hop.upstream is None
+                    else hop.upstream.done)
+                for c in self.plan.chunks:
+                    if c.index in upstream_done and c.index not in hop.done:
+                        hop.ready.put(c)
+                self._spawn_workers_locked(hop)
+            self.failover_events.append({
+                "gen": gen,
+                "sick_link": (u, v),
+                "banned_nodes": sorted(self._banned_nodes),
+                "new_path": list(route.nodes),
+                "resumed_chunks": sum(
+                    h.report.resumed_chunks for h in new_hops),
+            })
+            self._cond.notify_all()
+        self.tracer.add(
+            "failover", "failover", t0, mono_s(), task=self.task,
+            lane=f"fo{gen}", hop=sick.idx, sick=f"{u}->{v}",
+            path="-".join(route.nodes),
+        )
 
     def _observe_hop(self, hop: _Hop, chunk: Chunk, attempt_seconds: float,
                      attempts: int, refetches: int) -> None:
@@ -629,6 +887,14 @@ def realize_hop_campaigns(
         inner = list(range(1, n_hops)) or [n_hops - 1]
         count = min(scenario.degrade_hops, len(inner))
         victims["degrade"] = tuple(sorted(rng.sample(inner, count)))
+    # resilience-plane faults pick one seeded victim hop each (drawn after
+    # the legacy victims so old scenarios keep their exact realisations)
+    if scenario.down_at_frac is not None:
+        victims["down"] = rng.randrange(n_hops)
+    if scenario.link_flaps > 0:
+        victims["flap"] = rng.randrange(n_hops)
+    if scenario.brownout_events > 0:
+        victims["brownout"] = rng.randrange(n_hops)
 
     campaigns: dict[int, FaultCampaign] = {}
     for h in range(n_hops):
@@ -647,6 +913,15 @@ def realize_hop_campaigns(
                 outage_at_frac=scenario.link_outage_at_frac,
                 outage_ops=scenario.link_outage_ops,
             )
+        if victims.get("down") == h:
+            per_hop = per_hop.replace(down_at_frac=scenario.down_at_frac,
+                                      down_ops=scenario.down_ops)
+        if victims.get("flap") == h:
+            per_hop = per_hop.replace(link_flaps=scenario.link_flaps,
+                                      flap_ops=scenario.flap_ops)
+        if victims.get("brownout") == h:
+            per_hop = per_hop.replace(
+                brownout_events=scenario.brownout_events)
         if h in victims.get("degrade", ()):
             # a degraded DTN stalls every write (bounded by the chunk count)
             per_hop = per_hop.replace(stall_movers=1 << 16, stall_s=0.001)

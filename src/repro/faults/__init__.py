@@ -23,6 +23,7 @@ from repro.faults.injectors import (
     FaultyDest,
     FaultySource,
     corrupt_index_backing,
+    corrupt_landed_regions,
     tear_journal_tail,
 )
 from repro.faults.scenarios import (
@@ -38,5 +39,6 @@ from repro.faults.scenarios import (
 __all__ = [
     "CLEAN", "FABRIC_MATRIX", "FULL_MATRIX", "FaultCampaign", "FaultStats",
     "FaultyDest", "FaultySource", "PAPER_BYTES_PER_ERROR", "SCENARIOS",
-    "Scenario", "corrupt_index_backing", "parse_scenario", "tear_journal_tail",
+    "Scenario", "corrupt_index_backing", "corrupt_landed_regions",
+    "parse_scenario", "tear_journal_tail",
 ]

@@ -53,11 +53,14 @@ class FaultStats:
                                      # cost exactly one read-back catch + re-fetch)
     corrupted_bytes: int = 0
     mover_kills: int = 0
-    outage_rejections: int = 0
+    outage_rejections: int = 0       # window rejections (outage/down/flap)
+    brownout_rejections: int = 0     # single-op brownout rejections
     stalls: int = 0
     torn_tail_bytes: int = 0
     stale_index_corruptions: int = 0  # chunk-index entries whose backing
                                       # bytes were corrupted under them
+    landed_bitrot_flips: int = 0      # post-landing bit flips in verified
+                                      # destination regions (scrub territory)
 
 
 class FaultCampaign:
@@ -119,33 +122,63 @@ class FaultCampaign:
                 self._item_base[i] = base
                 base += int(nb)
 
+        # brownout marks: seeded byte positions whose covering write is
+        # rejected once (keyed by position, like the corruption plan, so the
+        # realisation is deterministic regardless of mover interleaving)
+        self._brownout: set[int] = set()
+        if scenario.brownout_events > 0 and self.total_bytes > 0:
+            want = min(scenario.brownout_events, self.total_bytes)
+            while len(self._brownout) < want:
+                self._brownout.add(self._rng.randrange(self.total_bytes))
+
         self._written = 0            # stream position: bytes successfully written
         kills = scenario.kill_movers
         if movers is not None:
             kills = min(kills, movers)
         self._kills_left = kills
         self._kill_at = int(scenario.kill_at_frac * self.total_bytes)
-        self._outage_at = (
-            None if scenario.outage_at_frac is None
-            else int(scenario.outage_at_frac * self.total_bytes)
-        )
+        # outage windows, generalised: (arm-at-bytes, rejected-ops) pairs.
+        # The classic single window, the hard endpoint-death window, and the
+        # evenly-spread flap windows all share one arming mechanism.
+        self._windows: list[tuple[int, int]] = []
+        if scenario.outage_at_frac is not None:
+            self._windows.append((int(scenario.outage_at_frac * self.total_bytes),
+                                  scenario.outage_ops))
+        if scenario.down_at_frac is not None:
+            self._windows.append((int(scenario.down_at_frac * self.total_bytes),
+                                  scenario.down_ops))
+        for i in range(scenario.link_flaps):
+            frac = (i + 1) / (scenario.link_flaps + 1)
+            self._windows.append((int(frac * self.total_bytes),
+                                  scenario.flap_ops))
+        self._windows.sort()
         self._outage_ops_left = 0
-        self._outage_armed = self._outage_at is not None
         self._stalls_left = scenario.stall_movers
 
     # ------------------------------------------------------------------
     # per-op fault decisions (all under the campaign lock)
     # ------------------------------------------------------------------
     def _check_outage(self) -> None:
-        if self._outage_armed and self._written >= self._outage_at:
-            self._outage_armed = False
-            self._outage_ops_left = self.scenario.outage_ops
+        while self._windows and self._written >= self._windows[0][0]:
+            self._outage_ops_left += self._windows.pop(0)[1]
         if self._outage_ops_left > 0:
             self._outage_ops_left -= 1
             self.stats.outage_rejections += 1
             raise EndpointOutage(
                 f"endpoint outage window: {self._outage_ops_left} rejections left"
             )
+
+    def _check_brownout(self, offset: int, length: int) -> None:
+        """Reject the write covering an unconsumed brownout mark (one-shot:
+        the retry of the same write finds its mark consumed and succeeds)."""
+        if not self._brownout:
+            return
+        lo, hi = offset, offset + length
+        for p in self._brownout:
+            if lo <= p < hi:
+                self._brownout.discard(p)
+                self.stats.brownout_rejections += 1
+                raise EndpointOutage(f"brownout: op covering byte {p} refused")
 
     def _maybe_kill(self) -> bool:
         if self._kills_left > 0 and self._written >= self._kill_at:
@@ -225,6 +258,7 @@ class FaultyDest:
         c = self._c
         with c._lock:
             c._check_outage()
+            c._check_brownout(self._base + offset, len(data))
             kill = c._maybe_kill()
             stall = 0.0 if kill else c._maybe_stall()
             if not kill:
@@ -311,4 +345,45 @@ def corrupt_index_backing(index, *, count: int, seed: int = 0,
             fh.write(bytes([byte[0] ^ mask]))
         if stats is not None:
             stats.stale_index_corruptions += 1
+    return victims
+
+
+# ---------------------------------------------------------------------------
+# landed bit-rot
+# ---------------------------------------------------------------------------
+def corrupt_landed_regions(regions, *, count: int, seed: int = 0,
+                           stats: FaultStats | None = None) -> list:
+    """Flip one bit inside each of ``count`` seeded victim LANDED regions —
+    the decay storage inflicts after a transfer already read-back verified,
+    journaled, and reported success (the Petascale DTN finding: corruption
+    discovered *after* "successful" transfers).
+
+    ``regions`` is an iterable of ``(path, offset, length)`` triples (e.g.
+    built from a SUCCEEDED task's item-report chunks). Victims and flip
+    positions are drawn deterministically through SHA-256, mirroring
+    ``corrupt_index_backing``. Returns the victim triples. The scrub daemon's
+    contract under this fault: every flipped region must be detected against
+    its journal digest and either repaired from a verified replica or
+    quarantined — never trusted again silently.
+    """
+    regions = sorted(
+        (str(p), int(o), int(ln)) for p, o, ln in regions
+        if int(ln) > 0 and os.path.exists(str(p))
+    )
+    if not regions or count <= 0:
+        return []
+    rng = random.Random(_seed_int(seed, "bitrot_landed", len(regions)))
+    victims = rng.sample(regions, min(count, len(regions)))
+    for path, offset, length in victims:
+        flip_at = offset + rng.randrange(length)
+        mask = 1 << rng.randrange(8)
+        with open(path, "r+b") as fh:
+            fh.seek(flip_at)
+            byte = fh.read(1)
+            if not byte:
+                continue
+            fh.seek(flip_at)
+            fh.write(bytes([byte[0] ^ mask]))
+        if stats is not None:
+            stats.landed_bitrot_flips += 1
     return victims

@@ -73,6 +73,27 @@ class Scenario:
     # quarantines the entry (the 0-escape invariant must survive a lying
     # index).
     stale_index: int = 0
+    # --- resilience-plane faults (health breakers, failover, scrub) --------
+    # hard endpoint death: at ``down_at_frac`` progress the endpoint rejects
+    # the next ``down_ops`` operations — a window long enough to exhaust any
+    # reasonable per-hop outage patience (failover territory) yet finite, so
+    # a single-pipe transfer with no alternate route still waits it out.
+    down_at_frac: float | None = None
+    down_ops: int = 120
+    # link flap: ``link_flaps`` short outage windows of ``flap_ops`` rejected
+    # operations each, spread evenly across transfer progress — the
+    # intermittent link that trips EWMA breakers without ever being hard down.
+    link_flaps: int = 0
+    flap_ops: int = 12
+    # brownout: ``brownout_events`` seeded single-op rejections keyed to byte
+    # positions in [0, total_bytes) — an endpoint that intermittently refuses
+    # work rather than dying (each rejected op heals on its retry).
+    brownout_events: int = 0
+    # landed bit-rot: flip one bit in each of this many landed (verified,
+    # journaled) destination regions AFTER the transfer succeeded — the
+    # post-landing decay the scrub daemon exists to catch (injected by
+    # ``corrupt_landed_regions``; no in-flight effect).
+    bitrot_landed: int = 0
 
     def __post_init__(self):
         if self.bytes_per_error is not None and self.bytes_per_error <= 0:
@@ -85,6 +106,16 @@ class Scenario:
             raise ValueError("link_outage_at_frac must be in [0, 1]")
         if not (0.0 < self.degrade_factor <= 1.0):
             raise ValueError("degrade_factor must be in (0, 1]")
+        if self.down_at_frac is not None and not (0.0 <= self.down_at_frac <= 1.0):
+            raise ValueError("down_at_frac must be in [0, 1]")
+        if self.down_ops <= 0:
+            raise ValueError("down_ops must be > 0")
+        if self.link_flaps < 0 or self.flap_ops <= 0:
+            raise ValueError("link_flaps must be >= 0 and flap_ops > 0")
+        if self.brownout_events < 0:
+            raise ValueError("brownout_events must be >= 0")
+        if self.bitrot_landed < 0:
+            raise ValueError("bitrot_landed must be >= 0")
 
     # -- composition --------------------------------------------------------
     def __add__(self, other: "Scenario") -> "Scenario":
@@ -124,6 +155,8 @@ class Scenario:
             and not self.torn_journal
             and self.link_outage_at_frac is None and self.degrade_hops == 0
             and self.stale_index == 0
+            and self.down_at_frac is None and self.link_flaps == 0
+            and self.brownout_events == 0 and self.bitrot_landed == 0
         )
 
 
@@ -149,6 +182,13 @@ SCENARIOS: dict[str, Scenario] = {
     "degrade_hop": Scenario(name="degrade_hop", degrade_hops=1),
     # content-plane fault: the chunk index promises bytes it no longer has
     "stale_index": Scenario(name="stale_index", stale_index=2),
+    # resilience-plane faults: a hard endpoint death window, a flapping
+    # link, an intermittently-refusing endpoint, and post-landing bit-rot
+    "endpoint_down_at_50pct": Scenario(name="endpoint_down_at_50pct",
+                                       down_at_frac=0.5),
+    "link_flap": Scenario(name="link_flap", link_flaps=3),
+    "brownout": Scenario(name="brownout", brownout_events=24),
+    "bitrot_landed": Scenario(name="bitrot_landed", bitrot_landed=3),
 }
 
 
@@ -178,6 +218,10 @@ FULL_MATRIX: tuple[str, ...] = (
     "torn_journal_tail",
     "corrupt_1_per_TiB+torn_journal_tail",
     "stale_index",
+    "endpoint_down_at_50pct",
+    "link_flap",
+    "brownout",
+    "bitrot_landed",
 )
 
 

@@ -44,6 +44,16 @@ Content-addressed store (``transferd cas <cmd>``, the dedup chunk index):
 
         ... transferd cas gc --index /tmp/transferd/state/cas/index.log
 
+Resilience plane (``transferd scrub``, the landed-data repair daemon):
+
+  * ``scrub`` — one budgeted scrub pass over a service root: re-verify landed
+    regions against their journal digests, repair bit-rot from replicas via
+    the chunk index, quarantine regions with no surviving donor (the cursor
+    resumes where the budget ran out, so cron-style invocations round-robin
+    the whole fleet):
+
+        ... transferd scrub --root /tmp/transferd/state --budget-mb 256
+
 Fabric modes (``transferd fabric <cmd>``, the multi-endpoint WAN layer):
 
   * ``fabric plan``      — k-shortest routes between two endpoints:
@@ -481,6 +491,41 @@ def cas_main(argv) -> None:
     args.fn(args)
 
 
+def scrub_main(argv) -> None:
+    ap = argparse.ArgumentParser(
+        prog="transferd scrub",
+        description="re-verify landed regions against their journal digests "
+                    "and repair bit-rot from replicas via the chunk index")
+    ap.add_argument("--root", required=True, help="service state directory")
+    ap.add_argument("--task", default=None,
+                    help="scrub one task id (default: every SUCCEEDED task)")
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="max MiB re-read this pass (the cursor resumes "
+                         "where the budget ran out)")
+    ap.add_argument("--no-repair", action="store_true",
+                    help="detect and quarantine only, never rewrite")
+    args = ap.parse_args(argv)
+    from repro.service import TransferService
+
+    svc = TransferService(args.root)
+    try:
+        budget = (None if args.budget_mb is None
+                  else int(args.budget_mb * 1024 * 1024))
+        rep = svc.scrub(args.task, budget_bytes=budget,
+                        repair=not args.no_repair)
+    finally:
+        svc.close()
+    print(f"scanned    {rep.scanned} regions / {rep.scanned_bytes} bytes "
+          f"({rep.clean} clean, {rep.remaining} past budget)")
+    print(f"rot        {rep.rot_detected} detected, {rep.repaired} repaired, "
+          f"{rep.quarantined} quarantined")
+    for t in rep.quarantines:
+        print(f"QUARANTINE {t.task_id} item {t.item} chunk {t.chunk} "
+              f"@ {t.path}+{t.offset}")
+    if rep.quarantined:
+        sys.exit(1)
+
+
 def fabric_main(argv) -> None:
     ap = argparse.ArgumentParser(prog="transferd fabric",
                                  description="multi-endpoint WAN fabric tools")
@@ -528,6 +573,9 @@ def main(argv=None):
         return None
     if argv and argv[0] == "cas":
         cas_main(argv[1:])
+        return None
+    if argv and argv[0] == "scrub":
+        scrub_main(argv[1:])
         return None
     if argv and argv[0] == "top":
         top_main(argv[1:])

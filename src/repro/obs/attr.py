@@ -41,10 +41,12 @@ from typing import Dict, Iterable, List, Optional
 from .trace import Span
 
 #: classification priority, highest first (idle = nothing active)
-PRIORITY = ("stall", "cksum_wait", "wire", "cksum", "journal", "dedup", "queue")
+PRIORITY = ("failover", "stall", "cksum_wait", "wire", "cksum", "journal",
+            "dedup", "queue")
 #: report buckets: cksum_wait folds into cksum ("checksum-bound" either way)
 _FOLD = {"cksum_wait": "cksum"}
-PHASES = ("stall", "cksum", "wire", "journal", "dedup", "queue", "idle")
+PHASES = ("failover", "stall", "cksum", "wire", "journal", "dedup", "queue",
+          "idle")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -45,7 +45,7 @@ from .clock import Clock
 
 # the closed category vocabulary (attr.py folds over these)
 CATEGORIES = ("plan", "queue", "wire", "cksum", "cksum_wait", "journal",
-              "dedup", "stall", "task")
+              "dedup", "stall", "failover", "task")
 
 
 @dataclasses.dataclass(frozen=True)

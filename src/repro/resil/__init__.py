@@ -1,0 +1,28 @@
+"""Resilience plane: endpoint/link health, circuit breakers, scrub/repair.
+
+``health`` turns the engine/relay retry taxonomy into per-target state a
+planner can act on *before* a transfer burns its whole outage budget against
+a dead endpoint; ``scrub`` extends integrity past the landing — the paper's
+lesson that verification must cover data at rest, not just data in flight.
+"""
+from repro.resil.health import (
+    CLOSED,
+    HALF_OPEN,
+    OPEN,
+    BreakerConfig,
+    CircuitBreaker,
+    HealthTracker,
+)
+from repro.resil.scrub import Scrubber, ScrubReport, ScrubTarget
+
+__all__ = [
+    "CLOSED",
+    "HALF_OPEN",
+    "OPEN",
+    "BreakerConfig",
+    "CircuitBreaker",
+    "HealthTracker",
+    "Scrubber",
+    "ScrubReport",
+    "ScrubTarget",
+]

@@ -47,6 +47,12 @@ TUNE = "TUNE"
 # instead of wire moves. Payload: item, chunks (deduped count), bytes_saved,
 # demoted (stale hits demoted back to wire moves).
 DEDUP = "DEDUP"
+# resilience plane: a route-aware layer re-planned this task's path around a
+# sick endpoint/link. Payload: sick_link, new_path, resumed_chunks.
+FAILOVER = "FAILOVER"
+# resilience plane: a scrub pass touched this task's landed regions.
+# Payload: scanned, rot_detected, repaired, quarantined.
+SCRUB = "SCRUB"
 REALLOC = "REALLOC"
 PAUSED = "PAUSED"
 RESUMED = "RESUMED"

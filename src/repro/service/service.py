@@ -37,6 +37,7 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from repro.core.backoff import Backoff
 from repro.core.chunker import (
     Chunk,
     ChunkPlan,
@@ -61,6 +62,7 @@ from repro.core.dataplane import (
     stream_chunk,
 )
 from repro.cas import ChunkIndex
+from repro.resil.scrub import Scrubber, ScrubReport, ScrubTarget
 from repro.core.journal import ChunkJournal, JournalRecord
 from repro.core.scheduler import TransferRequest
 from repro.obs import metrics as obsmetrics
@@ -150,6 +152,8 @@ class ServiceConfig:
     stripe_min_bytes: int = 4 * MiB  # smallest stripe worth its overhead
     # ---- content plane (dedup against the endpoint chunk index) ----------
     dedup: str = "off"               # default per-task policy: off | on
+    # ---- resilience plane (route failover by route-aware layers) ---------
+    failover: str = "off"            # default per-task policy: off | auto
 
     def __post_init__(self):
         if self.max_concurrent_tasks > self.mover_budget:
@@ -176,6 +180,9 @@ class ServiceConfig:
                 f"stripe_min_bytes must be >= 1, got {self.stripe_min_bytes}")
         if self.dedup not in ("off", "on"):
             raise ValueError(f"dedup must be 'off' or 'on', got {self.dedup!r}")
+        if self.failover not in ("off", "auto"):
+            raise ValueError(
+                f"failover must be 'off' or 'auto', got {self.failover!r}")
 
 
 class _Task:
@@ -187,6 +194,8 @@ class _Task:
         self.seq = seq
         self.tuning = tuning                     # effective policy (spec or default)
         self.dedup = dedup                       # content-plane policy (spec or default)
+        self.failovers = 0                       # route re-plans recorded
+        self.scrub_repairs = 0                   # scrub heals on landed regions
         self.chunks_deduped = 0
         self.wire_bytes_saved = 0
         self.dedup_demoted = 0
@@ -326,6 +335,12 @@ class TransferService:
             "fault-excluded per-chunk mover time", ("task",), scale=1e-4)
         self._m_active = obsmetrics.REGISTRY.gauge(
             "service_active_tasks", "tasks in ACTIVE state", ("tenant",))
+        self._m_failovers = obsmetrics.REGISTRY.counter(
+            "service_failovers_total",
+            "route failovers recorded against tasks", ("tenant", "task"))
+        self._m_scrub_repairs = obsmetrics.REGISTRY.counter(
+            "service_scrub_repairs_total",
+            "landed regions the scrubber healed", ("tenant", "task"))
         self.batcher = Batcher(self.config.batch)
         self.engine = AllocationEngine(
             policy=self.config.policy,
@@ -371,6 +386,10 @@ class TransferService:
         self.cas: ChunkIndex | None = None
         if self.config.dedup == "on":
             self.cas_index()
+        # resilience plane: one scrubber per service so its round-robin
+        # cursor persists across scrub() calls (budgeted cadence resumes
+        # where the last pass stopped instead of re-reading the same head)
+        self._scrubber: Scrubber | None = None
 
         self._recover()
         self._scheduler = threading.Thread(
@@ -454,6 +473,7 @@ class TransferService:
         batch: bool = True,
         tuning: str | None = None,
         dedup: str | None = None,
+        failover: str | None = None,
     ) -> list[str]:
         """Submit a transfer request; returns the task ids it was split into.
 
@@ -465,7 +485,10 @@ class TransferService:
         to ``ServiceConfig.tuning``). ``dedup="on"`` probes the endpoint's
         chunk index before moving — chunks the destination already holds are
         satisfied by a local copy instead of wire moves ("off" bypasses the
-        index; None defers to ``ServiceConfig.dedup``).
+        index; None defers to ``ServiceConfig.dedup``). ``failover="auto"``
+        lets route-aware layers (relay, campaigns) re-plan this task's path
+        around dead endpoints mid-flight ("off" pins the route; None defers
+        to ``ServiceConfig.failover``).
         """
         norm = [self._norm_item(it) for it in items]
         if not norm:
@@ -474,8 +497,12 @@ class TransferService:
             raise ValueError(f"tuning must be 'static', 'auto' or None, got {tuning!r}")
         if dedup not in (None, "off", "on"):
             raise ValueError(f"dedup must be 'off', 'on' or None, got {dedup!r}")
+        if failover not in (None, "off", "auto"):
+            raise ValueError(
+                f"failover must be 'off', 'auto' or None, got {failover!r}")
         groups = self.batcher.split(norm) if batch else [list(norm)]
-        return [self._submit_group(g, tenant, label, chunk_bytes, tuning, dedup)
+        return [self._submit_group(g, tenant, label, chunk_bytes, tuning,
+                                   dedup, failover)
                 for g in groups]
 
     def submit_buffers(
@@ -524,7 +551,7 @@ class TransferService:
     def _submit_group(
         self, items: Sequence[TransferItem], tenant: str, label: str,
         chunk_bytes: int | None, tuning: str | None = None,
-        dedup: str | None = None,
+        dedup: str | None = None, failover: str | None = None,
     ) -> str:
         with self._cond:
             if self._stop_evt.is_set():
@@ -540,6 +567,7 @@ class TransferService:
                 chunk_bytes=chunk_bytes or self.config.chunk_bytes,
                 tuning=tuning or self.config.tuning,
                 dedup=dedup or self.config.dedup,
+                failover=failover or self.config.failover,
             )
             rec = self.store.append_submit(spec)
             t = _Task(spec, rec.seq, self.config.chunk_bytes,
@@ -563,6 +591,7 @@ class TransferService:
         batch: bool = True,
         tuning: str | None = None,
         dedup: str | None = None,
+        failover: str | None = None,
     ) -> list[list[str]]:
         """Bulk submission: one lock hold and one fsync per store shard for
         the whole batch, instead of a lock round-trip and fsync per task.
@@ -572,6 +601,9 @@ class TransferService:
             raise ValueError(f"tuning must be 'static', 'auto' or None, got {tuning!r}")
         if dedup not in (None, "off", "on"):
             raise ValueError(f"dedup must be 'off', 'on' or None, got {dedup!r}")
+        if failover not in (None, "off", "auto"):
+            raise ValueError(
+                f"failover must be 'off', 'auto' or None, got {failover!r}")
         groups_per_req: list[list[list[TransferItem]]] = []
         for items in requests:
             norm = [self._norm_item(it) for it in items]
@@ -595,6 +627,7 @@ class TransferService:
                         chunk_bytes=chunk_bytes or self.config.chunk_bytes,
                         tuning=tuning or self.config.tuning,
                         dedup=dedup or self.config.dedup,
+                        failover=failover or self.config.failover,
                     ))
                     ids.append(task_id)
                     emits.append((task_id, len(group),
@@ -730,6 +763,132 @@ class TransferService:
     def events_from(self, start_seq: int, *, limit: int | None = None):
         """Read historical events at seq >= start_seq (cursor polling)."""
         return self.events.read_from(start_seq, limit=limit)
+
+    # ------------------------------------------------------------------
+    # client API: resilience plane
+    # ------------------------------------------------------------------
+    def record_failover(self, task_id: str, **payload: Any) -> None:
+        """Record a mid-flight route failover executed on this task's behalf.
+
+        Route-aware layers (relay transfers, campaign re-parenting) own the
+        actual re-plan; the service is the system of record — it bumps the
+        task's failover counter, the per-tenant metric, and emits a FAILOVER
+        event carrying the re-plan detail (sick_link, new_path,
+        resumed_chunks).
+        """
+        with self._lock:
+            t = self._require(task_id)
+            t.failovers += 1
+            tenant = t.spec.tenant
+        self._m_failovers.inc(1, tenant=tenant, task=task_id)
+        self.events.emit(ev.FAILOVER, task_id, tenant, **payload)
+
+    def scrub_targets(self, task_id: str | None = None) -> list[ScrubTarget]:
+        """Landed regions eligible for scrubbing, journal digests attached.
+
+        Every chunk of every SUCCEEDED task (or just ``task_id``) becomes one
+        target: the destination file region plus the digest custody recorded
+        at landing time. The scrubber re-fingerprints each region against
+        that digest — bit-rot after landing is the only way they diverge.
+        """
+        with self._lock:
+            if task_id is not None:
+                tasks = [self._require(task_id)]
+            else:
+                tasks = [self._tasks[tid] for tid in self._order]
+            out: list[ScrubTarget] = []
+            for t in tasks:
+                if t.state != tk.SUCCEEDED:
+                    continue
+                if t.item_reports:
+                    for i, rep in enumerate(t.item_reports):
+                        for c in rep.chunks:
+                            if not c.get("digest") or not int(c["length"]):
+                                continue
+                            out.append(ScrubTarget(
+                                path=os.path.abspath(rep.dst),
+                                offset=int(c["offset"]), length=int(c["length"]),
+                                digest_hex=c["digest"], task_id=t.spec.task_id,
+                                item=i, chunk=int(c.get("index", 0))))
+                    continue
+                # restart-replayed task: the in-memory reports are gone but
+                # the chunk journal on disk still holds every landed region's
+                # digest custody — scrub works across service restarts
+                try:
+                    journal = self.store.open_journal(t.spec.task_id)
+                except OSError:
+                    continue
+                try:
+                    recs = dict(journal.records)
+                finally:
+                    journal.close()
+                for g in sorted(recs):
+                    r = recs[g]
+                    if r.status != "done" or not r.length or not r.digest_hex:
+                        continue
+                    i = t.item_of_gidx(g)
+                    if i >= len(t.spec.items):
+                        continue
+                    out.append(ScrubTarget(
+                        path=os.path.abspath(t.spec.items[i].dst),
+                        offset=int(r.offset), length=int(r.length),
+                        digest_hex=r.digest_hex, task_id=t.spec.task_id,
+                        item=i, chunk=int(r.chunk_index)))
+        return out
+
+    def scrub(self, task_id: str | None = None, *,
+              budget_bytes: int | None = None,
+              repair: bool = True) -> ScrubReport:
+        """One scrub pass over landed regions (all SUCCEEDED tasks or one).
+
+        Re-verifies each region against its journal digest, repairs rot from
+        replicas via the CAS index when a verified donor exists, quarantines
+        (and emits a FAULT event) when none does. ``budget_bytes`` caps the
+        bytes read this pass; the cursor persists so the next call resumes
+        where this one stopped.
+        """
+        targets = self.scrub_targets(task_id)
+        # open the chunk index even when dedup never did: the index log on
+        # disk is the donor map for repairs, whatever populated it
+        index = self.cas_index()
+        with self._lock:
+            if self._scrubber is None:
+                self._scrubber = Scrubber(index=index)
+            scrubber = self._scrubber
+            scrubber.index = index
+            scrubber.budget_bytes = budget_bytes
+        report = scrubber.scrub(targets, repair=repair)
+        # charge outcomes back to their tasks, then tell the event stream
+        touched: dict[str, dict[str, int]] = {}
+        for tgt in report.repairs:
+            with self._lock:
+                t = self._tasks.get(tgt.task_id)
+                if t is not None:
+                    t.scrub_repairs += 1
+                    self._m_scrub_repairs.inc(
+                        1, tenant=t.spec.tenant, task=tgt.task_id)
+            d = touched.setdefault(tgt.task_id, collections.Counter())
+            d["repaired"] += 1
+        for tgt in report.quarantines:
+            d = touched.setdefault(tgt.task_id, collections.Counter())
+            d["quarantined"] += 1
+            with self._lock:
+                t = self._tasks.get(tgt.task_id)
+                tenant = t.spec.tenant if t is not None else "default"
+            self.events.emit(
+                ev.FAULT, tgt.task_id, tenant, fault="bitrot",
+                item=tgt.item, chunk=tgt.chunk, offset=tgt.offset,
+                fatal=False, quarantined=True)
+        for tid, counts in touched.items():
+            with self._lock:
+                t = self._tasks.get(tid)
+                tenant = t.spec.tenant if t is not None else "default"
+            self.events.emit(
+                ev.SCRUB, tid, tenant, scanned=report.scanned,
+                rot_detected=counts["repaired"] + counts["quarantined"],
+                repaired=counts["repaired"],
+                quarantined=counts["quarantined"])
+        return report
 
     # ------------------------------------------------------------------
     # shutdown
@@ -1602,7 +1761,9 @@ class TransferService:
                     t.outages += 1
                 over = outages > self.config.outage_retries
                 if not over:
-                    time.sleep(self.config.retry_backoff_s * min(outages, 8))
+                    Backoff(self.config.retry_backoff_s, mode="linear",
+                            lane=f"{t.spec.task_id}:{lane}:c{chunk.index}",
+                            ).sleep(outages)
                 # the rejected op plus its backoff is fault recovery, not
                 # congestion (the tuner's fault-exclusion rule)
                 sid = self.tracer.add(
@@ -1638,7 +1799,9 @@ class TransferService:
                     item=item_idx, chunk=chunk.index, attempt=attempts,
                     span=sid,
                 )
-                time.sleep(self.config.retry_backoff_s * (2 ** (generic - 1)))
+                Backoff(self.config.retry_backoff_s,
+                        lane=f"{t.spec.task_id}:{lane}:c{chunk.index}",
+                        ).sleep(generic)
 
     def _source(self, t: _Task, item_idx: int) -> ByteSource:
         with t.lock:
@@ -1835,6 +1998,8 @@ class TransferService:
                 refetches=t.refetches,
                 outages=t.outages,
                 mover_deaths=t.mover_deaths,
+                failovers=t.failovers,
+                scrub_repairs=t.scrub_repairs,
                 fault=t.fault,
                 tuning=t.tuning,
                 replans=t.replans,

@@ -97,6 +97,10 @@ class TaskSpec:
     # per-task dedup policy: "on" probes the destination endpoint's chunk
     # index before moving, "off" bypasses it; None defers to the service
     dedup: str | None = None
+    # per-task failover policy: "auto" lets route-aware layers (relay,
+    # campaigns) re-plan around dead endpoints mid-flight, "off" pins the
+    # original route; None defers to the service default
+    failover: str | None = None
     submitted_s: float = dataclasses.field(default_factory=wall_s)
 
     @property
@@ -120,6 +124,7 @@ class TaskSpec:
             "chunk_bytes": self.chunk_bytes,
             "tuning": self.tuning,
             "dedup": self.dedup,
+            "failover": self.failover,
             "submitted_s": self.submitted_s,
         }
 
@@ -133,6 +138,7 @@ class TaskSpec:
             chunk_bytes=obj.get("chunk_bytes"),
             tuning=obj.get("tuning"),
             dedup=obj.get("dedup"),
+            failover=obj.get("failover"),
             submitted_s=float(obj.get("submitted_s", 0.0)),
         )
 
@@ -216,6 +222,9 @@ class TaskStatus:
     refetches: int = 0        # corrupt chunk landings healed by source re-read
     outages: int = 0          # ops rejected by endpoint outage windows
     mover_deaths: int = 0     # movers lost mid-chunk (chunks re-queued)
+    # resilience-plane accounting:
+    failovers: int = 0        # route re-plans recorded against this task
+    scrub_repairs: int = 0    # landed regions the scrubber healed from donors
     fault: FaultReport | None = None    # set when state == FAILED
     # autotuner accounting (tuned-vs-static visibility):
     tuning: str = "static"    # effective policy this task ran under

@@ -1,0 +1,97 @@
+"""core.backoff — the shared seeded-jitter retry policy.
+
+The regression this file guards: the repo's three retry loops used to
+compute identical unjittered delays, so every mover hit by one outage
+re-arrived in lockstep (a thundering herd). The shared ``Backoff`` must
+keep delays deterministic per (seed, lane, attempt) while de-correlating
+lanes from each other.
+"""
+import math
+
+import pytest
+
+from repro.core.backoff import Backoff, jitter_u
+
+
+def test_jitter_u_deterministic_and_bounded():
+    for parts in [(0, "m0", "exp", 1), (7, "hop02", "linear", 3), ("x",)]:
+        u = jitter_u(*parts)
+        assert 0.0 <= u < 1.0
+        assert u == jitter_u(*parts)
+
+
+def test_jitter_u_keyed_not_positional_blur():
+    # ("ab", "c") and ("a", "bc") must not collide — parts are delimited
+    assert jitter_u("ab", "c") != jitter_u("a", "bc")
+    assert jitter_u(1, 2) != jitter_u(12)
+
+
+def test_exp_shape_and_cap():
+    b = Backoff(0.01, mode="exp", factor=2.0, cap_exp=3, jitter=0.0)
+    assert b.delay(1) == pytest.approx(0.01)
+    assert b.delay(2) == pytest.approx(0.02)
+    assert b.delay(4) == pytest.approx(0.08)
+    # exponent capped: attempts past the cap all cost the same
+    assert b.delay(5) == b.delay(9) == pytest.approx(0.08)
+
+
+def test_linear_shape_and_cap():
+    b = Backoff(0.01, mode="linear", cap_mult=4, jitter=0.0)
+    assert b.delay(1) == pytest.approx(0.01)
+    assert b.delay(3) == pytest.approx(0.03)
+    assert b.delay(4) == b.delay(20) == pytest.approx(0.04)
+
+
+def test_jitter_only_shortens_never_lengthens():
+    b = Backoff(0.1, mode="exp", jitter=0.5, seed=3, lane="m1")
+    for attempt in range(1, 12):
+        base = 0.1 * 2.0 ** min(attempt - 1, 6)
+        d = b.delay(attempt)
+        assert base * 0.5 <= d <= base
+        assert d == b.delay(attempt)        # replays bit-for-bit
+
+
+def test_lanes_decorrelate_the_herd():
+    """The original bug: N movers hit by one outage all slept the same
+    delay and retried as one storm. Distinct lanes must spread out."""
+    lanes = [Backoff(0.05, mode="linear", seed=9, lane=f"mover-{i}")
+             for i in range(8)]
+    for attempt in (1, 2, 5):
+        delays = {b.delay(attempt) for b in lanes}
+        assert len(delays) == len(lanes), "lanes collided — herd is back"
+
+
+def test_seeds_decorrelate_across_runs():
+    a = Backoff(0.05, seed=1, lane="m0")
+    b = Backoff(0.05, seed=2, lane="m0")
+    assert [a.delay(i) for i in range(1, 6)] != [b.delay(i) for i in range(1, 6)]
+
+
+def test_sleep_returns_and_uses_the_jittered_delay():
+    b = Backoff(0.25, mode="linear", seed=4, lane="hop01")
+    slept = []
+    got = b.sleep(3, sleep=slept.append)
+    assert slept == [got] == [b.delay(3)]
+    assert math.isfinite(got) and got > 0
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        Backoff(0.01, mode="polynomial")
+    with pytest.raises(ValueError):
+        Backoff(0.01, jitter=1.0)
+    with pytest.raises(ValueError):
+        Backoff(0.01).delay(0)
+
+
+def test_retry_loops_share_the_policy():
+    """The three formerly copy-pasted call sites now route through Backoff."""
+    import inspect
+
+    from repro.core import transfer as core_transfer
+    from repro.fabric import relay as fabric_relay
+    from repro.service import service as svc_mod
+
+    for mod in (core_transfer, fabric_relay, svc_mod):
+        src = inspect.getsource(mod)
+        assert "Backoff(" in src, mod.__name__

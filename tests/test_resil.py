@@ -1,0 +1,697 @@
+"""Resilience plane: breakers, mid-flight failover, scrub/repair.
+
+Covers the repro.resil package plus its integrations: the relay's custody
+handoff (a failover never re-moves a journaled chunk and never breaks the
+digest chain — at ANY chunk boundary), the campaign runner's subtree
+re-parenting, the four resilience fault scenarios across seeds, and the
+service's failover/scrub wiring (events, counters, spec round-trips).
+"""
+import os
+import random
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                        # pragma: no cover
+    from _hypofallback import given, settings, strategies as st
+
+from repro.cas import ChunkIndex
+from repro.core import BufferSource, FileDest, plan_chunks
+from repro.core.integrity import fingerprint_bytes
+from repro.core.transfer import BufferDest, ChunkedTransfer, EndpointOutage
+from repro.fabric.campaign import CampaignRunner, build_distribution_tree
+from repro.fabric.relay import RelayTransfer
+from repro.fabric.topology import Endpoint, RoutePlanner, Topology
+from repro.faults import FaultCampaign, corrupt_landed_regions, parse_scenario
+from repro.resil import BreakerConfig, CircuitBreaker, HealthTracker
+from repro.resil.health import CLOSED, HALF_OPEN, OPEN
+from repro.resil.scrub import Scrubber, ScrubTarget
+from repro.service import BatchConfig, ServiceConfig, TransferService
+from repro.service import events as ev
+
+CHUNK = 16 * 1024
+
+
+# ---------------------------------------------------------------------------
+# circuit breakers
+# ---------------------------------------------------------------------------
+def _cfg(**kw):
+    defaults = dict(fail_threshold=3, open_ops=6, probe_ops=2, jitter=0.0)
+    defaults.update(kw)
+    return BreakerConfig(**defaults)
+
+
+def test_breaker_opens_on_consecutive_failures():
+    br = CircuitBreaker("ep:n1", _cfg())
+    for _ in range(2):
+        br.record(False)
+    assert br.state == CLOSED
+    br.record(False)
+    assert br.state == OPEN
+    assert br.transitions[-1].reason == "consecutive_failures"
+
+
+def test_breaker_success_resets_the_streak():
+    br = CircuitBreaker("ep:n1", _cfg())
+    for _ in range(2):
+        br.record(False)
+    br.record(True)
+    br.record(False)
+    br.record(False)
+    assert br.state == CLOSED
+
+
+def test_breaker_ewma_trips_without_a_streak():
+    # alternating failures never build a streak but push the error EWMA up
+    br = CircuitBreaker("ep:n1", _cfg(fail_threshold=50, ewma_alpha=0.5,
+                                      ewma_threshold=0.4, min_samples=6))
+    for i in range(12):
+        br.record(i % 2 == 0)
+        if br.state == OPEN:
+            break
+    assert br.state == OPEN
+    assert br.transitions[-1].reason == "ewma_error_rate"
+
+
+def test_breaker_min_samples_shields_cold_start():
+    br = CircuitBreaker("ep:n1", _cfg(fail_threshold=50, ewma_alpha=1.0,
+                                      ewma_threshold=0.5, min_samples=8))
+    br.record(False)          # EWMA jumps to 1.0 instantly, but samples < 8
+    assert br.state == CLOSED
+
+
+def test_breaker_cooldown_counts_ops_then_half_opens():
+    br = CircuitBreaker("ep:n1", _cfg(open_ops=4))
+    for _ in range(3):
+        br.record(False)
+    assert br.state == OPEN
+    rejected = 0
+    while not br.allow():
+        rejected += 1
+    assert rejected == 3           # 4 cooldown ops: 3 rejections + the admit
+    assert br.state == HALF_OPEN
+
+
+def test_breaker_probes_close_and_reset_escalation():
+    br = CircuitBreaker("ep:n1", _cfg(open_ops=2, probe_ops=2))
+    for _ in range(3):
+        br.record(False)
+    while not br.allow():
+        pass
+    br.record(True)
+    assert br.state == HALF_OPEN
+    br.record(True)
+    assert br.state == CLOSED
+    assert br.reopen_count == 0 and br.ewma == 0.0
+
+
+def test_breaker_probe_failure_reopens_with_doubled_cooldown():
+    br = CircuitBreaker("ep:n1", _cfg(open_ops=4))
+    for _ in range(3):
+        br.record(False)
+    first = br._cooldown_ops if False else None  # noqa: F841  (doc: internal)
+    while not br.allow():
+        pass
+    br.record(False)
+    assert br.state == OPEN
+    assert br.transitions[-1].reason == "probe_failed"
+    # escalation: the second OPEN entry draws a doubled base cooldown
+    r2 = 0
+    while not br.allow():
+        r2 += 1
+    assert r2 >= 4                 # >= open_ops: doubled (jitter disabled)
+
+
+def test_breaker_transitions_deterministic_across_same_seed_runs():
+    script = random.Random(11)
+    outcomes = [script.random() > 0.4 for _ in range(300)]
+    snaps = []
+    for _ in range(2):
+        tr = HealthTracker(seed=5, config=BreakerConfig(
+            fail_threshold=3, open_ops=8, probe_ops=2))
+        rejected = []
+        for i, ok in enumerate(outcomes):
+            t = HealthTracker.link_target("u", "v")
+            if tr.allow(t):
+                tr.record(t, ok)
+            else:
+                rejected.append(i)
+        snaps.append((tr.snapshot(), tuple(rejected)))
+    assert snaps[0] == snaps[1]
+    assert snaps[0][1], "script never tripped the breaker — test is vacuous"
+
+
+def test_breaker_cooldowns_jittered_per_seed():
+    lens = set()
+    for seed in range(6):
+        br = CircuitBreaker("ep:n1", BreakerConfig(
+            fail_threshold=2, open_ops=64, jitter=0.5), seed=seed)
+        br.record(False)
+        br.record(False)
+        n = 0
+        while not br.allow():
+            n += 1
+        lens.add(n)
+    assert len(lens) > 1, "cooldowns identical across seeds — jitter dead"
+
+
+def test_tracker_targets_and_sick_listing():
+    tr = HealthTracker(config=_cfg())
+    ep, ln = HealthTracker.endpoint_target("dtn1"), HealthTracker.link_target("a", "b")
+    assert ep == "ep:dtn1" and ln == "link:a->b"
+    assert tr.healthy(ep) and tr.state(ep) == CLOSED and tr.allow(ep)
+    for _ in range(3):
+        tr.record(ln, False)
+    assert not tr.healthy(ln) and tr.sick_targets() == (ln,)
+    assert tr.healthy(ep)
+    assert tr.error_rate(ln) > 0
+
+
+# ---------------------------------------------------------------------------
+# relay failover: custody handoff at ANY chunk boundary
+# ---------------------------------------------------------------------------
+def _diamond():
+    topo = Topology()
+    for n in ("S", "A", "B", "D"):
+        topo.add_endpoint(Endpoint(n))
+    topo.add_link("S", "A", gbps=100, rtt_ms=5)
+    topo.add_link("A", "D", gbps=100, rtt_ms=5)
+    topo.add_link("S", "B", gbps=50, rtt_ms=30)
+    topo.add_link("B", "D", gbps=50, rtt_ms=30)
+    return topo
+
+
+class _DeadAfter:
+    """ByteDest that hard-fails every write once ``live`` have landed."""
+
+    def __init__(self, inner, live):
+        self._inner, self._left = inner, live
+        self._lock = threading.Lock()
+
+    def write(self, offset, data):
+        with self._lock:
+            if self._left <= 0:
+                raise EndpointOutage("node died")
+            self._left -= 1
+        self._inner.write(offset, data)
+
+    def read_back(self, offset, length):
+        return self._inner.read_back(offset, length)
+
+
+def _run_failover(tmp_path, payload, live_writes, *, tag=""):
+    topo = _diamond()
+    planner = RoutePlanner(topo)
+    route = planner.best_route("S", "D", len(payload))
+    assert "A" in route.nodes                  # the fast path crosses A
+    out = str(tmp_path / f"out{tag}.bin")
+    xfer = RelayTransfer(
+        route, BufferSource(payload), FileDest(out, len(payload)),
+        workdir=str(tmp_path / f"wd{tag}"), chunk_bytes=CHUNK, movers=2,
+        outage_retries=6, outage_backoff_s=0.0005, retry_backoff_s=0.0005,
+        planner=planner, failover=True, failover_outage_threshold=3,
+        health=HealthTracker(seed=1),
+        link_dest_wrapper=lambda u, v, d: _DeadAfter(d, live_writes)
+        if v == "A" else d,
+    )
+    rep = xfer.run()
+    with open(out, "rb") as fh:
+        landed = fh.read()
+    return rep, landed
+
+
+N_CHUNKS = 6
+
+
+@settings(max_examples=8, deadline=None)
+@given(boundary=st.integers(min_value=0, max_value=N_CHUNKS))
+def test_failover_at_any_chunk_boundary_preserves_custody(boundary):
+    """Property: whatever the boundary the victim dies at — before the first
+    chunk, mid-transfer, or after its last — failover re-plans around it,
+    re-moves ZERO journaled chunks, and the landed bytes (hence the digest
+    chain) are exact."""
+    import pathlib
+    import tempfile
+    payload = np.random.default_rng(boundary).integers(
+        0, 256, N_CHUNKS * CHUNK + 37, dtype=np.uint8).tobytes()
+    with tempfile.TemporaryDirectory(prefix="resil-prop-") as td:
+        rep, landed = _run_failover(pathlib.Path(td), payload, boundary,
+                                    tag=f"-{boundary}")
+    assert landed == payload
+    assert rep.re_moved_journaled == 0
+    assert rep.failovers >= 1
+    assert (fingerprint_bytes(landed).hexdigest()
+            == fingerprint_bytes(payload).hexdigest())
+
+
+def test_failover_emits_structured_events_and_retires_hops(tmp_path):
+    payload = np.random.default_rng(0).integers(
+        0, 256, 4 * CHUNK, dtype=np.uint8).tobytes()
+    rep, landed = _run_failover(tmp_path, payload, 2)
+    assert landed == payload
+    assert rep.failovers >= 1 and rep.retired_hops
+    for evt in rep.failover_events:
+        assert evt["sick_link"] and evt["new_path"]
+        assert evt["resumed_chunks"] >= 0
+
+
+def test_failover_off_pins_the_route_and_fails(tmp_path):
+    payload = np.random.default_rng(1).integers(
+        0, 256, 4 * CHUNK, dtype=np.uint8).tobytes()
+    topo = _diamond()
+    planner = RoutePlanner(topo)
+    route = planner.best_route("S", "D", len(payload))
+    with pytest.raises(Exception):
+        RelayTransfer(
+            route, BufferSource(payload),
+            FileDest(str(tmp_path / "out.bin"), len(payload)),
+            workdir=str(tmp_path / "wd"), chunk_bytes=CHUNK, movers=2,
+            outage_retries=4, outage_backoff_s=0.0005,
+            planner=planner, failover=False,
+            link_dest_wrapper=lambda u, v, d: _DeadAfter(d, 1)
+            if v == "A" else d,
+        ).run()
+
+
+# ---------------------------------------------------------------------------
+# the four resilience fault scenarios, across seeds
+# ---------------------------------------------------------------------------
+RESIL_SEEDS = range(20)
+
+
+def _engine_leg(payload, scenario, seed):
+    plan = plan_chunks(len(payload), 4, chunk_bytes=CHUNK,
+                       min_chunk=1, max_chunk=1 << 40)
+    camp = FaultCampaign(scenario, total_bytes=len(payload), seed=seed, movers=4)
+    dst = BufferDest(len(payload))
+    ChunkedTransfer(camp.wrap_source(BufferSource(payload)),
+                    camp.wrap_dest(dst), plan, outage_backoff_s=0.0003).run()
+    return bytes(dst.buf), camp.stats
+
+
+@pytest.fixture(scope="module")
+def small_payload():
+    return np.random.default_rng(42).integers(
+        0, 256, 4 * CHUNK + 11, dtype=np.uint8).tobytes()
+
+
+def test_endpoint_down_window_survived_across_seeds(small_payload):
+    sc = parse_scenario("endpoint_down_at_50pct").replace(down_ops=24)
+    for seed in RESIL_SEEDS:
+        landed, stats = _engine_leg(small_payload, sc, seed)
+        assert landed == small_payload, seed
+        assert stats.outage_rejections >= 24, seed
+
+
+def test_link_flap_windows_survived_across_seeds(small_payload):
+    sc = parse_scenario("link_flap").replace(flap_ops=4)
+    for seed in RESIL_SEEDS:
+        landed, stats = _engine_leg(small_payload, sc, seed)
+        assert landed == small_payload, seed
+        assert stats.outage_rejections >= 3 * 4, seed
+
+
+def test_brownout_rejections_heal_on_retry_across_seeds(small_payload):
+    sc = parse_scenario("brownout").replace(brownout_events=8)
+    for seed in RESIL_SEEDS:
+        landed, stats = _engine_leg(small_payload, sc, seed)
+        assert landed == small_payload, seed
+        assert stats.brownout_rejections == 8, seed
+
+
+def test_bitrot_landed_flips_detected_and_repaired_across_seeds(tmp_path):
+    payload = np.random.default_rng(9).integers(
+        0, 256, 4 * CHUNK, dtype=np.uint8).tobytes()
+    sc = parse_scenario("bitrot_landed")
+    for seed in RESIL_SEEDS:
+        d = tmp_path / f"s{seed}"
+        os.makedirs(d)
+        victim, donor = str(d / "victim.bin"), str(d / "donor.bin")
+        for p in (victim, donor):
+            with open(p, "wb") as fh:
+                fh.write(payload)
+        regions, targets = [], []
+        with ChunkIndex(str(d / "idx.log"), fsync=False) as idx:
+            for off in range(0, len(payload), CHUNK):
+                blob = payload[off:off + CHUNK]
+                hx = fingerprint_bytes(blob).hexdigest()
+                idx.put(hx, len(blob), donor, off)
+                regions.append((victim, off, len(blob)))
+                targets.append(ScrubTarget(path=victim, offset=off,
+                                           length=len(blob), digest_hex=hx))
+            flipped = corrupt_landed_regions(regions, count=sc.bitrot_landed,
+                                             seed=seed)
+            assert len(flipped) == sc.bitrot_landed
+            rep = Scrubber(index=idx).scrub(targets)
+        assert rep.rot_detected == rep.repaired == sc.bitrot_landed, seed
+        with open(victim, "rb") as fh:
+            assert fh.read() == payload, seed
+
+
+def test_corrupt_landed_regions_is_seed_deterministic(tmp_path):
+    p = str(tmp_path / "f.bin")
+    with open(p, "wb") as fh:
+        fh.write(b"\x00" * 8192)
+    regions = [(p, off, 1024) for off in range(0, 8192, 1024)]
+    a = corrupt_landed_regions(regions, count=3, seed=7)
+    with open(p, "rb") as fh:
+        rotted = fh.read()
+    with open(p, "wb") as fh:
+        fh.write(b"\x00" * 8192)
+    b = corrupt_landed_regions(regions, count=3, seed=7)
+    with open(p, "rb") as fh:
+        assert fh.read() == rotted
+    assert a == b and len(a) == 3
+
+
+# ---------------------------------------------------------------------------
+# campaign re-parenting
+# ---------------------------------------------------------------------------
+class _DeadEdgeDest:
+    def __init__(self, inner):
+        self._inner = inner
+
+    def write(self, offset, data):
+        raise OSError("edge link dead")
+
+    def read_back(self, offset, length):
+        return self._inner.read_back(offset, length)
+
+
+def test_campaign_failover_reparents_via_surviving_path(tmp_path):
+    """The planned trunk S->A->B dies on its first edge; the campaign must
+    re-parent B's delivery onto the surviving S->C->B path, verify the
+    digest chain through the new parent, and record the failover."""
+    topo = Topology()
+    for n in ("S", "A", "B", "C"):
+        topo.add_endpoint(Endpoint(n))
+    topo.add_link("S", "A", gbps=100, rtt_ms=5)
+    topo.add_link("A", "B", gbps=100, rtt_ms=5)
+    topo.add_link("S", "C", gbps=50, rtt_ms=30)
+    topo.add_link("C", "B", gbps=50, rtt_ms=30)
+    dirs = {n: str(tmp_path / n) for n in topo.endpoints}
+    for d in dirs.values():
+        os.makedirs(d)
+    payload = np.random.default_rng(2).integers(
+        0, 256, 96 * 1024 + 7, dtype=np.uint8).tobytes()
+    with open(os.path.join(dirs["S"], "f.bin"), "wb") as fh:
+        fh.write(payload)
+
+    labels = {}
+    svc = TransferService(str(tmp_path / "svc"), ServiceConfig(
+        mover_budget=4, max_concurrent_tasks=2, chunk_bytes=32 * 1024,
+        tick_s=0.002, retry_backoff_s=0.001,
+        batch=BatchConfig(direct_bytes=1 << 30, batch_files=64)),
+        dest_wrapper=lambda tid, i, d: _DeadEdgeDest(d)
+        if labels.get(tid, "").endswith("S->A") else d)
+    orig_submit = svc.submit
+
+    def submit(items, **kw):
+        tids = orig_submit(items, **kw)
+        for t in tids:
+            labels[t] = kw.get("label", "")
+        return tids
+
+    svc.submit = submit
+    events = []
+    svc.subscribe(lambda e: events.append(e))
+    try:
+        tree = build_distribution_tree(RoutePlanner(topo), "S", ["B"], len(payload))
+        assert ("S", "A") in tree.edges        # the doomed trunk was planned
+        rep = CampaignRunner(svc, topo, dirs).replicate(
+            "f.bin", "S", ["B"], tree=tree, failover="auto", timeout=60)
+    finally:
+        svc.close()
+    assert rep.state == "SUCCEEDED"
+    assert rep.failovers == 1 and rep.integrity_escapes == 0
+    # the dead trunk's orphan relay A was dropped and B's subtree was
+    # re-parented straight onto the surviving S->C->B path
+    [fo] = rep.failover_events
+    assert fo["edge"] == "A->B" and "unreachable" in fo["reason"]
+    assert fo["new_parent"] == "S" and fo["new_path"] == ["S", "C", "B"]
+    with open(os.path.join(dirs["B"], "f.bin"), "rb") as fh:
+        assert fh.read() == payload
+    assert rep.replica_digests["B"] == rep.origin_digest
+    kinds = [e.kind for e in events]
+    assert ev.FAILOVER in kinds and ev.FAILED in kinds
+
+
+def test_campaign_failover_off_fails_on_dead_edge(tmp_path):
+    topo = Topology()
+    for n in ("S", "A", "B"):
+        topo.add_endpoint(Endpoint(n))
+    topo.add_link("S", "A", gbps=100, rtt_ms=5)
+    topo.add_link("A", "B", gbps=100, rtt_ms=5)
+    dirs = {n: str(tmp_path / n) for n in topo.endpoints}
+    for d in dirs.values():
+        os.makedirs(d)
+    payload = b"x" * (48 * 1024)
+    with open(os.path.join(dirs["S"], "f.bin"), "wb") as fh:
+        fh.write(payload)
+    labels = {}
+    svc = TransferService(str(tmp_path / "svc"), ServiceConfig(
+        mover_budget=4, chunk_bytes=32 * 1024, tick_s=0.002,
+        retry_backoff_s=0.001,
+        batch=BatchConfig(direct_bytes=1 << 30, batch_files=64)),
+        dest_wrapper=lambda tid, i, d: _DeadEdgeDest(d)
+        if labels.get(tid, "").endswith("S->A") else d)
+    orig_submit = svc.submit
+
+    def submit(items, **kw):
+        tids = orig_submit(items, **kw)
+        for t in tids:
+            labels[t] = kw.get("label", "")
+        return tids
+
+    svc.submit = submit
+    try:
+        rep = CampaignRunner(svc, topo, dirs).replicate(
+            "f.bin", "S", ["B"], failover="off", timeout=60)
+    finally:
+        svc.close()
+    assert rep.state == "FAILED" and rep.failovers == 0
+
+
+# ---------------------------------------------------------------------------
+# scrubber
+# ---------------------------------------------------------------------------
+def _landed_file(tmp_path, name, payload):
+    p = str(tmp_path / name)
+    with open(p, "wb") as fh:
+        fh.write(payload)
+    return p
+
+
+def _targets_for(path, payload, chunk=CHUNK):
+    out = []
+    for off in range(0, len(payload), chunk):
+        blob = payload[off:off + chunk]
+        out.append(ScrubTarget(path=path, offset=off, length=len(blob),
+                               digest_hex=fingerprint_bytes(blob).hexdigest()))
+    return out
+
+
+def test_scrub_clean_pass_touches_everything(tmp_path):
+    payload = os.urandom(3 * CHUNK + 5)
+    p = _landed_file(tmp_path, "a.bin", payload)
+    rep = Scrubber().scrub(_targets_for(p, payload))
+    assert rep.scanned == 4 and rep.clean == 4
+    assert rep.rot_detected == rep.repaired == rep.quarantined == 0
+    assert rep.scanned_bytes == len(payload)
+
+
+def test_scrub_quarantines_without_a_donor(tmp_path):
+    payload = os.urandom(2 * CHUNK)
+    p = _landed_file(tmp_path, "a.bin", payload)
+    targets = _targets_for(p, payload)
+    with open(p, "r+b") as fh:
+        fh.seek(100)
+        fh.write(b"\xff")
+    quarantined = []
+    rep = Scrubber(on_quarantine=quarantined.append).scrub(targets)
+    assert rep.rot_detected == 1 and rep.quarantined == 1 and rep.repaired == 0
+    assert quarantined == [targets[0]]
+
+
+def test_scrub_repairs_from_replica_and_skips_self_donor(tmp_path):
+    payload = os.urandom(2 * CHUNK)
+    victim = _landed_file(tmp_path, "v.bin", payload)
+    donor = _landed_file(tmp_path, "d.bin", payload)
+    with ChunkIndex(str(tmp_path / "idx.log"), fsync=False) as idx:
+        for off in range(0, len(payload), CHUNK):
+            hx = fingerprint_bytes(payload[off:off + CHUNK]).hexdigest()
+            # the rotted region itself is indexed too — the scrubber must not
+            # "repair" from the very bytes it just found rotten
+            idx.put(hx, CHUNK, victim, off)
+            idx.put(hx, CHUNK, donor, off)
+        with open(victim, "r+b") as fh:
+            fh.seek(CHUNK + 9)
+            fh.write(b"\x00" if payload[CHUNK + 9] != 0 else b"\x01")
+        rep = Scrubber(index=idx).scrub(_targets_for(victim, payload))
+    assert rep.rot_detected == 1 and rep.repaired == 1 and rep.quarantined == 0
+    with open(victim, "rb") as fh:
+        assert fh.read() == payload
+
+
+def test_scrub_budget_and_cursor_round_robin(tmp_path):
+    payload = os.urandom(4 * CHUNK)
+    p = _landed_file(tmp_path, "a.bin", payload)
+    targets = _targets_for(p, payload)
+    sc = Scrubber(budget_bytes=2 * CHUNK)
+    r1 = sc.scrub(targets)
+    assert r1.scanned == 2 and r1.remaining == 2
+    r2 = sc.scrub(targets)
+    assert r2.scanned == 2 and r2.remaining == 2
+    # two budgeted passes covered all four regions exactly once
+    assert r1.scanned + r2.scanned == len(targets)
+
+
+def test_scrub_missing_file_quarantines(tmp_path):
+    t = ScrubTarget(path=str(tmp_path / "gone.bin"), offset=0, length=16,
+                    digest_hex=fingerprint_bytes(b"x" * 16).hexdigest())
+    rep = Scrubber().scrub([t])
+    assert rep.quarantined == 1
+
+
+# ---------------------------------------------------------------------------
+# service wiring
+# ---------------------------------------------------------------------------
+def test_taskspec_failover_round_trips(tmp_path):
+    svc = TransferService(str(tmp_path / "svc"), ServiceConfig(
+        chunk_bytes=32 * 1024,
+        batch=BatchConfig(direct_bytes=1 << 30, batch_files=64)))
+    try:
+        src = _landed_file(tmp_path, "f.bin", os.urandom(4096))
+        [tid] = svc.submit([(src, src + ".out")], failover="auto", batch=False)
+        svc.wait(tid, timeout=60)
+        st_ = svc.status(tid)
+        assert st_.failovers == 0 and st_.scrub_repairs == 0
+        from repro.service.task import TaskSpec, TransferItem
+        spec = TaskSpec(task_id=tid, tenant="default", label="t",
+                        items=(TransferItem(src, src + ".out", 4096),),
+                        failover="auto")
+        spec2 = TaskSpec.from_json(spec.to_json())
+        assert spec2.failover == "auto"
+        # a restarted service replays specs from its journal — the persisted
+        # policy must survive the round trip on disk too
+        import json
+        assert json.loads(json.dumps(spec.to_json()))["failover"] == "auto"
+    finally:
+        svc.close()
+
+
+def test_record_failover_bumps_status_and_emits(tmp_path):
+    svc = TransferService(str(tmp_path / "svc"), ServiceConfig(
+        chunk_bytes=32 * 1024,
+        batch=BatchConfig(direct_bytes=1 << 30, batch_files=64)))
+    events = []
+    svc.subscribe(lambda e: events.append(e))
+    try:
+        src = _landed_file(tmp_path, "f.bin", os.urandom(4096))
+        [tid] = svc.submit([(src, src + ".out")], batch=False)
+        svc.wait(tid, timeout=60)
+        svc.record_failover(tid, sick_link="a->b", new_path=["a", "c", "b"],
+                            resumed_chunks=3, reason="outage")
+        assert svc.status(tid).failovers == 1
+        [fe] = [e for e in events if e.kind == ev.FAILOVER]
+        assert fe.task_id == tid and fe.payload["sick_link"] == "a->b"
+        with pytest.raises(KeyError):
+            svc.record_failover("no-such-task")
+    finally:
+        svc.close()
+
+
+def test_service_scrub_end_to_end_repairs_replica(tmp_path):
+    """Land the same payload at two replicas (dedup indexes both), rot one,
+    and svc.scrub() must repair it from the other — bumping the task's
+    scrub_repairs counter and emitting SCRUB."""
+    payload = np.random.default_rng(5).integers(
+        0, 256, 96 * 1024, dtype=np.uint8).tobytes()
+    src = _landed_file(tmp_path, "src.bin", payload)
+    svc = TransferService(str(tmp_path / "svc"), ServiceConfig(
+        dedup="on", chunk_bytes=32 * 1024,
+        batch=BatchConfig(direct_bytes=1 << 30, batch_files=64)))
+    events = []
+    svc.subscribe(lambda e: events.append(e))
+    try:
+        [t1] = svc.submit([(src, str(tmp_path / "r1.bin"))], batch=False)
+        svc.wait(t1, timeout=60)
+        [t2] = svc.submit([(src, str(tmp_path / "r2.bin"))], batch=False)
+        svc.wait(t2, timeout=60)
+        targets = svc.scrub_targets()
+        assert len(targets) == 2 * 3           # 3 chunks per replica
+        regions = [(str(tmp_path / "r1.bin"), c.offset, c.length)
+                   for c in targets if c.task_id == t1][:1]
+        corrupt_landed_regions(regions, count=1, seed=3)
+        rep = svc.scrub()
+        assert rep.rot_detected == 1 and rep.repaired == 1
+        assert rep.quarantined == 0
+        assert svc.status(t1).scrub_repairs == 1
+        assert svc.status(t2).scrub_repairs == 0
+        with open(tmp_path / "r1.bin", "rb") as fh:
+            assert fh.read() == payload
+        scrub_events = [e for e in events if e.kind == ev.SCRUB]
+        assert scrub_events and any(e.payload["repaired"] == 1
+                                    for e in scrub_events)
+        # a second pass is clean
+        rep2 = svc.scrub()
+        assert rep2.rot_detected == 0
+    finally:
+        svc.close()
+
+
+def test_service_scrub_survives_restart(tmp_path):
+    """A restarted service has no in-memory item reports — scrub must
+    rebuild its targets from the on-disk chunk journals and still repair
+    from the persisted CAS index."""
+    payload = np.random.default_rng(8).integers(
+        0, 256, 96 * 1024, dtype=np.uint8).tobytes()
+    src = _landed_file(tmp_path, "src.bin", payload)
+    cfg = ServiceConfig(dedup="on", chunk_bytes=32 * 1024,
+                        batch=BatchConfig(direct_bytes=1 << 30, batch_files=64))
+    svc = TransferService(str(tmp_path / "svc"), cfg)
+    try:
+        for dst in ("r1.bin", "r2.bin"):
+            [tid] = svc.submit([(src, str(tmp_path / dst))], batch=False)
+            svc.wait(tid, timeout=60)
+    finally:
+        svc.close()
+    corrupt_landed_regions([(str(tmp_path / "r1.bin"), 0, 32 * 1024)],
+                           count=1, seed=2)
+    svc2 = TransferService(str(tmp_path / "svc"), cfg)
+    try:
+        targets = svc2.scrub_targets()
+        assert len(targets) == 6           # journal-backed, not report-backed
+        rep = svc2.scrub()
+        assert rep.rot_detected == 1 and rep.repaired == 1
+        with open(tmp_path / "r1.bin", "rb") as fh:
+            assert fh.read() == payload
+    finally:
+        svc2.close()
+
+
+def test_service_scrub_quarantine_emits_fault(tmp_path):
+    payload = os.urandom(64 * 1024)
+    src = _landed_file(tmp_path, "src.bin", payload)
+    svc = TransferService(str(tmp_path / "svc"), ServiceConfig(
+        chunk_bytes=32 * 1024,          # dedup off: no donors anywhere
+        batch=BatchConfig(direct_bytes=1 << 30, batch_files=64)))
+    events = []
+    svc.subscribe(lambda e: events.append(e))
+    try:
+        [tid] = svc.submit([(src, str(tmp_path / "r1.bin"))], batch=False)
+        svc.wait(tid, timeout=60)
+        corrupt_landed_regions([(str(tmp_path / "r1.bin"), 0, 32 * 1024)],
+                               count=1, seed=1)
+        rep = svc.scrub()
+        assert rep.rot_detected == 1 and rep.quarantined == 1
+        faults = [e for e in events if e.kind == ev.FAULT]
+        assert any(e.payload.get("quarantined") for e in faults)
+        assert svc.status(tid).scrub_repairs == 0
+    finally:
+        svc.close()
